@@ -1,0 +1,34 @@
+"""Paper Figure 1: TTFT/TPOT vs context length + queuing/prefill breakdown.
+
+Llama2-7B on one L20, 1 req/s, 100 requests, output 512 (the paper's exact
+methodology), vLLM policy — this is the MOTIVATION measurement showing
+queuing delay dominating TTFT beyond ~1k context.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.serving.costmodel import L20
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import fixed_length
+
+CTX = [128, 512, 1024, 2048, 4096, 8192, 16384]
+
+
+def main(n_requests: int = 100) -> None:
+    for ctx in CTX:
+        t0 = time.perf_counter()
+        reqs = fixed_length(n_requests, ctx, 512, rate=1.0, seed=1)
+        m = ServingSimulator(LLAMA2_7B, L20,
+                             SimConfig(policy="vllm")).run(reqs)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig1.ctx{ctx}", us,
+             f"ttft_s={m.mean_ttft:.3f};tpot_ms={m.mean_tpot*1e3:.1f};"
+             f"queuing_s={m.mean_queuing:.3f};prefill_s={m.mean_prefill:.3f};"
+             f"queue_frac={m.mean_queuing/max(m.mean_ttft,1e-9):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Figure 4: LayerKV vs vLLM across context lengths (Llama2-7B,
+1 req/s) — TTFT (top row) and throughput (bottom row)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.serving.costmodel import L20
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import fixed_length
+
+CTX = [512, 1024, 2048, 4096, 8192]
+
+
+def main(n_requests: int = 100) -> None:
+    for ctx in CTX:
+        t0 = time.perf_counter()
+        mv = ServingSimulator(LLAMA2_7B, L20, SimConfig(policy="vllm")).run(
+            fixed_length(n_requests, ctx, 512, rate=1.0, seed=1))
+        ml = ServingSimulator(LLAMA2_7B, L20,
+                              SimConfig(policy="layerkv")).run(
+            fixed_length(n_requests, ctx, 512, rate=1.0, seed=1))
+        us = (time.perf_counter() - t0) * 1e6
+        speedup = mv.mean_ttft / max(ml.mean_ttft, 1e-9)
+        thr_gap = 1.0 - ml.throughput / max(mv.throughput, 1e-9)
+        emit(f"fig4.ctx{ctx}", us,
+             f"vllm_ttft_s={mv.mean_ttft:.3f};lkv_ttft_s={ml.mean_ttft:.3f};"
+             f"ttft_speedup_x={speedup:.2f};"
+             f"vllm_tpot_ms={mv.mean_tpot*1e3:.1f};"
+             f"lkv_tpot_ms={ml.mean_tpot*1e3:.1f};"
+             f"thr_gap_pct={thr_gap*100:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Figure 5: varying degree of (tensor) parallelism, Yi-34B-200K.
+
+Yi-34B: 60L d_model=7168 56H GQA kv=8 d_ff=20480 vocab=64000 (200k ctx)
+[hf:01-ai/Yi-34B-200K] — built here inline since it is the paper's own
+evaluation model, not part of the assigned pool.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.configs.base import ModelConfig
+from repro.serving.costmodel import L20
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import fixed_length
+
+YI_34B = ModelConfig(
+    arch_id="yi-34b-200k", family="dense", n_layers=60, d_model=7168,
+    n_heads=56, n_kv_heads=8, d_ff=20480, vocab_size=64000,
+    pos_emb="rope", max_seq_len=200000,
+    source="hf:01-ai/Yi-34B-200K (paper evaluation model)")
+
+
+def main(n_requests: int = 80) -> None:
+    for dop in [2, 4, 8]:
+        t0 = time.perf_counter()
+        hw = L20.scaled(dop)
+        mk = lambda: fixed_length(n_requests, 2048, 384, rate=1.0, seed=4)
+        mv = ServingSimulator(YI_34B, hw, SimConfig(policy="vllm")).run(mk())
+        ml = ServingSimulator(YI_34B, hw,
+                              SimConfig(policy="layerkv")).run(mk())
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig5.dop{dop}", us,
+             f"vllm_ttft_s={mv.mean_ttft:.3f};lkv_ttft_s={ml.mean_ttft:.3f};"
+             f"ttft_speedup_x={mv.mean_ttft/max(ml.mean_ttft,1e-9):.2f};"
+             f"thr_gap_pct={(1-ml.throughput/max(mv.throughput,1e-9))*100:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Figures 6+7: LayerKV vs vLLM across request arrival rates on the
+ShareGPT-like workload — mean TTFT (Fig.6) and P99 TTFT (Fig.7)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.serving.costmodel import L20
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import sharegpt_like
+
+RATES = [2.0, 4.0, 8.0, 12.0, 16.0]
+
+
+def main(n_requests: int = 300) -> None:
+    for rate in RATES:
+        t0 = time.perf_counter()
+        mv = ServingSimulator(LLAMA2_7B, L20, SimConfig(policy="vllm")).run(
+            sharegpt_like(n_requests, rate=rate, seed=7))
+        ml = ServingSimulator(LLAMA2_7B, L20,
+                              SimConfig(policy="layerkv")).run(
+            sharegpt_like(n_requests, rate=rate, seed=7))
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig6.rate{rate:g}", us,
+             f"vllm_mean_ttft_s={mv.mean_ttft:.3f};"
+             f"lkv_mean_ttft_s={ml.mean_ttft:.3f};"
+             f"mean_speedup_x={mv.mean_ttft/max(ml.mean_ttft,1e-9):.2f};"
+             f"thr_gap_pct={(1-ml.throughput/max(mv.throughput,1e-9))*100:.1f}")
+        emit(f"fig7.rate{rate:g}", us,
+             f"vllm_p99_ttft_s={mv.p99_ttft:.3f};"
+             f"lkv_p99_ttft_s={ml.p99_ttft:.3f};"
+             f"p99_speedup_x={mv.p99_ttft/max(ml.p99_ttft,1e-9):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On this container the interesting output is CORRECTNESS + the HLO cost of
+the jnp reference path (which is what the dry-run compiles); interpret-mode
+wall time is not indicative of TPU performance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    # flash prefill
+    B, S, H, KV, D = 1, 512, 8, 2, 128
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, KV, D), jnp.float32)
+    ref_fn = jax.jit(lambda *a: ref.flash_attention_reference(*a))
+    us_ref = timeit(lambda: ref_fn(q, k, v).block_until_ready())
+    out_p = flash_attention_pallas(q, k, v)
+    err = float(jnp.max(jnp.abs(out_p - ref_fn(q, k, v))))
+    c = jax.jit(lambda *a: ref.mha_reference(*a)).lower(q, k, v).compile()
+    flops = c.cost_analysis().get("flops", 0.0)
+    emit("kernel.flash_prefill", us_ref,
+         f"maxerr_vs_pallas={err:.2e};hlo_flops={flops:.3g};"
+         f"shape=B{B}xS{S}xH{H}xKV{KV}xD{D}")
+
+    # paged decode attention
+    B, H, KV, D, NB, BS, MAXB = 8, 8, 2, 128, 128, 16, 16
+    q1 = jax.random.normal(key, (B, H, D), jnp.float32)
+    pool = jax.random.normal(key, (NB, BS, 2, KV, D), jnp.float32)
+    tab = jax.random.permutation(key, NB)[:B * MAXB].reshape(B, MAXB)
+    tab = tab.astype(jnp.int32)
+    kv_len = jnp.full((B,), BS * MAXB - 3, jnp.int32)
+    pref = jax.jit(lambda *a: ref.paged_attention_reference(*a))
+    us_ref = timeit(lambda: pref(q1, pool, tab, kv_len).block_until_ready())
+    outp = paged_attention_pallas(q1, pool, tab, kv_len)
+    err = float(jnp.max(jnp.abs(outp - pref(q1, pool, tab, kv_len))))
+    emit("kernel.paged_attention", us_ref,
+         f"maxerr_vs_pallas={err:.2e};"
+         f"shape=B{B}xH{H}xKV{KV}xD{D}xBS{BS}xMAXB{MAXB}")
+
+
+if __name__ == "__main__":
+    main()

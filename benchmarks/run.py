@@ -1,0 +1,41 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = harness wall
+time for that experiment; `derived` carries the figure's metrics).
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer requests per experiment")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig1,fig4,fig5,fig6,fig8,kernels")
+    args = ap.parse_args()
+    n = 40 if args.quick else 100
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig1_motivation, fig4_context_sweep,
+                            fig5_parallelism, fig6_fig7_arrival, fig8_slo,
+                            kernels_micro)
+
+    print("name,us_per_call,derived")
+    if not only or "fig1" in only:
+        fig1_motivation.main(n_requests=n)
+    if not only or "fig4" in only:
+        fig4_context_sweep.main(n_requests=n)
+    if not only or "fig5" in only:
+        fig5_parallelism.main(n_requests=max(n - 20, 30))
+    if not only or "fig6" in only:
+        fig6_fig7_arrival.main(n_requests=n + 50 if not args.quick else n)
+    if not only or "fig8" in only:
+        fig8_slo.main(n_requests=n + 50 if not args.quick else n)
+    if not only or "kernels" in only:
+        kernels_micro.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""LayerKV at pod scale: host-offloaded KV cache via memory kinds.
+
+Lowers the chatglm3-6b decode step twice on the production mesh —
+baseline (all KV in HBM) vs LayerKV-style (KV cache placed in
+`pinned_host` memory, streamed layer-by-layer by XLA) — and prints the
+per-device HBM/host split from `memory_analysis()`. This is the compiled-
+scale rendering of the paper's offloading (see DESIGN.md §3).
+
+    PYTHONPATH=src python examples/offload_dryrun.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import input_specs  # noqa: E402
+
+
+def lower_decode(offload: bool):
+    cfg = get_config("chatglm3-6b")
+    mesh = make_production_mesh()
+    fn, args, shardings, out_shardings = input_specs(cfg, "decode_32k", mesh)
+    donate = (2,)
+    if offload:
+        p_sh, t_sh, c_sh = shardings
+
+        def to_host(s):
+            return s.with_memory_kind("pinned_host")
+
+        keys = ("k", "v")  # offload the KV stacks, keep len/window on device
+        c_sh = {k: (to_host(v) if k in keys else v) for k, v in c_sh.items()}
+        shardings = (p_sh, t_sh, c_sh)
+        # let XLA place outputs (mixed-memory output annotation of scalar
+        # leaves trips an XLA RET_CHECK as of jax 0.8) and skip donation
+        # across memory kinds
+        out_shardings = None
+        donate = ()
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shardings,
+                           out_shardings=out_shardings,
+                           donate_argnums=donate).lower(*args).compile()
+    return compiled.memory_analysis()
+
+
+def main():
+    from repro.configs import get_config
+    from repro.serving.costmodel import CostModel, TPU_V5E
+
+    base = lower_decode(offload=False)
+    off = lower_decode(offload=True)
+    gib = 2**30
+    cfg = get_config("chatglm3-6b")
+    cm = CostModel(cfg, TPU_V5E)
+    kv_per_chip = cm.kv_bytes(32768) * 128 / 256  # decode_32k batch / chips
+    print("chatglm3-6b decode_32k on 16x16 (256 chips):")
+    print(f"  baseline lowers+compiles: args/chip "
+          f"{base.argument_size_in_bytes/gib:6.2f} GiB")
+    print(f"  layerkv (KV in pinned_host shardings) lowers+compiles: "
+          f"args/chip {off.argument_size_in_bytes/gib:6.2f} GiB")
+    print(f"  KV cache per chip (the offloadable share): "
+          f"{kv_per_chip/gib:.2f} GiB")
+    print("  NOTE: the CPU stand-in backend folds pinned_host into one "
+          "memory space, so memory_analysis() shows no host split here; "
+          "on the TPU target the same in_shardings move the KV stacks to "
+          "host DRAM and host_argument_size reports them (the paper's "
+          "layer-wise offload at pod scale).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end serving driver: LayerKV vs request-wise (vLLM-style) policy
+on the SAME model and workload, with real JAX execution + paged KV pools.
+
+Demonstrates the paper's two headline properties at smoke scale:
+  1. losslessness — identical generated tokens under forced offloading;
+  2. earlier admission — layer-wise allocation starts prefills sooner when
+     the device pool is tight.
+
+    PYTHONPATH=src python examples/serve_comparison.py
+"""
+import dataclasses
+import statistics
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.serving.engine import EngineConfig, LayerKVEngine
+from repro.serving.request import Request
+
+
+def make_workload(cfg, n=10, seed=0):
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.randint(32, 56))
+        reqs.append(Request(
+            rid=f"r{i}", prompt_len=plen, output_len=int(rng.randint(12, 24)),
+            arrival=i * 0.002,
+            prompt=[int(t) for t in rng.randint(0, cfg.vocab_size, plen)]))
+    return reqs
+
+
+def run(cfg, policy, blocks, seed=0):
+    eng = LayerKVEngine(
+        cfg, None,
+        EngineConfig(policy=policy, num_device_blocks=blocks,
+                     num_host_blocks=512, block_size=8),
+        rng=jax.random.PRNGKey(7))
+    done = eng.run(make_workload(cfg, seed=seed))
+    return eng, {r.rid: r for r in done}
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    # ground truth: request-wise with a roomy pool
+    _, truth = run(cfg, "vllm", 1024)
+    # tight pool: both policies under pressure
+    eng_v, out_v = run(cfg, "vllm", 20)
+    eng_l, out_l = run(cfg, "layerkv", 20)
+
+    mismatches = sum(truth[r].generated != out_l[r].generated for r in truth)
+    off = [t for t in eng_l.off.ledger.log if t.kind == "offload"]
+    rel = [t for t in eng_l.off.ledger.log if t.kind == "reload"]
+    print(f"losslessness: {len(truth) - mismatches}/{len(truth)} requests "
+          f"identical under {len(off)} offloads / {len(rel)} reloads")
+
+    tv = statistics.mean(r.ttft for r in out_v.values())
+    tl = statistics.mean(r.ttft for r in out_l.values())
+    print(f"mean TTFT  request-wise: {tv*1e6:10.1f} us")
+    print(f"mean TTFT  layer-wise  : {tl*1e6:10.1f} us "
+          f"({tv/max(tl,1e-12):.2f}x)")
+    assert mismatches == 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Train a ~100M-parameter decoder for a few hundred steps on CPU.
+
+    PYTHONPATH=src python examples/train_tiny.py [--steps 300]
+
+(At ~3k tokens/s on a laptop-class CPU this takes a few minutes; pass
+--steps 50 for a quick look.)
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.training.data import DataConfig
+from repro.training.train_loop import train
+
+# ~100M params: 12L d=768 12H GQA kv=4, SwiGLU, 32k vocab
+TINY_100M = ModelConfig(
+    arch_id="tiny-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32000,
+    pos_emb="rope", dtype="float32", source="examples/train_tiny")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/tiny100m_ckpt")
+    args = ap.parse_args()
+
+    print(f"params ~= {TINY_100M.param_count()/1e6:.0f}M")
+    res = train(TINY_100M, steps=args.steps,
+                dc=DataConfig(batch_size=args.batch, seq_len=args.seq),
+                ckpt_path=args.ckpt, ckpt_every=100, log_every=20)
+    print(f"final loss {res.final_loss:.4f} "
+          f"({res.tokens_per_s:.0f} tokens/s); checkpoint at {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

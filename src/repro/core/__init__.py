@@ -1,0 +1,34 @@
+"""The paper's primary contribution: layer-wise KV cache management.
+
+block_manager   layer-wise paged allocator over DEVICE + HOST pools
+offload_engine  Eq.4 retention policy, interleaving, link ledger (§3.1.3)
+slo_scheduler   Algorithm 1 / Eq.1-3 admission control
+predictor       bucketed generation-length prediction
+forecast        Eq.5 availability state transition
+"""
+from repro.core.block_manager import (
+    DEVICE,
+    HOST,
+    LayerwiseBlockManager,
+    PoolExhausted,
+)
+from repro.core.forecast import AvailabilityForecast
+from repro.core.offload_engine import (
+    LinkLedger,
+    OffloadEngine,
+    OffloadPlan,
+    interleave_offload_layers,
+)
+from repro.core.predictor import (
+    HistogramPredictor,
+    LengthPredictor,
+    OraclePredictor,
+)
+from repro.core.slo_scheduler import SLOScheduler
+
+__all__ = [
+    "DEVICE", "HOST", "LayerwiseBlockManager", "PoolExhausted",
+    "AvailabilityForecast", "LinkLedger", "OffloadEngine", "OffloadPlan",
+    "interleave_offload_layers", "HistogramPredictor", "LengthPredictor",
+    "OraclePredictor", "SLOScheduler",
+]

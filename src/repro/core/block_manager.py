@@ -1,0 +1,166 @@
+"""Layer-wise paged KV block allocator (paper §3.1.1-§3.1.2).
+
+Two physical pools — DEVICE (GPU/TPU HBM) and HOST — each a flat set of
+fixed-size blocks backed by one pooled tensor (paper §4: a single tensor so
+any block can serve any layer of any request). On top, a block table maps
+(request, layer, logical_block) -> (pool, physical_block). Residency is
+tracked per (request, layer): a layer's KV lives wholly on one pool at a
+time (the paper offloads whole layers), with per-layer interleaving chosen
+by the offload engine.
+
+Invariants (enforced + property-tested):
+  * a physical block belongs to at most one (request, layer) at a time;
+  * free + allocated == pool size, always;
+  * freeing is idempotent only via free_request (double-free of a live
+    handle raises);
+  * request state never references a freed block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+DEVICE = "device"
+HOST = "host"
+
+
+class PoolExhausted(Exception):
+    pass
+
+
+class _Pool:
+    def __init__(self, name: str, num_blocks: int):
+        self.name = name
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._owner: Dict[int, Tuple[str, int]] = {}  # block -> (req, layer)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int, owner: Tuple[str, int]) -> List[int]:
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"{self.name}: want {n}, have {len(self._free)}")
+        blocks = [self._free.pop() for _ in range(n)]
+        for b in blocks:
+            self._owner[b] = owner
+        return blocks
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b not in self._owner:
+                raise KeyError(f"{self.name}: double free of block {b}")
+            del self._owner[b]
+            self._free.append(b)
+
+    def check(self) -> None:
+        assert len(self._free) + len(self._owner) == self.num_blocks
+        assert set(self._free).isdisjoint(self._owner)
+
+
+@dataclasses.dataclass
+class LayerAllocation:
+    pool: str                    # DEVICE or HOST
+    blocks: List[int]            # physical ids, logical order
+    num_tokens: int = 0          # valid tokens written
+
+
+class LayerwiseBlockManager:
+    """Per-layer block accounting for one engine replica."""
+
+    def __init__(self, num_device_blocks: int, num_host_blocks: int,
+                 block_size: int, n_layers: int):
+        self.block_size = block_size
+        self.n_layers = n_layers
+        self.pools = {DEVICE: _Pool(DEVICE, num_device_blocks),
+                      HOST: _Pool(HOST, num_host_blocks)}
+        # request -> layer -> LayerAllocation
+        self.tables: Dict[str, Dict[int, LayerAllocation]] = {}
+
+    # ------------------------------------------------------------- queries
+    def num_free(self, pool: str = DEVICE) -> int:
+        return self.pools[pool].num_free
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def request_blocks(self, n_tokens: int, n_layers: Optional[int] = None):
+        """Blocks needed to hold `n_tokens` of KV for `n_layers` layers
+        (request-wise baseline passes n_layers = all)."""
+        L = self.n_layers if n_layers is None else n_layers
+        return self.blocks_for_tokens(n_tokens) * L
+
+    def layers_on(self, req: str, pool: str) -> List[int]:
+        return [l for l, a in self.tables.get(req, {}).items()
+                if a.pool == pool]
+
+    def allocation(self, req: str, layer: int) -> LayerAllocation:
+        return self.tables[req][layer]
+
+    def live_requests(self) -> List[str]:
+        return list(self.tables)
+
+    # ---------------------------------------------------------- allocation
+    def can_alloc(self, n_blocks: int, pool: str = DEVICE) -> bool:
+        return self.pools[pool].num_free >= n_blocks
+
+    def alloc_layer(self, req: str, layer: int, n_tokens: int,
+                    pool: str = DEVICE) -> LayerAllocation:
+        assert 0 <= layer < self.n_layers
+        tbl = self.tables.setdefault(req, {})
+        assert layer not in tbl, f"{req} layer {layer} already allocated"
+        n = self.blocks_for_tokens(n_tokens)
+        blocks = self.pools[pool].alloc(n, (req, layer))
+        alloc = LayerAllocation(pool, blocks, n_tokens)
+        tbl[layer] = alloc
+        return alloc
+
+    def extend_layer(self, req: str, layer: int, n_new_tokens: int = 1):
+        """Grow a layer's allocation for newly decoded tokens (same pool)."""
+        a = self.tables[req][layer]
+        need = self.blocks_for_tokens(a.num_tokens + n_new_tokens) \
+            - len(a.blocks)
+        if need > 0:
+            a.blocks.extend(self.pools[a.pool].alloc(need, (req, layer)))
+        a.num_tokens += n_new_tokens
+        return a
+
+    # ----------------------------------------------------------- migration
+    def move_layer(self, req: str, layer: int, to_pool: str
+                   ) -> Tuple[List[int], List[int]]:
+        """Migrate one layer's KV between pools. Returns (src_blocks,
+        dst_blocks) so the caller can issue the physical copies; accounting
+        is updated immediately (the engine's transfer ledger owns timing)."""
+        a = self.tables[req][layer]
+        if a.pool == to_pool:
+            return (a.blocks, a.blocks)
+        src = list(a.blocks)
+        dst = self.pools[to_pool].alloc(len(src), (req, layer))
+        self.pools[a.pool].free(src)
+        a.pool, a.blocks = to_pool, dst
+        return src, dst
+
+    # ------------------------------------------------------------- release
+    def free_request(self, req: str) -> int:
+        """Release every block of a finished request. Returns #blocks freed
+        on DEVICE (feeds Eq.5 Released(t))."""
+        tbl = self.tables.pop(req, {})
+        dev_freed = 0
+        for a in tbl.values():
+            self.pools[a.pool].free(a.blocks)
+            if a.pool == DEVICE:
+                dev_freed += len(a.blocks)
+        return dev_freed
+
+    def check(self) -> None:
+        for p in self.pools.values():
+            p.check()
+        owned = {}
+        for req, tbl in self.tables.items():
+            for layer, a in tbl.items():
+                for b in a.blocks:
+                    key = (a.pool, b)
+                    assert key not in owned, f"block {key} double-owned"
+                    owned[key] = (req, layer)

@@ -1,0 +1,67 @@
+"""SLO-aware scheduler (paper §3.1, Algorithm 1).
+
+Decides, at each scheduling event, how many queued requests' prefill stages
+may run *now* without pushing any currently-decoding request past its TPOT
+SLO. The slack of decoding request i (Eq. 1):
+
+    T_allow^i = T_tpot^i * (N_past^i + N_future^i) - (T_past^i + T_future^i)
+
+and prefills q_1..q_n are admitted while  sum_k T_prefill(q_k) < min_i
+T_allow^i  (Eq. 2), with T_prefill estimated by the Eq. 3 cost model and
+N_future by the bucketed length predictor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+from repro.core.predictor import LengthPredictor
+from repro.serving.costmodel import CostModel
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class SLOScheduler:
+    cost: CostModel
+    predictor: LengthPredictor
+    # requests with no TPOT headroom would block admissions forever; the
+    # paper's fairness guarantee comes from admitting at least one prefill
+    # whenever no decode slack is violated *yet* — keep a small floor.
+    min_admit_when_idle: int = 1
+
+    # ------------------------------------------------------------------ Eq.1
+    def allow_prefill_budget(self, decoding: Sequence[Request], now: float
+                             ) -> float:
+        """min_i T_allow^i over decoding requests; +inf if none decoding."""
+        budget = float("inf")
+        for r in decoding:
+            n_future = self.predictor.n_future(r, r.n_past)
+            cur = r.current_tpot(now)
+            if cur <= 0.0:
+                cur = self.cost.decode_step_time(max(len(decoding), 1),
+                                                 r.prompt_len)
+            t_future = cur * n_future
+            t_allow = r.tpot_slo * (r.n_past + n_future) \
+                - (r.t_past(now) + t_future)
+            budget = min(budget, t_allow)
+        return budget
+
+    # ------------------------------------------------------------- Alg.1
+    def max_prefills(self, queue: Sequence[Request],
+                     decoding: Sequence[Request], now: float) -> int:
+        """Maximum n such that the first n queued prefills fit in the
+        minimum TPOT slack (Eq. 2). FCFS order — no reordering, hence no
+        starvation (paper §1)."""
+        if not queue:
+            return 0
+        budget = self.allow_prefill_budget(decoding, now)
+        if not decoding:
+            return len(queue)  # nothing to protect
+        total, n = 0.0, 0
+        for q in queue:
+            total += self.cost.prefill_time(q.prompt_len)
+            if total < budget:
+                n += 1
+            else:
+                break
+        return n

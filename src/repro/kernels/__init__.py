@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (flash prefill, paged decode attention, fused
+rmsnorm) with jnp oracles in ref.py and jit'd wrappers in ops.py."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,62 @@
+"""Public jit'd kernel entry points with backend selection.
+
+Backends:
+  'ref'       pure-jnp chunked oracle (default; lowers cleanly under GSPMD on
+              any platform — this is what the dry-run compiles)
+  'pallas'    Pallas TPU kernels; on CPU they run in interpret mode (used by
+              kernel tests), on TPU they compile to Mosaic.
+
+Select globally via `set_backend` or per-call via `backend=`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_BACKEND = "ref"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("ref", "pallas"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, kv_len=None, q_offset=0,
+                    q_chunk=512, kv_chunk=512, softmax_scale=None,
+                    backend=None):
+    b = backend or _BACKEND
+    if b == "pallas":
+        from repro.kernels import flash_prefill
+        return flash_prefill.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, kv_len=kv_len,
+            q_offset=q_offset, softmax_scale=softmax_scale)
+    return _ref.flash_attention_reference(
+        q, k, v, causal=causal, window=window, kv_len=kv_len,
+        q_offset=q_offset, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        softmax_scale=softmax_scale)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window=0,
+                     softmax_scale=None, backend=None):
+    return _ref.decode_attention_reference(
+        q, k_cache, v_cache, kv_len, window=window,
+        softmax_scale=softmax_scale)
+
+
+def paged_attention(q, kv_pool, block_table, kv_len, *, softmax_scale=None,
+                    backend=None):
+    b = backend or _BACKEND
+    if b == "pallas":
+        from repro.kernels import paged_attention as _pa
+        return _pa.paged_attention_pallas(
+            q, kv_pool, block_table, kv_len, softmax_scale=softmax_scale)
+    return _ref.paged_attention_reference(
+        q, kv_pool, block_table, kv_len, softmax_scale=softmax_scale)

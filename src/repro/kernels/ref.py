@@ -1,0 +1,186 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are also the default lowering path at scale (the chunked flash oracle is
+memory-O(S * chunk) and GSPMD-friendly), so they must be jit/scan-clean.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_logits(q, k):
+    """q: (B, Sq, KV, G, D), k: (B, Skv, KV, D) -> (B, KV, G, Sq, Skv)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k)
+
+
+def _gqa_out(p, v):
+    """p: (B, KV, G, Sq, Skv), v: (B, Skv, KV, D) -> (B, Sq, KV, G, D)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+
+def mha_reference(q, k, v, *, causal=True, window=0, kv_len=None, q_offset=0,
+                  softmax_scale=None):
+    """Unchunked masked GQA attention oracle.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D); H % KV == 0.
+    kv_len: (B,) valid KV prefix length (None -> all valid).
+    q_offset: absolute position of q[0] (int or (B,) array) for causal masking
+      when Sq < Skv (decode / chunked prefill).
+    window: >0 -> sliding-window attention (each query sees the last `window`
+      keys, inclusive of itself).
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    qh = (q * scale).reshape(B, Sq, KV, G, D)
+    logits = _gqa_logits(qh, k).astype(jnp.float32)  # (B,KV,G,Sq,Skv)
+
+    Skv = k.shape[1]
+    q_pos = jnp.asarray(q_offset)[..., None] + jnp.arange(Sq)  # (Sq,) or (B,Sq)
+    k_pos = jnp.arange(Skv)
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]  # (1, Sq)
+    mask = jnp.ones((q_pos.shape[0], Sq, Skv), dtype=bool)
+    if causal:
+        mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+    if window:
+        mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+    if kv_len is not None:
+        mask &= k_pos[None, None, :] < jnp.asarray(kv_len).reshape(-1, 1, 1)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = _gqa_out(p.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def flash_attention_reference(q, k, v, *, causal=True, window=0, kv_len=None,
+                              q_offset=0, q_chunk=512, kv_chunk=512,
+                              softmax_scale=None):
+    """Chunked online-softmax GQA attention (flash oracle).
+
+    Memory O(Sq/qc * Skv_chunk); numerically matches `mha_reference`.
+    Shapes as in `mha_reference`. Sq % q_chunk == 0, Skv % kv_chunk == 0
+    (callers pad); chunks larger than the dims are clamped.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    # pad ragged sequence lengths up to the chunk grid; padded KV positions
+    # are masked via kv_len, padded q rows are sliced off the output
+    orig_Sq, orig_Skv = Sq, Skv
+    pad_q = (-Sq) % q_chunk
+    pad_kv = (-Skv) % kv_chunk
+    if pad_kv:
+        kpad = [(0, 0), (0, pad_kv), (0, 0), (0, 0)]
+        k = jnp.pad(k, kpad)
+        v = jnp.pad(v, kpad)
+        if kv_len is None:
+            kv_len = jnp.full((B,), orig_Skv, jnp.int32)
+        Skv += pad_kv
+    if pad_q:
+        q = jnp.pad(q, [(0, 0), (0, pad_q), (0, 0), (0, 0)])
+        Sq += pad_q
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+
+    # NB: keep q/k/v in their storage dtype here — f32 casts happen
+    # per-chunk inside the scan bodies, otherwise a full-tensor f32 copy of
+    # the activations lives across the whole attention call (at 32k prefill
+    # that is GiBs per layer)
+    qh = q.reshape(B, nq, q_chunk, KV, G, D)
+    kh = k.reshape(B, nk, kv_chunk, KV, D)
+    vh = v.reshape(B, nk, kv_chunk, KV, D)
+    q_off = jnp.asarray(q_offset).reshape(-1, 1)  # (1or B,1)
+    kv_len_arr = None if kv_len is None else jnp.asarray(kv_len).reshape(-1, 1, 1)
+
+    def q_step(_, qi):
+        qc = qh[:, qi].astype(jnp.float32) * scale  # (B, qc, KV, G, D)
+        q_pos = q_off + qi * q_chunk + jnp.arange(q_chunk)  # (1orB, qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = kh[:, ki].astype(jnp.float32)
+            vc = vh[:, ki].astype(jnp.float32)
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            logits = _gqa_logits(qc, kc)  # (B,KV,G,qc,kc) f32
+            mask = jnp.ones((q_pos.shape[0], q_chunk, kv_chunk), dtype=bool)
+            if causal:
+                mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+            if window:
+                mask &= k_pos[None, None, :] > q_pos[:, :, None] - window
+            if kv_len_arr is not None:
+                mask &= k_pos[None, None, :] < kv_len_arr
+            logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,G,qc,D)
+        # stack in storage dtype: the f32 stack would be the biggest live
+        # buffer of the whole prefill
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))  # (nq,B,qc,KV,G,D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, D)
+    if pad_q:
+        out = out[:, :orig_Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention_reference(q, k_cache, v_cache, kv_len, *, window=0,
+                               softmax_scale=None):
+    """Single-token GQA decode attention over a dense cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S, KV, D); kv_len: (B,) number of
+    valid entries. window: ring-buffer semantics are the caller's concern —
+    here it only limits the attended span to the last `window` positions.
+    """
+    return mha_reference(
+        q, k_cache, v_cache, causal=False, window=0,
+        kv_len=kv_len, softmax_scale=softmax_scale,
+    ) if window == 0 else mha_reference(
+        # with a ring buffer every cached slot is within the window already
+        q, k_cache, v_cache, causal=False, window=0, kv_len=kv_len,
+        softmax_scale=softmax_scale,
+    )
+
+
+def paged_attention_reference(q, kv_pool, block_table, kv_len, *,
+                              softmax_scale=None):
+    """Decode GQA attention over a paged KV pool (oracle for the Pallas kernel).
+
+    q:           (B, H, D)       one query token per sequence
+    kv_pool:     (N_blocks, BS, 2, KV, D)  single pooled tensor (paper §4),
+                 [..., 0, :, :] = K, [..., 1, :, :] = V
+    block_table: (B, MAX_BLOCKS) int32 physical block ids (padding: any id —
+                 masked out by kv_len)
+    kv_len:      (B,) valid token count per sequence
+    returns      (B, H, D)
+    """
+    B, H, D = q.shape
+    NB, BS = kv_pool.shape[0], kv_pool.shape[1]
+    KV = kv_pool.shape[3]
+    MAX_BLOCKS = block_table.shape[1]
+    # Gather per-sequence K/V: (B, MAX_BLOCKS, BS, 2, KV, D)
+    gathered = kv_pool[block_table]
+    k = gathered[:, :, :, 0].reshape(B, MAX_BLOCKS * BS, KV, D)
+    v = gathered[:, :, :, 1].reshape(B, MAX_BLOCKS * BS, KV, D)
+    out = mha_reference(q[:, None], k, v, causal=False, kv_len=kv_len,
+                        softmax_scale=softmax_scale)
+    return out[:, 0]

@@ -1,0 +1,229 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+CPU devices stand in for 2 pods x 256 v5e chips. MUST be imported/run as a
+fresh process (`python -m repro.launch.dryrun ...`) so the XLA flag below
+precedes any jax initialization.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import contextlib    # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+from jax.sharding import PartitionSpec as P              # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config   # noqa: E402
+from repro.launch.mesh import make_production_mesh       # noqa: E402
+from repro.launch.specs import input_specs               # noqa: E402
+from repro.models.act_sharding import (                    # noqa: E402
+    activation_sharding, kv_sharding, moe_buffer_sharding, state_sharding)
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_shapes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (SPMD-
+    partitioned) HLO, split into loop-BODY ops (inside while-loop
+    computations: scan bodies appear ONCE in the text but execute
+    trip-count times — the roofline analyzer multiplies them by the layer /
+    microbatch iteration counts) and TOP-level ops."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    body_bytes = 0
+    top_bytes = 0
+    in_body = False
+    for line in hlo_text.splitlines():
+        ls = line.rstrip()
+        if ls and not ls.startswith(" ") and "{" in ls:
+            # computation header, e.g. "%region_12.345 (...) -> ... {"
+            name = ls.split(" ")[0]
+            in_body = ("body" in name or "region" in name
+                       or "while" in name)
+        s = line.strip()
+        if s.startswith("%") or s.startswith("ROOT"):
+            m = re.search(r"=\s*(.+?)\s+(\w[\w-]*)\(", s)
+            if not m:
+                continue
+            shape_part, op = m.groups()
+            if op in _COLLECTIVES:
+                b = _bytes_of_shapes(shape_part)
+                out[op] += b
+                count[op] += 1
+                if in_body:
+                    body_bytes += b
+                else:
+                    top_bytes += b
+    return {"bytes": out, "counts": count,
+            "total_bytes": sum(out.values()),
+            "body_bytes": body_bytes, "top_bytes": top_bytes}
+
+
+DEFAULT_MICROBATCHES = 4  # train_4k grad-accumulation factor
+
+# per-arch grad-accumulation overrides: live activations must fit 16 GiB
+# HBM alongside FSDP-sharded optimizer state
+MICROBATCH = {
+    "llama4-scout-17b-a16e": 16,
+    "qwen2-vl-7b": 16,
+    "codeqwen1.5-7b": 8,
+    "chatglm3-6b": 8,
+    "deepseek-moe-16b": 8,
+    "xlstm-1.3b": 8,
+    "zamba2-2.7b": 8,
+}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            keep_hlo: bool = False,
+            microbatches: int = 0) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = SHAPES[shape_name].kind
+    if not microbatches:
+        microbatches = MICROBATCH.get(arch, DEFAULT_MICROBATCHES)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_devices": mesh.devices.size,
+           "microbatches": microbatches if kind == "train" else 1}
+    t0 = time.time()
+    try:
+        fn, args, shardings, out_shardings = input_specs(
+            cfg, shape_name, mesh,
+            microbatches=microbatches if kind == "train" else 1)
+        # sequence-parallel activation sharding for full-sequence passes
+        # (Megatron-SP): the remat carry lives (batch, seq)-sharded
+        dp = ("pod", "data") if multi_pod else ("data",)
+        ctx = (activation_sharding(P(dp, "model", None),
+                                   P(dp, None, None))
+               if SHAPES[shape_name].kind in ("train", "prefill")
+               else contextlib.nullcontext())
+        # fine-grained MoE (experts >> TP degree) benefits from pinning the
+        # dispatch buffer expert-sharded; with E == TP (llama4) the pin
+        # forces a pathological gather layout (+17 GiB, §Perf log)
+        moe_ctx = (moe_buffer_sharding(P("model", dp, None))
+                   if cfg.family == "moe" and
+                   cfg.moe.n_experts > mesh.shape["model"] and
+                   SHAPES[shape_name].kind in ("train", "prefill")
+                   else contextlib.nullcontext())
+        kv_ctx = (kv_sharding(P(dp, "model", None, None))
+                  if SHAPES[shape_name].kind == "prefill"
+                  else contextlib.nullcontext())
+        # recurrent chunk states (mLSTM C matrices): head-dim over 'model'
+        st_ctx = (state_sharding(P(dp, None, None, "model", None))
+                  if cfg.family in ("ssm", "hybrid") and
+                  SHAPES[shape_name].kind in ("train", "prefill")
+                  else contextlib.nullcontext())
+        # deployment-faithful buffer donation: params+opt for train, the
+        # KV cache for decode
+        donate = {"train": (0, 1), "prefill": (2,), "decode": (2,)}[kind]
+        with mesh, ctx, moe_ctx, kv_ctx, st_ctx:
+            lowered = jax.jit(fn, in_shardings=shardings,
+                              out_shardings=out_shardings,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_size=mem.argument_size_in_bytes,
+                output_size=mem.output_size_in_bytes,
+                temp_size=mem.temp_size_in_bytes,
+                alias_size=mem.alias_size_in_bytes,
+                host_argument_size=mem.host_argument_size_in_bytes,
+                host_temp_size=mem.host_temp_size_in_bytes,
+            ),
+            # NB: sizes are per-device (SPMD module)
+            bytes_per_device=(mem.argument_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              - mem.alias_size_in_bytes),
+            flops=cost.get("flops", 0.0),
+            bytes_accessed=cost.get("bytes accessed", 0.0),
+            collectives=coll,
+        )
+        if keep_hlo:
+            rec["hlo"] = hlo
+    except Exception as e:  # noqa: BLE001 — failures are data here
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    seen = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "2x16x16" if mp else "16x16")
+                if key in seen:
+                    continue
+                print(f"=== {arch} x {shape} x {key[2]} ===", flush=True)
+                rec = run_one(arch, shape, mp)
+                status = "OK" if rec["ok"] else f"FAIL {rec['error'][:120]}"
+                gb = rec.get("bytes_per_device", 0) / 2**30
+                print(f"    {status}  mem/dev={gb:.2f}GiB "
+                      f"wall={rec['wall_s']}s", flush=True)
+                results.append(rec)
+                json.dump(results, open(args.out, "w"), indent=1)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} combinations compiled")
+
+
+if __name__ == "__main__":
+    main()

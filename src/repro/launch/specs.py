@@ -1,0 +1,319 @@
+"""Input ShapeDtypeStructs + sharding rules for every (arch x shape x mesh).
+
+`input_specs` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins, zero device allocation. The modality frontends are
+stubs per spec: audio/VLM entries receive precomputed frame/patch
+embeddings of the right shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, SHAPES
+from repro.launch.mesh import data_axes
+from repro.models import build_model
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+# leaf-name -> which dim gets the 'model' axis
+_LAST_DIM_MODEL = {
+    "wq", "wk", "wv", "wg", "wu", "w1", "w_in", "w_up", "w_gates",
+    "bq", "bk", "bv", "b1", "conv_w", "conv_b", "lm_head",
+}
+_PENULT_DIM_MODEL = {"wo", "wd", "w2", "w_out", "w_down"}
+_EXPERT_SHARDED = {"we_gate", "we_up", "we_down"}  # expert axis -> 'model'
+_REPLICATED = {
+    "w", "b", "b2", "router", "A_log", "D", "dt_bias", "norm_w", "r_gates",
+    "b_gates", "w_i", "w_f", "b_i", "b_f",
+}
+
+
+def _fit(mesh, spec: P, shape: tuple) -> P:
+    """Drop axes whose extent does not divide the dim (pjit argument
+    shardings require exact divisibility; oddball dims like vocab=49155
+    fall back to replication on that dim)."""
+    fixed = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(entry if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def _param_spec(path, leaf) -> P:
+    name = None
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            name = entry.key
+            break
+    nd = leaf.ndim
+    none = (None,) * nd
+    if name == "embed":
+        return P("model", None)
+    if name in _REPLICATED or nd == 0:
+        return P(*none)
+    if name in _EXPERT_SHARDED:
+        # stacked: (L, E, d, f) -> expert axis is -3
+        spec = list(none)
+        spec[-3] = "model"
+        return P(*spec)
+    if name in _LAST_DIM_MODEL:
+        spec = list(none)
+        spec[-1] = "model"
+        return P(*spec)
+    if name in _PENULT_DIM_MODEL:
+        spec = list(none)
+        if nd >= 2:
+            spec[-2] = "model"
+        return P(*spec)
+    return P(*none)
+
+
+def _add_fsdp(mesh, spec: P, shape: tuple, dp_axes: tuple) -> P:
+    """2D sharding: put the data(+pod) axes on the largest still-unsharded
+    divisible dim (ZeRO-3/FSDP-style weight sharding on GSPMD)."""
+    if len(shape) < 2:
+        return spec
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(tuple(spec))))
+    cands = [(d, i) for i, (d, e) in enumerate(zip(shape, entries))
+             if e is None and d % dp_size == 0 and d >= dp_size]
+    if not cands:
+        return spec
+    _, idx = max(cands)
+    entries[idx] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return P(*entries)
+
+
+def param_shardings(mesh, params_shape, fsdp: bool = False) -> Any:
+    dp_axes = data_axes(mesh)
+
+    def assign(path, leaf):
+        spec = _fit(mesh, _param_spec(path, leaf), leaf.shape)
+        if fsdp:
+            spec = _add_fsdp(mesh, spec, leaf.shape, dp_axes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def _cache_spec(mesh, name, leaf, dp, seq_sharded: bool) -> NamedSharding:
+    nd = leaf.ndim
+    none = [None] * nd
+    if name in ("k", "v", "ck", "cv", "k_scale", "v_scale"):
+        # (L, B, S, KV[, hd]): batch over dp; KV-cache sequence over 'model'
+        # (flash-decoding-style partial softmax, GSPMD inserts the reduce);
+        # int8 quantization scales shard exactly like their cache
+        spec = none[:]
+        spec[1] = dp
+        if seq_sharded:
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+    if name == "ssm_state":        # (n_sb, per_sb, B, H, N, P)
+        return NamedSharding(mesh, P(None, None, dp, "model", None, None))
+    if name == "conv":             # (n_sb, per_sb, B, K-1, C)
+        return NamedSharding(mesh, P(None, None, dp, None, "model"))
+    if name == "mC":               # (n_sb, n_m, B, H, hd, hd)
+        return NamedSharding(mesh, P(None, None, dp, None, "model", None))
+    if name in ("mn", "mm"):
+        spec = none[:]
+        spec[2] = dp
+        return NamedSharding(mesh, P(*spec))
+    if name in ("sc", "sn", "sm", "sh"):  # (n_sb, B, H, hd)
+        return NamedSharding(mesh, P(None, dp, None, "model"))
+    if name == "len":
+        return NamedSharding(mesh, P(dp))
+    return NamedSharding(mesh, P(*none))
+
+
+def cache_shardings(mesh, cache_shape, batch: int, seq_sharded=True):
+    dp_axes = data_axes(mesh)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    dp = dp_axes if (batch >= dp_size and dp_axes) else None
+
+    def assign(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        s = _cache_spec(mesh, name, leaf, dp, seq_sharded)
+        return NamedSharding(mesh, _fit(mesh, s.spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+
+def batch_shardings(mesh, batch_shape, batch: int):
+    dp_axes = data_axes(mesh)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    dp = dp_axes if (batch >= dp_size and dp_axes) else None
+
+    def assign(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        nd = leaf.ndim
+        if name == "mrope_pos":     # (3, B, S)
+            spec = P(None, dp, None)
+        else:
+            s = [None] * nd
+            if nd >= 1:
+                s[0] = dp
+            spec = P(*s)
+        return NamedSharding(mesh, _fit(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# input ShapeDtypeStructs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def train_batch_struct(cfg: ModelConfig, shp: InputShape) -> Dict[str, Any]:
+    B, S = shp.global_batch, shp.seq_len
+    i32 = jnp.int32
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+             "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))
+        batch["mrope_pos"] = jax.ShapeDtypeStruct((3, B, S), i32)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_cache_len(cfg: ModelConfig, shp: InputShape) -> int:
+    """KV buffer length for a decode shape. long_500k requires
+    sub-quadratic attention: dense/vlm/encdec/hybrid archs use their
+    sliding-window variant (ring buffer of `sliding_window`)."""
+    if shp.seq_len > 32768 and cfg.sliding_window:
+        return cfg.sliding_window
+    return shp.seq_len
+
+
+def params_struct(cfg: ModelConfig):
+    model = build_model(cfg)
+    return model, jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh,
+                with_opt: bool = True, microbatches: int = 1):
+    """Returns (step_fn, args_structs, in_shardings) ready for
+    jax.jit(step_fn, in_shardings=...).lower(*args_structs)."""
+    shp = SHAPES[shape_name]
+    tp = mesh.shape["model"]
+    # pad query heads to the TP degree (and a KV-group multiple): GSPMD
+    # resharding of non-dividing head counts (40H / 28H over 16) falls back
+    # to full rematerialization = replicated activations
+    if cfg.n_heads % tp:
+        padded = -(-cfg.n_heads // tp) * tp
+        while padded % cfg.n_kv_heads:
+            padded += tp
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, head_pad_to=padded)
+    model, p_struct = params_struct(cfg)
+    # FSDP when TP-only sharding cannot hold the weights (llama4-scout:
+    # 108B total params; 16-way TP leaves 13.5 GiB/chip of bf16 weights)
+    fsdp = cfg.param_count() * 2 / tp > 6e9 or shp.kind == "train"
+    p_shard = param_shardings(mesh, p_struct, fsdp=fsdp)
+    B = shp.global_batch
+
+    if shp.kind == "train":
+        batch = train_batch_struct(cfg, shp)
+        b_shard = batch_shardings(mesh, batch, B)
+        opt_cfg = AdamWConfig()
+        o_struct = jax.eval_shape(init_opt_state, p_struct)
+        o_shard = type(o_struct)(
+            NamedSharding(mesh, P()),
+            param_shardings(mesh, o_struct.mu, fsdp=fsdp),
+            param_shardings(mesh, o_struct.nu, fsdp=fsdp))
+
+        from repro.training.optimizer import adamw_update
+
+        k = microbatches
+
+        out_shard = (p_shard, o_shard, NamedSharding(mesh, P()))
+
+        def train_step(params, opt_state, batch):
+            if k <= 1:
+                (loss, _), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, batch)
+            else:
+                # gradient accumulation: scan over k microbatches so live
+                # activations are 1/k of the global batch
+                def mb_slice(b, i):
+                    def sl(x):
+                        if x.ndim >= 2 and x.shape[0] == B:
+                            m = B // k
+                            return jax.lax.dynamic_slice_in_dim(x, i * m, m, 0)
+                        if x.ndim >= 2 and x.shape[1] == B:  # mrope (3,B,S)
+                            m = B // k
+                            return jax.lax.dynamic_slice_in_dim(x, i * m, m, 1)
+                        return x
+                    return jax.tree.map(sl, b)
+
+                def mb_step(acc, i):
+                    (l, _), g = jax.value_and_grad(
+                        model.loss, has_aux=True)(params, mb_slice(batch, i))
+                    acc_l, acc_g = acc
+                    return (acc_l + l / k,
+                            jax.tree.map(lambda a, b_: a + b_ / k,
+                                         acc_g, g)), None
+
+                zero_g = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    mb_step, (jnp.zeros((), jnp.float32), zero_g),
+                    jnp.arange(k))
+            params, opt_state, om = adamw_update(opt_cfg, grads, opt_state,
+                                                 params)
+            return params, opt_state, loss
+
+        return (train_step, (p_struct, o_struct, batch),
+                (p_shard, o_shard, b_shard), out_shard)
+
+    def _logits_shard():
+        spec = _fit(mesh, P(data_axes(mesh), "model"),
+                    (B, cfg.padded_vocab))
+        return NamedSharding(mesh, spec)
+
+    if shp.kind == "prefill":
+        batch = train_batch_struct(cfg, shp)
+        batch.pop("labels")
+        b_shard = batch_shardings(mesh, batch, B)
+        cache = jax.eval_shape(
+            functools.partial(model.init_cache, B, shp.seq_len,
+                              cfg.dtype))
+        c_shard = cache_shardings(mesh, cache, B)
+
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        return (prefill_step, (p_struct, batch, cache),
+                (p_shard, b_shard, c_shard), (_logits_shard(), c_shard))
+
+    # decode: ONE new token against a full cache
+    cache_len = decode_cache_len(cfg, shp)
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, B, cache_len, cfg.dtype))
+    # cache arrives 'full': len = seq_len - 1 (ring-buffered if windowed)
+    c_shard = cache_shardings(mesh, cache, B)
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    t_shard = batch_shardings(mesh, {"t": tokens}, B)["t"]
+
+    def serve_step(params, tokens, cache):
+        return model.decode(params, tokens, cache)
+
+    return (serve_step, (p_struct, tokens, cache),
+            (p_shard, t_shard, c_shard), (_logits_shard(), c_shard))

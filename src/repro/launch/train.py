@@ -1,0 +1,46 @@
+"""Training driver CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --smoke --steps 200 --batch 8 --seq 128
+
+--smoke uses the reduced config (CPU-runnable); the full config is intended
+for the production mesh (see repro.launch.dryrun for the compile proof).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.training.data import DataConfig
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_loop import train
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    cfg = dataclasses.replace(cfg, dtype=args.dtype)
+    res = train(
+        cfg, steps=args.steps,
+        dc=DataConfig(batch_size=args.batch, seq_len=args.seq),
+        opt=AdamWConfig(lr=args.lr, total_steps=args.steps,
+                        warmup_steps=max(args.steps // 10, 5)),
+        ckpt_path=args.ckpt or None)
+    print(f"final loss {res.final_loss:.4f} "
+          f"({res.tokens_per_s:.0f} tokens/s)")
+
+
+if __name__ == "__main__":
+    main()

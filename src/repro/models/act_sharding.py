@@ -1,0 +1,143 @@
+"""Sequence-parallel activation sharding (Megatron-SP on GSPMD).
+
+The scan-over-layers remat carry is the dominant training activation cost:
+(B, S, d) per layer. Constraining it to P(data, 'model', None) at layer
+boundaries lets the checkpoint stack live sequence-sharded; GSPMD inserts
+the all-gather before attention and reduce-scatters after, exactly like
+Megatron sequence parallelism.
+
+Off by default (smoke tests and single-device runs see no constraint);
+the launcher enables it under a mesh context.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_SAVED_SPEC: Optional[object] = None    # layer-boundary (checkpointed) layout
+_COMPUTE_SPEC: Optional[object] = None  # in-layer layout
+
+
+@contextlib.contextmanager
+def activation_sharding(saved, compute=None):
+    """saved: PartitionSpec for the (B, S, d) activations crossing layer
+    boundaries (what remat stores, typically seq-sharded on 'model');
+    compute: layout restored at layer entry (typically seq-replicated so
+    attention partitions normally)."""
+    global _SAVED_SPEC, _COMPUTE_SPEC
+    prev = (_SAVED_SPEC, _COMPUTE_SPEC)
+    _SAVED_SPEC, _COMPUTE_SPEC = saved, compute
+    try:
+        yield
+    finally:
+        _SAVED_SPEC, _COMPUTE_SPEC = prev
+
+
+def constrain(x):
+    """Layer-boundary constraint (applied to the scan carry)."""
+    if _SAVED_SPEC is not None and x.ndim == 3 and x.shape[1] > 1:
+        return jax.lax.with_sharding_constraint(x, _SAVED_SPEC)
+    return x
+
+
+def constrain_compute(x):
+    """Layer-entry constraint (gather back to the compute layout)."""
+    if _COMPUTE_SPEC is not None and x.ndim == 3 and x.shape[1] > 1:
+        return jax.lax.with_sharding_constraint(x, _COMPUTE_SPEC)
+    return x
+
+
+_KV_SPEC = None  # PartitionSpec for collected per-layer KV (B, S, KV, hd)
+
+
+@contextlib.contextmanager
+def kv_sharding(spec):
+    global _KV_SPEC
+    prev = _KV_SPEC
+    _KV_SPEC = spec
+    try:
+        yield
+    finally:
+        _KV_SPEC = prev
+
+
+def constrain_kv(kv):
+    """Constrain a prefill-collected (k, v) pair before lax.scan stacks it
+    into the (L, B, S, KV, hd) cache — otherwise XLA may materialize the
+    stack sequence-replicated."""
+    if _KV_SPEC is None or kv is None:
+        return kv
+    k, v = kv
+    if k.ndim != 4:
+        return kv
+    return (jax.lax.with_sharding_constraint(k, _KV_SPEC),
+            jax.lax.with_sharding_constraint(v, _KV_SPEC))
+
+
+def constrain_kv_stack(k, v):
+    """Pin the stacked (L, B, S, KV, hd) prefill KV to the cache layout.
+    GSPMD otherwise picks a (KV x hd) sharding for the stack and its
+    'involuntary full rematerialization' fallback replicates the whole
+    cache when writing it (205 GiB at llama4 prefill scale)."""
+    if _KV_SPEC is None or k.ndim != 5:
+        return k, v
+    spec = jax.sharding.PartitionSpec(None, *tuple(_KV_SPEC))
+    return (jax.lax.with_sharding_constraint(k, spec),
+            jax.lax.with_sharding_constraint(v, spec))
+
+
+_STATE_SPEC = None  # PartitionSpec for recurrent chunk states (B, nc, H, hd, hd)
+
+
+@contextlib.contextmanager
+def state_sharding(spec):
+    """Pin mLSTM/SSD chunkwise state tensors (rank-5 (B, nc, H, hd, hd) and
+    rank-4 (B, nc|H, ..., hd)) so their einsums don't bounce layouts."""
+    global _STATE_SPEC
+    prev = _STATE_SPEC
+    _STATE_SPEC = spec
+    try:
+        yield
+    finally:
+        _STATE_SPEC = prev
+
+
+def constrain_state(x):
+    if _STATE_SPEC is None or x.ndim != 5:
+        return x
+    return jax.lax.with_sharding_constraint(x, _STATE_SPEC)
+
+
+_MOE_SPEC = None  # PartitionSpec for the (E, C, d) expert dispatch buffer
+
+
+@contextlib.contextmanager
+def moe_buffer_sharding(spec):
+    global _MOE_SPEC
+    prev = _MOE_SPEC
+    _MOE_SPEC = spec
+    try:
+        yield
+    finally:
+        _MOE_SPEC = prev
+
+
+def constrain_moe_buffer(buf):
+    if _MOE_SPEC is not None and buf.ndim == 3:
+        return jax.lax.with_sharding_constraint(buf, _MOE_SPEC)
+    return buf
+
+
+def constrain_moe_tokens(x):
+    """Keep per-token MoE intermediates sharded on the token axis (dim 0).
+    Uses the batch axes of the active MoE buffer spec."""
+    if _MOE_SPEC is None:
+        return x
+    dp = tuple(_MOE_SPEC)[1]  # (E, C, d) -> C carries the data axes
+    if dp is None:
+        return x
+    import jax.numpy as jnp  # local to avoid cycles at import time
+    spec = jax.sharding.PartitionSpec(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

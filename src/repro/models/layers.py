@@ -1,0 +1,238 @@
+"""Shared neural-net building blocks (pure JAX, dict-pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer-stacked params carry a
+    leading (L, ...) axis consumed by lax.scan.
+  * activations default to the config dtype (bf16 at scale, f32 in smoke
+    tests); norms and softmax accumulate in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim, out_dim, dtype):
+    scale = (2.0 / (in_dim + out_dim)) ** 0.5
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, dim, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)) * w + b
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def init_norm(cfg: ModelConfig, key, dim, dtype):
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((dim,), dtype)}
+    return {"w": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (rope / rope2d / mrope)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _rotate(x, cos, sin):
+    """x: (..., D_rot) with paired layout [d0 d1 d2 ...] rotated as complex
+    pairs (x_even, x_odd)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(cfg: ModelConfig, x, positions):
+    """x: (B, S, N, D); positions: (B, S) int32 for 'rope'/'rope2d',
+    (3, B, S) for 'mrope'. Returns same shape/dtype as x."""
+    D = x.shape[-1]
+    if cfg.pos_emb in ("none", "learned", "sinusoid"):
+        return x
+    if cfg.pos_emb == "rope":
+        freqs = _rope_freqs(D, cfg.rope_theta)  # (D/2,)
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+        cos, sin = jnp.cos(ang)[:, :, None], jnp.sin(ang)[:, :, None]
+        return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+    if cfg.pos_emb == "rope2d":
+        # ChatGLM half-rotary: rotate first half of head_dim, pass the rest.
+        Dr = D // 2
+        freqs = _rope_freqs(Dr, cfg.rope_theta)
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        cos, sin = jnp.cos(ang)[:, :, None], jnp.sin(ang)[:, :, None]
+        xr, xp = x[..., :Dr], x[..., Dr:]
+        xr = _rotate(xr.astype(jnp.float32), cos, sin).astype(x.dtype)
+        return jnp.concatenate([xr, xp], axis=-1)
+    if cfg.pos_emb == "mrope":
+        # Qwen2-VL multimodal rope: head_dim/2 freq slots split into three
+        # sections (t, h, w) = (1/4, 3/8, 3/8), each driven by its own
+        # position id stream. positions: (3, B, S).
+        half = D // 2
+        st = half // 4
+        sh = (half - st) // 2
+        sections = [st, sh, half - st - sh]
+        freqs = _rope_freqs(D, cfg.rope_theta)  # (half,)
+        parts, off = [], 0
+        for i, sec in enumerate(sections):
+            ang = positions[i][..., None].astype(jnp.float32) * freqs[off:off + sec]
+            parts.append(ang)
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)  # (B,S,half)
+        cos, sin = jnp.cos(ang)[:, :, None], jnp.sin(ang)[:, :, None]
+        return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+    raise ValueError(cfg.pos_emb)
+
+
+def sinusoid_pos_emb(positions, dim):
+    """positions: (B, S) -> (B, S, dim) float32 sinusoidal embedding."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H = cfg.n_q_heads  # incl. TP padding; pad wo rows are zero
+    kq, kk, kv_, ko, kb = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, d, H * hd, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(kv_, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ko, H * hd, d, dtype),
+    }
+    if cfg.head_pad_to > cfg.n_heads:
+        # zero the padded heads' output rows so they cannot affect results
+        wo = p["wo"]
+        wo = wo.reshape(H, hd, d).at[cfg.n_heads:].set(0.0)
+        p["wo"] = wo.reshape(H * hd, d)
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def qkv_proj(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, cfg.n_q_heads, hd),
+            k.reshape(B, S, cfg.n_kv_heads, hd),
+            v.reshape(B, S, cfg.n_kv_heads, hd))
+
+
+def attn_out(cfg: ModelConfig, p, o):
+    B, S = o.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def self_attention(cfg: ModelConfig, p, x, positions, *, causal=True,
+                   window=0, kv_len=None):
+    """Full self-attention over x (train / encoder). Returns (out, (k, v))."""
+    q, k, v = qkv_proj(cfg, p, x)
+    q = apply_rope(cfg, q, positions)
+    k = apply_rope(cfg, k, positions)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            kv_len=kv_len)
+    return attn_out(cfg, p, o), (k, v)
+
+
+def cross_attention(cfg: ModelConfig, p, x, k, v, enc_len=None):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, cfg.n_q_heads, hd)
+    o = ops.flash_attention(q, k, v, causal=False, kv_len=enc_len)
+    return attn_out(cfg, p, o)
+
+
+def cross_kv(cfg: ModelConfig, p, enc_out):
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(B, T, cfg.n_kv_heads, hd),
+            v.reshape(B, T, cfg.n_kv_heads, hd))
+
+
+def decode_self_attention(cfg: ModelConfig, p, x, k_cache, v_cache, kv_len,
+                          positions):
+    """One-token decode. x: (B, 1, d); caches (B, S, KV, hd); kv_len (B,)
+    counts valid entries INCLUDING the new token once written by the caller.
+
+    Returns (out, k_new, v_new) — the caller owns cache insertion so that
+    ring-buffer (sliding-window) and paged layouts can share this code.
+    """
+    q, k, v = qkv_proj(cfg, p, x)
+    q = apply_rope(cfg, q, positions)
+    k = apply_rope(cfg, k, positions)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {"wg": dense_init(k1, d, f, dtype),
+                "wu": dense_init(k2, d, f, dtype),
+                "wd": dense_init(k3, f, d, dtype)}
+    return {"w1": dense_init(k1, d, f, dtype), "b1": jnp.zeros((f,), dtype),
+            "w2": dense_init(k2, f, d, dtype), "b2": jnp.zeros((d,), dtype)}
+
+
+def mlp(cfg: ModelConfig, p, x):
+    if cfg.act == "silu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]

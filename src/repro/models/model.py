@@ -1,0 +1,803 @@
+"""Composable model definitions for every assigned architecture family.
+
+Uniform interface (`Model`):
+    params = model.init(rng)
+    logits, aux = model.train_logits(params, batch)        # full-seq teacher forcing
+    loss, metrics = model.loss(params, batch)
+    cache = model.init_cache(batch_size, cache_len, dtype)  # decode state buffers
+    logits, cache = model.prefill(params, batch, cache)     # fill cache, last-pos logits
+    logits, cache = model.decode(params, tokens, cache)     # one token per sequence
+
+`batch` keys by family:
+    dense/moe:  tokens (B,S) int32, labels (B,S)
+    vlm:        embeds (B,S,d) [stub ViT output incl. text emb], mrope_pos (3,B,S),
+                labels (B,S); decode takes token ids (text continuation)
+    encdec:     enc_embeds (B,T,d) [stub conv/mel frontend], tokens (B,S), labels
+    ssm/hybrid: tokens, labels
+
+Layers run under `lax.scan` over stacked params; hybrid/xlstm scan over
+uniform superblocks. Sliding-window decode uses a ring-buffer KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers, moe, ssm
+from repro.models.act_sharding import (constrain, constrain_compute,
+                                       constrain_kv, constrain_kv_stack)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _positions_for(cfg: ModelConfig, B, S, offset=0):
+    pos = jnp.arange(S)[None] + jnp.asarray(offset).reshape(-1, 1)  # (B?,S)
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.pos_emb == "mrope":
+        return jnp.broadcast_to(pos[None], (3, B, S))  # text-only stream
+    return pos
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits (B,S,V) any-dtype, labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _mask_pad_logits(cfg: ModelConfig, logits):
+    """Embeddings/heads are padded to cfg.padded_vocab for even model-axis
+    sharding; pad positions must never win argmax nor leak into logsumexp."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(iota < cfg.vocab_size, logits, -1e30)
+
+
+def _write_kv(k_cache, v_cache, k_new, v_new, write_idx):
+    """Scatter one new token's KV into (B, S_buf, KV, hd) at per-seq index."""
+    B = k_cache.shape[0]
+    b = jnp.arange(B)
+    k_cache = k_cache.at[b, write_idx].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[b, write_idx].set(v_new[:, 0].astype(v_cache.dtype))
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# attention layer (dense / moe / vlm share it)
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, key, dtype):
+    ka, km, kn = jax.random.split(key, 3)
+    p = {
+        "attn_norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+        "attn": layers.init_attention(cfg, ka, dtype),
+        "mlp_norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe.init_moe(cfg, km, dtype)
+    else:
+        p["mlp"] = layers.init_mlp(cfg, km, dtype)
+    return p
+
+
+def block_forward(cfg: ModelConfig, p, x, positions, *, window=0,
+                  kv_len=None, collect_kv=False, dropless=False):
+    """Full-sequence transformer block. Returns (x, kv, aux)."""
+    h = layers.apply_norm(cfg, p["attn_norm"], x)
+    attn, kv = layers.self_attention(cfg, p["attn"], h, positions,
+                                     causal=True, window=window,
+                                     kv_len=kv_len)
+    x = x + attn
+    h = layers.apply_norm(cfg, p["mlp_norm"], x)
+    if cfg.family == "moe":
+        f, aux = moe.moe_ffn(cfg, p["moe"], h, dropless=dropless)
+    else:
+        f, aux = layers.mlp(cfg, p["mlp"], h), {}
+    x = x + f
+    return x, (kv if collect_kv else None), aux
+
+
+def block_decode(cfg: ModelConfig, p, x, k_cache, v_cache, kv_len, positions,
+                 write_idx):
+    """One-token block step. x: (B,1,d). Caches (B,S_buf,KV,hd)."""
+    h = layers.apply_norm(cfg, p["attn_norm"], x)
+    q, k, v = layers.decode_self_attention(cfg, p["attn"], h, k_cache,
+                                           v_cache, kv_len, positions)
+    k_cache, v_cache = _write_kv(k_cache, v_cache, k, v, write_idx)
+    o = ops.decode_attention(q, k_cache, v_cache, kv_len)
+    x = x + layers.attn_out(cfg, p["attn"], o)
+    h = layers.apply_norm(cfg, p["mlp_norm"], x)
+    if cfg.family == "moe":
+        f, _ = moe.moe_ffn(cfg, p["moe"], h, dropless=True)
+    else:
+        f = layers.mlp(cfg, p["mlp"], h)
+    x = x + f
+    return x, k_cache, v_cache
+
+
+# ===========================================================================
+# Model container
+# ===========================================================================
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    train_logits: Callable      # (params, batch) -> (logits, aux)
+    prefill: Callable           # (params, batch, cache) -> (logits, cache)
+    decode: Callable            # (params, tokens, cache) -> (logits, cache)
+    init_cache: Callable        # (B, cache_len, dtype) -> cache
+
+    def loss(self, params, batch):
+        logits, aux = self.train_logits(params, batch)
+        ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        total = ce
+        metrics = {"ce": ce}
+        if "lb_loss" in aux:
+            total = total + 0.01 * aux["lb_loss"]
+            metrics.update(lb_loss=aux["lb_loss"],
+                           dropped_frac=aux.get("dropped_frac", 0.0))
+        metrics["loss"] = total
+        return total, metrics
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _decoder_model(cfg)
+    if cfg.family == "encdec":
+        return _encdec_model(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_model(cfg)
+    if cfg.family == "ssm":
+        return _xlstm_model(cfg)
+    raise ValueError(cfg.family)
+
+
+# ===========================================================================
+# decoder-only (dense / moe / vlm)
+# ===========================================================================
+
+def _decoder_model(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(rng):
+        ke, kl, kh = jax.random.split(rng, 3)
+        p = {
+            "embed": layers.embed_init(ke, cfg.padded_vocab, cfg.d_model, dtype),
+            "layers": _stack_init(
+                lambda k: init_block(cfg, k, dtype), kl, cfg.n_layers),
+            "final_norm": layers.init_norm(cfg, kh, cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = layers.dense_init(kh, cfg.d_model, cfg.padded_vocab,
+                                             dtype)
+        return p
+
+    def _unembed(p, x):
+        w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+        return _mask_pad_logits(cfg, x @ w)
+
+    def _embed_batch(p, batch):
+        if cfg.family == "vlm" and "embeds" in batch:
+            return batch["embeds"].astype(dtype)
+        return p["embed"][batch["tokens"]]
+
+    def _run_layers(p, x, positions, *, window=0, kv_len=None,
+                    collect_kv=False, remat=False, dropless=False):
+        body = functools.partial(block_forward, cfg, positions=positions,
+                                 window=window, kv_len=kv_len,
+                                 collect_kv=collect_kv, dropless=dropless)
+
+        def scan_fn(x, lp):
+            x, kv, aux = body(lp, constrain_compute(x))
+            return constrain(x), (constrain_kv(kv), aux.get("lb_loss"),
+                                  aux.get("dropped_frac"))
+
+        if remat:
+            scan_fn = jax.checkpoint(scan_fn)
+        x, (kvs, lb, dropped) = jax.lax.scan(scan_fn, x, p["layers"])
+        aux = {}
+        if lb is not None and cfg.family == "moe":
+            aux = {"lb_loss": jnp.mean(lb), "dropped_frac": jnp.mean(dropped)}
+        return x, kvs, aux
+
+    def train_logits(p, batch, remat=True):
+        x = _embed_batch(p, batch)
+        B, S = x.shape[:2]
+        positions = (batch["mrope_pos"] if cfg.pos_emb == "mrope"
+                     and "mrope_pos" in batch else _positions_for(cfg, B, S))
+        x, _, aux = _run_layers(p, x, positions, remat=remat)
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _unembed(p, x), aux
+
+    def init_cache(B, cache_len, cache_dtype=None):
+        cd = jnp.dtype(cache_dtype or cfg.dtype)
+        hd = cfg.resolved_head_dim
+        shape = (cfg.n_layers, B, cache_len, cfg.n_kv_heads, hd)
+        cache = {
+            "len": jnp.zeros((B,), jnp.int32),
+            "window": jnp.array(
+                cache_len if cfg.sliding_window and
+                cache_len <= cfg.sliding_window else 0, jnp.int32),
+        }
+        if cfg.kv_quant:
+            cache["k"] = jnp.zeros(shape, jnp.int8)
+            cache["v"] = jnp.zeros(shape, jnp.int8)
+            cache["k_scale"] = jnp.zeros(shape[:-1], jnp.bfloat16)
+            cache["v_scale"] = jnp.zeros(shape[:-1], jnp.bfloat16)
+        else:
+            cache["k"] = jnp.zeros(shape, cd)
+            cache["v"] = jnp.zeros(shape, cd)
+        return cache
+
+    def _quantize(t):
+        """(..., hd) -> int8 values + per-(token, head) scale."""
+        amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+        scale = jnp.maximum(amax / 127.0, 1e-8)
+        q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+        return q, scale.astype(jnp.bfloat16)
+
+    def _dequantize(q, scale):
+        return (q.astype(jnp.float32)
+                * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+    def prefill(p, batch, cache, dropless=False):
+        x = _embed_batch(p, batch)
+        B, S = x.shape[:2]
+        positions = (batch["mrope_pos"] if cfg.pos_emb == "mrope"
+                     and "mrope_pos" in batch else _positions_for(cfg, B, S))
+        kv_len = batch.get("prompt_len")
+        x, kvs, _ = _run_layers(p, x, positions, kv_len=kv_len,
+                                collect_kv=True, dropless=dropless)
+        ks, vs = kvs  # (L, B, S, KV, hd)
+        ks, vs = constrain_kv_stack(ks, vs)
+        S_buf = cache["k"].shape[2]
+        if S > S_buf:  # sliding-window: keep the trailing window
+            ks = ks[:, :, S - S_buf:]
+            vs = vs[:, :, S - S_buf:]
+        W = min(S, S_buf)
+        if cfg.kv_quant:
+            kq, kscale = _quantize(ks)
+            vq, vscale = _quantize(vs)
+            cache["k"] = cache["k"].at[:, :, :W].set(kq)
+            cache["v"] = cache["v"].at[:, :, :W].set(vq)
+            cache["k_scale"] = cache["k_scale"].at[:, :, :W].set(kscale)
+            cache["v_scale"] = cache["v_scale"].at[:, :, :W].set(vscale)
+        else:
+            cache["k"] = cache["k"].at[:, :, :W].set(
+                ks.astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, :, :W].set(
+                vs.astype(cache["v"].dtype))
+        new_len = (kv_len if kv_len is not None
+                   else jnp.full((B,), S, jnp.int32))
+        cache["len"] = new_len
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        last = jnp.take_along_axis(
+            x, (new_len - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0] \
+            if kv_len is not None else x[:, -1]
+        return _unembed(p, last), cache
+
+    def decode(p, tokens, cache):
+        B = tokens.shape[0]
+        x = p["embed"][tokens.reshape(B, 1)]
+        cur = cache["len"]  # absolute position of the new token
+        S_buf = cache["k"].shape[2]
+        ring = cache["window"] > 0
+        write_idx = jnp.where(ring, cur % S_buf, jnp.minimum(cur, S_buf - 1))
+        kv_len = jnp.minimum(cur + 1, S_buf)
+        positions = _positions_for(cfg, B, 1, offset=cur)
+
+        # cache lives in the scan CARRY (updated in place per layer) so XLA
+        # keeps ONE buffer instead of double-buffering scan xs->ys
+        if cfg.kv_quant:
+            def scan_fn(carry, lp_i):
+                x, ks, vs, ksc, vsc = carry
+                lp, i = lp_i
+                take = lambda a: jax.lax.dynamic_index_in_dim(
+                    a, i, 0, keepdims=False)
+                kc = _dequantize(take(ks), take(ksc))
+                vc = _dequantize(take(vs), take(vsc))
+                x, kc, vc = block_decode(cfg, lp, x, kc, vc, kv_len,
+                                         positions, write_idx)
+                # requantize only the newly written row
+                b = jnp.arange(B)
+                kq, kscale = _quantize(kc[b, write_idx])
+                vq, vscale = _quantize(vc[b, write_idx])
+                put = jax.lax.dynamic_update_index_in_dim
+                ks = put(ks, take(ks).at[b, write_idx].set(kq), i, 0)
+                vs = put(vs, take(vs).at[b, write_idx].set(vq), i, 0)
+                ksc = put(ksc, take(ksc).at[b, write_idx].set(kscale), i, 0)
+                vsc = put(vsc, take(vsc).at[b, write_idx].set(vscale), i, 0)
+                return (x, ks, vs, ksc, vsc), None
+
+            (x, ks, vs, ksc, vsc), _ = jax.lax.scan(
+                scan_fn,
+                (x, cache["k"], cache["v"], cache["k_scale"],
+                 cache["v_scale"]),
+                (p["layers"], jnp.arange(cfg.n_layers)))
+            cache.update(k=ks, v=vs, k_scale=ksc, v_scale=vsc)
+        else:
+            def scan_fn(carry, lp_i):
+                x, ks, vs = carry
+                lp, i = lp_i
+                kc = jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False)
+                x, kc, vc = block_decode(cfg, lp, x, kc, vc, kv_len,
+                                         positions, write_idx)
+                ks = jax.lax.dynamic_update_index_in_dim(ks, kc, i, 0)
+                vs = jax.lax.dynamic_update_index_in_dim(vs, vc, i, 0)
+                return (x, ks, vs), None
+
+            (x, ks, vs), _ = jax.lax.scan(
+                scan_fn, (x, cache["k"], cache["v"]),
+                (p["layers"], jnp.arange(cfg.n_layers)))
+            cache["k"], cache["v"] = ks, vs
+        cache["len"] = cur + 1
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _unembed(p, x[:, 0]), cache
+
+    return Model(cfg, init, train_logits, prefill, decode, init_cache)
+
+
+# ===========================================================================
+# encoder-decoder (whisper backbone)
+# ===========================================================================
+
+def _encdec_model(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init_enc_layer(key):
+        ka, km, kn = jax.random.split(key, 3)
+        return {
+            "attn_norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+            "attn": layers.init_attention(cfg, ka, dtype),
+            "mlp_norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+            "mlp": layers.init_mlp(cfg, km, dtype),
+        }
+
+    def init_dec_layer(key):
+        ka, kc, km, kn = jax.random.split(key, 4)
+        return {
+            "attn_norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+            "attn": layers.init_attention(cfg, ka, dtype),
+            "cross_norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+            "cross": layers.init_attention(cfg, kc, dtype),
+            "mlp_norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+            "mlp": layers.init_mlp(cfg, km, dtype),
+        }
+
+    def init(rng):
+        ke, k1, k2, kh = jax.random.split(rng, 4)
+        return {
+            "embed": layers.embed_init(ke, cfg.padded_vocab, cfg.d_model, dtype),
+            "enc_layers": _stack_init(init_enc_layer, k1, cfg.n_encoder_layers),
+            "dec_layers": _stack_init(init_dec_layer, k2, cfg.n_layers),
+            "enc_norm": layers.init_norm(cfg, kh, cfg.d_model, dtype),
+            "final_norm": layers.init_norm(cfg, kh, cfg.d_model, dtype),
+        }
+
+    def encode(p, enc_embeds):
+        B, T, _ = enc_embeds.shape
+        pos = _positions_for(cfg, B, T)
+        x = enc_embeds.astype(dtype) \
+            + layers.sinusoid_pos_emb(pos, cfg.d_model).astype(dtype)
+
+        def scan_fn(x, lp):
+            x = constrain_compute(x)
+            h = layers.apply_norm(cfg, lp["attn_norm"], x)
+            a, _ = layers.self_attention(cfg, lp["attn"], h, pos, causal=False)
+            x = x + a
+            h = layers.apply_norm(cfg, lp["mlp_norm"], x)
+            return constrain(x + layers.mlp(cfg, lp["mlp"], h)), None
+
+        x, _ = jax.lax.scan(scan_fn, x, p["enc_layers"])
+        return layers.apply_norm(cfg, p["enc_norm"], x)
+
+    def _dec_embed(p, tokens, offset=0):
+        B, S = tokens.shape
+        pos = _positions_for(cfg, B, S, offset)
+        return (p["embed"][tokens]
+                + layers.sinusoid_pos_emb(pos, cfg.d_model).astype(dtype)), pos
+
+    def train_logits(p, batch, remat=True):
+        enc = encode(p, batch["enc_embeds"])
+        x, pos = _dec_embed(p, batch["tokens"])
+
+        def scan_fn(x, lp):
+            x = constrain_compute(x)
+            h = layers.apply_norm(cfg, lp["attn_norm"], x)
+            a, _ = layers.self_attention(cfg, lp["attn"], h, pos, causal=True)
+            x = x + a
+            h = layers.apply_norm(cfg, lp["cross_norm"], x)
+            ck, cv = layers.cross_kv(cfg, lp["cross"], enc)
+            x = x + layers.cross_attention(cfg, lp["cross"], h, ck, cv)
+            h = layers.apply_norm(cfg, lp["mlp_norm"], x)
+            return constrain(x + layers.mlp(cfg, lp["mlp"], h)), None
+
+        if remat:
+            scan_fn = jax.checkpoint(scan_fn)
+        x, _ = jax.lax.scan(scan_fn, x, p["dec_layers"])
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _mask_pad_logits(cfg, x @ p["embed"].T), {}
+
+    def init_cache(B, cache_len, cache_dtype=None):
+        cd = jnp.dtype(cache_dtype or cfg.dtype)
+        hd = cfg.resolved_head_dim
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, B, cache_len, cfg.n_kv_heads, hd), cd),
+            "v": jnp.zeros((L, B, cache_len, cfg.n_kv_heads, hd), cd),
+            "ck": jnp.zeros((L, B, cfg.encoder_len, cfg.n_kv_heads, hd), cd),
+            "cv": jnp.zeros((L, B, cfg.encoder_len, cfg.n_kv_heads, hd), cd),
+            "len": jnp.zeros((B,), jnp.int32),
+            "window": jnp.array(0, jnp.int32),
+        }
+
+    def prefill(p, batch, cache):
+        enc = encode(p, batch["enc_embeds"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x, pos = _dec_embed(p, tokens)
+
+        def scan_fn(x, lp):
+            x = constrain_compute(x)
+            h = layers.apply_norm(cfg, lp["attn_norm"], x)
+            a, kv = layers.self_attention(cfg, lp["attn"], h, pos, causal=True)
+            x = x + a
+            h = layers.apply_norm(cfg, lp["cross_norm"], x)
+            ck, cv = layers.cross_kv(cfg, lp["cross"], enc)
+            x = x + layers.cross_attention(cfg, lp["cross"], h, ck, cv)
+            h = layers.apply_norm(cfg, lp["mlp_norm"], x)
+            return constrain(x + layers.mlp(cfg, lp["mlp"], h)), (constrain_kv(kv), (ck, cv))
+
+        x, (kvs, ckvs) = jax.lax.scan(scan_fn, x, p["dec_layers"])
+        cache["k"] = cache["k"].at[:, :, :S].set(kvs[0].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :, :S].set(kvs[1].astype(cache["v"].dtype))
+        cache["ck"] = ckvs[0].astype(cache["ck"].dtype)
+        cache["cv"] = ckvs[1].astype(cache["cv"].dtype)
+        cache["len"] = jnp.full((B,), S, jnp.int32)
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _mask_pad_logits(cfg, x[:, -1] @ p["embed"].T), cache
+
+    def decode(p, tokens, cache):
+        B = tokens.shape[0]
+        cur = cache["len"]
+        x, pos = _dec_embed(p, tokens.reshape(B, 1), offset=cur)
+        S_buf = cache["k"].shape[2]
+        write_idx = jnp.minimum(cur, S_buf - 1)
+        kv_len = jnp.minimum(cur + 1, S_buf)
+
+        def scan_fn(carry, lp_i):
+            x, ks, vs = carry
+            lp, ck, cv, i = lp_i
+            kc = jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False)
+            h = layers.apply_norm(cfg, lp["attn_norm"], x)
+            q, k, v = layers.decode_self_attention(cfg, lp["attn"], h, kc, vc,
+                                                   kv_len, pos)
+            kc, vc = _write_kv(kc, vc, k, v, write_idx)
+            o = ops.decode_attention(q, kc, vc, kv_len)
+            x = x + layers.attn_out(cfg, lp["attn"], o)
+            h = layers.apply_norm(cfg, lp["cross_norm"], x)
+            x = x + layers.cross_attention(cfg, lp["cross"], h, ck, cv)
+            h = layers.apply_norm(cfg, lp["mlp_norm"], x)
+            x = x + layers.mlp(cfg, lp["mlp"], h)
+            ks = jax.lax.dynamic_update_index_in_dim(ks, kc, i, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(vs, vc, i, 0)
+            return (x, ks, vs), None
+
+        (x, ks, vs), _ = jax.lax.scan(
+            scan_fn, (x, cache["k"], cache["v"]),
+            (p["dec_layers"], cache["ck"], cache["cv"],
+             jnp.arange(cfg.n_layers)))
+        cache["k"], cache["v"] = ks, vs
+        cache["len"] = cur + 1
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _mask_pad_logits(cfg, x[:, 0] @ p["embed"].T), cache
+
+    return Model(cfg, init, train_logits, prefill, decode, init_cache)
+
+
+# ===========================================================================
+# hybrid (zamba2: mamba2 backbone + one shared attention/MLP block)
+# ===========================================================================
+
+def _hybrid_model(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+    per_sb = cfg.hybrid_attn_every
+    assert cfg.n_layers % per_sb == 0
+    n_sb = cfg.n_layers // per_sb  # superblocks, each: shared-attn + k mamba
+
+    def init_mamba_layer(key):
+        kn, km = jax.random.split(key)
+        return {
+            "norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+            "mamba": ssm.init_mamba(cfg, km, dtype),
+        }
+
+    def init(rng):
+        ke, km, ka, kf, kh = jax.random.split(rng, 5)
+        sb_init = lambda k: _stack_init(init_mamba_layer, k, per_sb)
+        return {
+            "embed": layers.embed_init(ke, cfg.padded_vocab, cfg.d_model, dtype),
+            "mamba_sb": _stack_init(sb_init, km, n_sb),  # (n_sb, per_sb, ...)
+            "shared_attn": {
+                "attn_norm": layers.init_norm(cfg, ka, cfg.d_model, dtype),
+                "attn": layers.init_attention(cfg, ka, dtype),
+                "mlp_norm": layers.init_norm(cfg, kf, cfg.d_model, dtype),
+                "mlp": layers.init_mlp(cfg, kf, dtype),
+            },
+            "final_norm": layers.init_norm(cfg, kh, cfg.d_model, dtype),
+            "lm_head": layers.dense_init(kh, cfg.d_model, cfg.padded_vocab,
+                                         dtype),
+        }
+
+    def _shared_attn_full(p, x, pos, window, kv_len=None):
+        sp = p["shared_attn"]
+        h = layers.apply_norm(cfg, sp["attn_norm"], x)
+        a, kv = layers.self_attention(cfg, sp["attn"], h, pos, causal=True,
+                                      window=window, kv_len=kv_len)
+        x = x + a
+        h = layers.apply_norm(cfg, sp["mlp_norm"], x)
+        return x + layers.mlp(cfg, sp["mlp"], h), kv
+
+    def train_logits(p, batch, remat=True):
+        x = p["embed"][batch["tokens"]]
+        B, S = x.shape[:2]
+        pos = _positions_for(cfg, B, S)
+        window = cfg.sliding_window if S > cfg.sliding_window > 0 else 0
+
+        def sb_fn(x, sb_params):
+            x, _ = _shared_attn_full(p, constrain_compute(x), pos, window)
+
+            def mamba_fn(x, lp):
+                h = layers.apply_norm(cfg, lp["norm"], x)
+                out, _ = ssm.mamba_forward(cfg, lp["mamba"], h)
+                return x + out, None
+
+            x, _ = jax.lax.scan(mamba_fn, x, sb_params)
+            return constrain(x), None
+
+        if remat:
+            sb_fn = jax.checkpoint(sb_fn)
+        x, _ = jax.lax.scan(sb_fn, x, p["mamba_sb"])
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _mask_pad_logits(cfg, x @ p["lm_head"]), {}
+
+    def init_cache(B, cache_len, cache_dtype=None):
+        cd = jnp.dtype(cache_dtype or cfg.dtype)
+        hd = cfg.resolved_head_dim
+        d_in, H, P, N, G = ssm.mamba_dims(cfg)
+        conv_ch = d_in + 2 * G * N
+        K = cfg.ssm.conv_dim
+        return {
+            "k": jnp.zeros((n_sb, B, cache_len, cfg.n_kv_heads, hd), cd),
+            "v": jnp.zeros((n_sb, B, cache_len, cfg.n_kv_heads, hd), cd),
+            "ssm_state": jnp.zeros((n_sb, per_sb, B, H, N, P), jnp.float32),
+            "conv": jnp.zeros((n_sb, per_sb, B, K - 1, conv_ch), cd),
+            "len": jnp.zeros((B,), jnp.int32),
+            "window": jnp.array(
+                cache_len if cfg.sliding_window and
+                cache_len <= cfg.sliding_window else 0, jnp.int32),
+        }
+
+    def prefill(p, batch, cache):
+        x = p["embed"][batch["tokens"]]
+        B, S = x.shape[:2]
+        pos = _positions_for(cfg, B, S)
+        S_buf = cache["k"].shape[2]
+        window = cfg.sliding_window if S > S_buf else 0
+
+        def sb_fn(x, sb):
+            sb_params = sb
+            x, kv = _shared_attn_full(p, constrain_compute(x), pos, window)
+
+            def mamba_fn(x, lp):
+                h = layers.apply_norm(cfg, lp["norm"], x)
+                out, st = ssm.mamba_forward(cfg, lp["mamba"], h)
+                return x + out, st
+
+            x, states = jax.lax.scan(mamba_fn, x, sb_params)
+            return constrain(x), (constrain_kv(kv), states)
+
+        x, (kvs, states) = jax.lax.scan(sb_fn, x, p["mamba_sb"])
+        ks, vs = kvs
+        if S <= S_buf:
+            cache["k"] = cache["k"].at[:, :, :S].set(ks.astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, :, :S].set(vs.astype(cache["v"].dtype))
+        else:
+            cache["k"] = ks[:, :, S - S_buf:].astype(cache["k"].dtype)
+            cache["v"] = vs[:, :, S - S_buf:].astype(cache["v"].dtype)
+        cache["ssm_state"] = states[0]
+        cache["conv"] = states[1].astype(cache["conv"].dtype)
+        cache["len"] = jnp.full((B,), S, jnp.int32)
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _mask_pad_logits(cfg, x[:, -1] @ p["lm_head"]), cache
+
+    def decode(p, tokens, cache):
+        B = tokens.shape[0]
+        x = p["embed"][tokens.reshape(B, 1)]
+        cur = cache["len"]
+        S_buf = cache["k"].shape[2]
+        ring = cache["window"] > 0
+        write_idx = jnp.where(ring, cur % S_buf, jnp.minimum(cur, S_buf - 1))
+        kv_len = jnp.minimum(cur + 1, S_buf)
+        pos = _positions_for(cfg, B, 1, offset=cur)
+        sp = p["shared_attn"]
+
+        def sb_fn(carry, sb):
+            x, ks, vs = carry
+            sb_params, sstate, sconv, i = sb
+            kc = jax.lax.dynamic_index_in_dim(ks, i, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(vs, i, 0, keepdims=False)
+            h = layers.apply_norm(cfg, sp["attn_norm"], x)
+            q, k, v = layers.decode_self_attention(cfg, sp["attn"], h, kc, vc,
+                                                   kv_len, pos)
+            kc, vc = _write_kv(kc, vc, k, v, write_idx)
+            o = ops.decode_attention(q, kc, vc, kv_len)
+            x = x + layers.attn_out(cfg, sp["attn"], o)
+            h = layers.apply_norm(cfg, sp["mlp_norm"], x)
+            x = x + layers.mlp(cfg, sp["mlp"], h)
+            ks = jax.lax.dynamic_update_index_in_dim(ks, kc, i, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(vs, vc, i, 0)
+
+            def mamba_fn(x, lp_state):
+                lp, st, cv_ = lp_state
+                h = layers.apply_norm(cfg, lp["norm"], x)
+                out, (st, cv_) = ssm.mamba_decode(cfg, lp["mamba"], h, st, cv_)
+                return x + out, (st, cv_)
+
+            x, (sstate, sconv) = jax.lax.scan(mamba_fn, x,
+                                              (sb_params, sstate, sconv))
+            return (x, ks, vs), (sstate, sconv)
+
+        (x, ks, vs), (states, convs) = jax.lax.scan(
+            sb_fn, (x, cache["k"], cache["v"]),
+            (p["mamba_sb"], cache["ssm_state"], cache["conv"],
+             jnp.arange(n_sb)))
+        cache["k"], cache["v"] = ks, vs
+        cache["ssm_state"], cache["conv"] = states, convs
+        cache["len"] = cur + 1
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _mask_pad_logits(cfg, x[:, 0] @ p["lm_head"]), cache
+
+    return Model(cfg, init, train_logits, prefill, decode, init_cache)
+
+
+# ===========================================================================
+# xLSTM (superblocks of (k-1) mLSTM + 1 sLSTM)
+# ===========================================================================
+
+def _xlstm_model(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+    per_sb = cfg.xlstm_slstm_every
+    assert cfg.n_layers % per_sb == 0
+    n_sb = cfg.n_layers // per_sb
+    n_m = per_sb - 1  # mLSTM layers per superblock
+
+    def init_m(key):
+        kn, km = jax.random.split(key)
+        return {"norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+                "mlstm": ssm.init_mlstm(cfg, km, dtype)}
+
+    def init_s(key):
+        kn, ks_ = jax.random.split(key)
+        return {"norm": layers.init_norm(cfg, kn, cfg.d_model, dtype),
+                "slstm": ssm.init_slstm(cfg, ks_, dtype)}
+
+    def init(rng):
+        ke, km, ks_, kh = jax.random.split(rng, 4)
+        return {
+            "embed": layers.embed_init(ke, cfg.padded_vocab, cfg.d_model, dtype),
+            "mlstm_sb": _stack_init(
+                lambda k: _stack_init(init_m, k, n_m), km, n_sb),
+            "slstm_sb": _stack_init(init_s, ks_, n_sb),
+            "final_norm": layers.init_norm(cfg, kh, cfg.d_model, dtype),
+            "lm_head": layers.dense_init(kh, cfg.d_model, cfg.padded_vocab,
+                                         dtype),
+        }
+
+    def train_logits(p, batch, remat=True):
+        x = p["embed"][batch["tokens"]]
+
+        def sb_fn(x, sb):
+            mp, sp = sb
+            x = constrain_compute(x)
+
+            def m_fn(x, lp):
+                h = layers.apply_norm(cfg, lp["norm"], x)
+                out, _ = ssm.mlstm_forward(cfg, lp["mlstm"], h)
+                return x + out, None
+
+            x, _ = jax.lax.scan(m_fn, x, mp)
+            h = layers.apply_norm(cfg, sp["norm"], x)
+            out, _ = ssm.slstm_forward(cfg, sp["slstm"], h)
+            return constrain(x + out), None
+
+        if remat:
+            sb_fn = jax.checkpoint(sb_fn)
+        x, _ = jax.lax.scan(sb_fn, x, (p["mlstm_sb"], p["slstm_sb"]))
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _mask_pad_logits(cfg, x @ p["lm_head"]), {}
+
+    def init_cache(B, cache_len, cache_dtype=None):
+        d_in, H, hd = ssm.mlstm_dims(cfg)
+        Hs, hds = cfg.n_heads, cfg.d_model // cfg.n_heads
+        return {
+            "mC": jnp.zeros((n_sb, n_m, B, H, hd, hd), jnp.float32),
+            "mn": jnp.zeros((n_sb, n_m, B, H, hd), jnp.float32),
+            "mm": jnp.full((n_sb, n_m, B, H), -1e30, jnp.float32),
+            "sc": jnp.zeros((n_sb, B, Hs, hds), jnp.float32),
+            "sn": jnp.zeros((n_sb, B, Hs, hds), jnp.float32),
+            "sm": jnp.full((n_sb, B, Hs, hds), -10.0, jnp.float32),
+            "sh": jnp.zeros((n_sb, B, Hs, hds), jnp.float32),
+            "len": jnp.zeros((B,), jnp.int32),
+        }
+
+    def _run_with_state(p, x, cache, decode_mode):
+        def sb_fn(x, sb):
+            mp, sp, mC, mn, mm, sc, sn, sm, sh = sb
+            x = constrain_compute(x)
+
+            def m_fn(x, lp_state):
+                lp, C, n, m = lp_state
+                h = layers.apply_norm(cfg, lp["norm"], x)
+                if decode_mode:
+                    out, (C, n, m) = ssm.mlstm_decode(cfg, lp["mlstm"], h,
+                                                      (C, n, m))
+                else:
+                    out, (C, n, m) = ssm.mlstm_forward(cfg, lp["mlstm"], h,
+                                                       state=(C, n, m))
+                return x + out, (C, n, m)
+
+            x, (mC, mn, mm) = jax.lax.scan(m_fn, x, (mp, mC, mn, mm))
+            h = layers.apply_norm(cfg, sp["norm"], x)
+            out, (sc, sn, sm, sh) = ssm.slstm_forward(
+                cfg, sp["slstm"], h, state=(sc, sn, sm, sh))
+            x = constrain(x + out)
+            return x, (mC, mn, mm, sc, sn, sm, sh)
+
+        x, new = jax.lax.scan(
+            sb_fn, x,
+            (p["mlstm_sb"], p["slstm_sb"], cache["mC"], cache["mn"],
+             cache["mm"], cache["sc"], cache["sn"], cache["sm"], cache["sh"]))
+        for key_, val in zip(("mC", "mn", "mm", "sc", "sn", "sm", "sh"), new):
+            cache[key_] = val
+        return x, cache
+
+    def prefill(p, batch, cache):
+        x = p["embed"][batch["tokens"]]
+        B, S = x.shape[:2]
+        x, cache = _run_with_state(p, x, cache, decode_mode=False)
+        cache["len"] = jnp.full((B,), S, jnp.int32)
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _mask_pad_logits(cfg, x[:, -1] @ p["lm_head"]), cache
+
+    def decode(p, tokens, cache):
+        B = tokens.shape[0]
+        x = p["embed"][tokens.reshape(B, 1)]
+        x, cache = _run_with_state(p, x, cache, decode_mode=True)
+        cache["len"] = cache["len"] + 1
+        x = layers.apply_norm(cfg, p["final_norm"], x)
+        return _mask_pad_logits(cfg, x[:, 0] @ p["lm_head"]), cache
+
+    return Model(cfg, init, train_logits, prefill, decode, init_cache)

@@ -1,0 +1,123 @@
+"""Mixture-of-experts FFN: shared experts + routed top-k, Switch-style
+capacity-buffer dispatch (scatter in / gather out).
+
+Covers both assigned MoE archs: deepseek-moe-16b (fine-grained, 64e top-6 +
+2 shared) and llama4-scout (16e top-1 + 1 shared).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import act_sharding, layers
+
+
+def init_moe(cfg: ModelConfig, key, dtype):
+    d, m = cfg.d_model, cfg.moe
+    kr, ke1, ke2, ke3, ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(kr, d, m.n_experts, jnp.float32),
+        # routed experts, stacked on expert axis: (E, d, f) / (E, f, d)
+        "we_gate": jax.vmap(
+            lambda k: layers.dense_init(k, d, m.d_expert, dtype))(
+                jax.random.split(ke1, m.n_experts)),
+        "we_up": jax.vmap(
+            lambda k: layers.dense_init(k, d, m.d_expert, dtype))(
+                jax.random.split(ke2, m.n_experts)),
+        "we_down": jax.vmap(
+            lambda k: layers.dense_init(k, m.d_expert, d, dtype))(
+                jax.random.split(ke3, m.n_experts)),
+    }
+    if m.n_shared:
+        # shared experts fused into one dense SwiGLU of width n_shared*d_expert
+        f = m.n_shared * m.d_expert
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "wg": layers.dense_init(k1, d, f, dtype),
+            "wu": layers.dense_init(k2, d, f, dtype),
+            "wd": layers.dense_init(k3, f, d, dtype),
+        }
+    return p
+
+
+def moe_ffn(cfg: ModelConfig, p, x, *, capacity_factor=1.25, dropless=False):
+    """x: (B, S, d) -> (B, S, d), plus aux dict (load-balance loss terms).
+
+    dropless=True sizes the capacity buffer at T*K (worst case) so no token is
+    ever dropped — used by the serving engine so that layer-wise offloading is
+    provably lossless; training/dry-run use the capacity factor.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    # the (B,S)->T reshape merges a sharded with an unsharded dim; GSPMD
+    # loses the sharding, so re-pin the token axis explicitly
+    xf = act_sharding.constrain_moe_tokens(x.reshape(T, d))
+
+    logits = (xf.astype(jnp.float32) @ p["router"])  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)  # renormalize over top-k
+
+    # --- capacity-buffer dispatch -----------------------------------------
+    # NB: all intermediates stay (T, ...)-shaped and token-sharded; a naive
+    # (T*K, d) gather materializes tens of GiB replicated under GSPMD.
+    C = T * K if dropless else max(1, int(T * K / E * capacity_factor))
+    flat_expert = act_sharding.constrain_moe_tokens(
+        expert_idx.reshape(T * K))
+    onehot = act_sharding.constrain_moe_tokens(
+        jax.nn.one_hot(flat_expert, E, dtype=jnp.int32))  # (T*K, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)  # exclusive cumsum
+    pos = (pos_in_expert * onehot).sum(-1)  # (T*K,)
+    keep = pos < C
+    pos2 = pos.reshape(T, K)
+    keep2 = keep.reshape(T, K)
+
+    # GSPMD partitions payload-scatters poorly (it replicates the (T, d)
+    # updates); instead scatter only an int32 slot->token map and move the
+    # payload with gathers.
+    slot = flat_expert * C + jnp.minimum(pos, C - 1)     # (T*K,)
+    tok_idx = jnp.repeat(jnp.arange(T), K).reshape(T, K).reshape(T * K)
+    slot_src = jnp.full((E * C,), T, jnp.int32)          # T = empty sentinel
+    slot_src = slot_src.at[jnp.where(keep, slot, E * C)].set(
+        tok_idx.astype(jnp.int32), mode="drop")
+    # clamped gather + mask (a (T+1)-row pad table would break even
+    # sharding of the token dim and replicate everything)
+    filled = (slot_src < T)[:, None].astype(x.dtype)
+    buf = xf[jnp.minimum(slot_src, T - 1)] * filled
+    buf = buf.reshape(E, C, d)
+    buf = act_sharding.constrain_moe_buffer(buf)
+
+    # --- expert compute: (E, C, d) x (E, d, f) ------------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["we_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["we_down"])  # (E, C, d)
+    out_buf = act_sharding.constrain_moe_buffer(out_buf)
+
+    # --- combine ------------------------------------------------------------
+    routed = jnp.zeros((T, d), x.dtype)
+    gate2 = gate_vals.astype(x.dtype)
+    flat_out = out_buf.reshape(E * C, d)
+    slot2 = slot.reshape(T, K)
+    for kk in range(K):  # K gathers of (T, d) — never (T*K, d)
+        g = act_sharding.constrain_moe_tokens(flat_out[slot2[:, kk]])
+        routed = routed + g * (gate2[:, kk]
+                               * keep2[:, kk].astype(x.dtype))[:, None]
+
+    out = routed
+    if m.n_shared:
+        out = out + _shared_mlp(p["shared"], xf)
+
+    # load-balance aux (Switch aux loss terms)
+    me = probs.mean(0)                                   # mean router prob
+    ce = jnp.bincount(flat_expert, length=E) / (T * K)   # fraction dispatched
+    aux = {"lb_loss": E * jnp.sum(me * ce),
+           "dropped_frac": 1.0 - keep.mean()}
+    return out.reshape(B, S, d), aux
+
+
+def _shared_mlp(p, xf):
+    return (jax.nn.silu(xf @ p["wg"]) * (xf @ p["wu"])) @ p["wd"]

@@ -1,0 +1,396 @@
+"""Sequence-state models: Mamba2 (SSD), and xLSTM's mLSTM / sLSTM blocks.
+
+Design note for roofline accounting: all quadratic/intra-chunk work is
+computed *in parallel across chunks* (plain einsums, counted by XLA cost
+analysis); only the O(B*H*N*P) elementwise state propagation lives inside
+`lax.scan` bodies, whose trip-count undercounting is negligible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import act_sharding, layers
+
+MAMBA_HEAD_DIM = 64
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def mamba_dims(cfg: ModelConfig):
+    d_in = cfg.ssm.expand * cfg.d_model
+    H = d_in // MAMBA_HEAD_DIM
+    return d_in, H, MAMBA_HEAD_DIM, cfg.ssm.state_dim, cfg.ssm.n_groups
+
+
+def init_mamba(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    d_in, H, P, N, G = mamba_dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        # fused in_proj -> [z(d_in), xBC(d_in+2GN), dt(H)]
+        "w_in": layers.dense_init(k1, d, 2 * d_in + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm.conv_dim, conv_ch))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "w_out": layers.dense_init(k3, d_in, d, dtype),
+    }
+
+
+def _split_zxbcdt(cfg, zxbcdt):
+    d_in, H, P, N, G = mamba_dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * G * N]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, conv_cache=None):
+    """Depthwise causal conv. xBC: (B, S, C); w: (K, C).
+    conv_cache: (B, K-1, C) trailing inputs from the previous call or None.
+    Returns (out, new_cache)."""
+    B, S, C = xBC.shape
+    K = w.shape[0]
+    if conv_cache is None:
+        conv_cache = jnp.zeros((B, K - 1, C), xBC.dtype)
+    xp = jnp.concatenate([conv_cache, xBC], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + S] * w[i] for i in range(K)) + b
+    new_cache = xp[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, C), xBC.dtype)
+    return jax.nn.silu(out), new_cache
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk=128, initial_state=None):
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,) negative;
+    Bm, Cm: (B,S,G,N) with G dividing H. Returns (y, final_state) where
+    state: (B,H,N,P)."""
+    B, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    xr = x.reshape(B, nc, chunk, H, Pd).astype(jnp.float32)
+    dtr = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    Br = Bh.reshape(B, nc, chunk, H, N).astype(jnp.float32)
+    Cr = Ch.reshape(B, nc, chunk, H, N).astype(jnp.float32)
+
+    dA = dtr * A  # (B,nc,Q,H), negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk inclusive cumsum
+
+    # --- intra-chunk (parallel over chunks) --------------------------------
+    # decay L[i,j] = exp(cum_i - cum_j) for i >= j. Mask in LOG space so the
+    # gradient of exp never sees the (overflowing) upper triangle.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -1e30)
+    Lmat = jnp.exp(diff)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cr, Br) * Lmat \
+        * dtr[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xr)
+
+    # --- chunk-local end states -------------------------------------------
+    # state_c = sum_j exp(cum[Q-1] - cum[j]) * dt_j * B_j (x) x_j
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp",
+                        dec_end * dtr, Br, xr)  # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) total decay per chunk
+
+    # --- inter-chunk state propagation (elementwise scan) ------------------
+    s0 = (jnp.zeros((B, H, N, Pd), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        dec, st = inp  # (B,H), (B,H,N,P)
+        s_out = s  # state entering this chunk
+        s = s * dec[..., None, None] + st
+        return s, s_out
+
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,B,H)
+    st_t = jnp.moveaxis(states, 1, 0)        # (nc,B,H,N,P)
+    final_state, entry_states = jax.lax.scan(step, s0, (dec_t, st_t))
+    entry_states = jnp.moveaxis(entry_states, 0, 1)  # (B,nc,H,N,P)
+
+    # --- inter-chunk contribution (parallel) --------------------------------
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         Cr * jnp.exp(cum)[..., None], entry_states)
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y.astype(x.dtype), final_state
+
+
+def mamba_forward(cfg: ModelConfig, p, x, *, state=None, conv_cache=None,
+                  chunk=128):
+    """Full-sequence Mamba2 block. x: (B,S,d). Returns
+    (out, (final_state, conv_cache))."""
+    d_in, H, P, N, G = mamba_dims(cfg)
+    zxbcdt = x @ p["w_in"]
+    z, xBC, dt = _split_zxbcdt(cfg, zxbcdt)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_cache)
+    B_, S = x.shape[0], x.shape[1]
+    xs = xBC[..., :d_in].reshape(B_, S, H, P)
+    Bm = xBC[..., d_in:d_in + G * N].reshape(B_, S, G, N)
+    Cm = xBC[..., d_in + G * N:].reshape(B_, S, G, N)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, fstate = ssd_chunked(xs, dtp, A, Bm, Cm, chunk=chunk,
+                            initial_state=state)
+    y = y + (p["D"][:, None] * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B_, S, d_in)
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["w_out"], (fstate, new_conv)
+
+
+def mamba_decode(cfg: ModelConfig, p, x, state, conv_cache):
+    """Single-token recurrent step. x: (B,1,d); state: (B,H,N,P);
+    conv_cache: (B,K-1,C). Returns (out, (state, conv_cache))."""
+    d_in, H, P, N, G = mamba_dims(cfg)
+    zxbcdt = x @ p["w_in"]
+    z, xBC, dt = _split_zxbcdt(cfg, zxbcdt)
+    K = p["conv_w"].shape[0]
+    xp = jnp.concatenate([conv_cache, xBC], axis=1)  # (B,K,C)
+    conv_out = jax.nn.silu((xp * p["conv_w"][None]).sum(axis=1)
+                           + p["conv_b"])[:, None]  # (B,1,C)
+    new_conv = xp[:, 1:]
+    B_ = x.shape[0]
+    xs = conv_out[..., :d_in].reshape(B_, H, P)
+    Bm = conv_out[..., d_in:d_in + G * N].reshape(B_, G, N)
+    Cm = conv_out[..., d_in + G * N:].reshape(B_, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dtp * A)  # (B,H)
+    xs32 = xs.astype(jnp.float32)
+    state = state * dec[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtp, Bh.astype(jnp.float32), xs32)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+    y = y + p["D"][:, None] * xs32
+    y = y.reshape(B_, 1, d_in).astype(x.dtype)
+    y = layers.rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["w_out"], (state, new_conv)
+
+
+# ===========================================================================
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory)
+# ===========================================================================
+
+def mlstm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm.expand * cfg.d_model
+    H = cfg.n_heads
+    return d_in, H, d_in // H
+
+
+def init_mlstm(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    d_in, H, hd = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": layers.dense_init(ks[0], d, 2 * d_in, dtype),  # [x_path, z gate]
+        "wq": layers.dense_init(ks[1], d_in, d_in, dtype),
+        "wk": layers.dense_init(ks[2], d_in, d_in, dtype),
+        "wv": layers.dense_init(ks[3], d_in, d_in, dtype),
+        "w_i": layers.dense_init(ks[4], d_in, H, jnp.float32),
+        "w_f": layers.dense_init(ks[5], d_in, H, jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # bias toward remembering
+        "norm_w": jnp.ones((d_in,), dtype),
+        "w_down": layers.dense_init(ks[6], d_in, d, dtype),
+    }
+
+
+def _mlstm_core_chunked(q, k, v, ig, fg, *, chunk=128, state=None):
+    """Chunkwise stabilized mLSTM. q,k,v: (B,S,H,hd); ig,fg: (B,S,H) raw gate
+    pre-activations. state: (C, n, m) with C: (B,H,hd,hd), n: (B,H,hd),
+    m: (B,H). Returns (h, state)."""
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    scale = hd ** -0.5
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, nc, chunk, H, hd)
+    kf = k.astype(jnp.float32).reshape(B, nc, chunk, H, hd)
+    vf = v.astype(jnp.float32).reshape(B, nc, chunk, H, hd)
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32)).reshape(B, nc, chunk, H)
+    logi = ig.astype(jnp.float32).reshape(B, nc, chunk, H)
+    cumf = jnp.cumsum(logf, axis=2)  # inclusive within-chunk
+
+    # per-position source strength for key j: a_j = cumf_end - cumf_j + logi_j
+    # intra decay: D[i,j] = cumf_i - cumf_j + logi_j (i >= j)
+    diff = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] \
+        + logi[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = jnp.where(mask[None, None, :, :, None], diff, -1e30)
+    # inter decay for query i: b_i = cumf_i + m_prev (handled via scan below)
+    chunk_f = cumf[:, :, -1, :]  # (B,nc,H) total log-forget per chunk
+    # chunk-local state contribution (unstabilized exponents relative to
+    # chunk end): s_j = cumf_end - cumf_j + logi_j
+    s_end = chunk_f[:, :, None, :] - cumf + logi  # (B,nc,Q,H)
+    m_loc = jnp.max(s_end, axis=2)  # (B,nc,H) local stabilizer
+    w_end = jnp.exp(s_end - m_loc[:, :, None, :])
+    C_loc = act_sharding.constrain_state(
+        jnp.einsum("bcjh,bcjhd,bcjhe->bchde", w_end, kf, vf))
+    n_loc = jnp.einsum("bcjh,bcjhd->bchd", w_end, kf)
+
+    # --- inter-chunk scan over (C, n, m) — elementwise only -----------------
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        cf, ml, Cl, nl = inp  # chunk_f, m_loc, C_loc, n_loc for this chunk
+        entry = (C, n, m)
+        m_new = jnp.maximum(cf + m, ml)
+        w_old = jnp.exp(cf + m - m_new)
+        w_new = jnp.exp(ml - m_new)
+        C = C * w_old[..., None, None] + Cl * w_new[..., None, None]
+        n = n * w_old[..., None] + nl * w_new[..., None]
+        return (C, n, m_new), entry
+
+    inp = (jnp.moveaxis(chunk_f, 1, 0), jnp.moveaxis(m_loc, 1, 0),
+           jnp.moveaxis(C_loc, 1, 0), jnp.moveaxis(n_loc, 1, 0))
+    (Cf, nf, mf), entries = jax.lax.scan(step, (C0, n0, m0), inp)
+    C_in = act_sharding.constrain_state(
+        jnp.moveaxis(entries[0], 0, 1))  # (B,nc,H,hd,hd) chunk-entry state
+    n_in = jnp.moveaxis(entries[1], 0, 1)
+    m_in = jnp.moveaxis(entries[2], 0, 1)  # (B,nc,H)
+
+    # --- combine intra + inter (parallel) -----------------------------------
+    # query-side stabilizer: m_i = max(max_j diff[i,j], cumf_i + m_in)
+    m_intra = jnp.max(diff, axis=3)  # (B,nc,Qi,H)
+    b_i = cumf + m_in[:, :, None, :]  # (B,nc,Qi,H)
+    m_i = jnp.maximum(m_intra, b_i)
+    m_i = jnp.maximum(m_i, -1e30)  # guard -inf (empty context, zero state)
+    w_intra = jnp.exp(diff - m_i[:, :, :, None, :])  # (B,nc,Qi,Qj,H)
+    scores = jnp.einsum("bcihd,bcjhd->bcijh", qf, kf) * w_intra
+    h_intra = jnp.einsum("bcijh,bcjhe->bcihe", scores, vf)
+    n_intra = jnp.einsum("bcijh,bcjhd->bcihd", w_intra, kf)
+    # inter: decays exp(b_i - m_i) applied to entry state
+    w_inter = jnp.exp(b_i - m_i)  # (B,nc,Qi,H)
+    h_inter = jnp.einsum("bcihd,bchde->bcihe", qf, C_in) \
+        * w_inter[..., None]
+    n_inter = n_in[:, :, None] * w_inter[..., None]  # (B,nc,Qi,H,hd)
+
+    h_num = h_intra + h_inter
+    n_tot = jnp.einsum("bcihd,bcihd->bcih", qf, n_intra + n_inter)
+    denom = jnp.maximum(jnp.abs(n_tot), jnp.exp(-m_i))  # xLSTM normalizer
+    h = h_num / denom[..., None]
+    h = h.reshape(B, S, H, hd)
+    return h.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_forward(cfg: ModelConfig, p, x, *, state=None, chunk=128):
+    """x: (B,S,d) -> (out, state)."""
+    d_in, H, hd = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    up = x @ p["w_up"]
+    xi, z = up[..., :d_in], up[..., d_in:]
+    q = (xi @ p["wq"]).reshape(B, S, H, hd)
+    k = (xi @ p["wk"]).reshape(B, S, H, hd)
+    v = (xi @ p["wv"]).reshape(B, S, H, hd)
+    ig = xi.astype(jnp.float32) @ p["w_i"] + p["b_i"]
+    fg = xi.astype(jnp.float32) @ p["w_f"] + p["b_f"]
+    h, new_state = _mlstm_core_chunked(q, k, v, ig, fg, chunk=chunk,
+                                       state=state)
+    h = h.reshape(B, S, d_in)
+    h = layers.rmsnorm(h * jax.nn.silu(z), p["norm_w"])
+    return h @ p["w_down"], new_state
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, state):
+    """One-token recurrent mLSTM step (exact recurrence)."""
+    d_in, H, hd = mlstm_dims(cfg)
+    B = x.shape[0]
+    up = x @ p["w_up"]
+    xi, z = up[..., :d_in], up[..., d_in:]
+    q = (xi @ p["wq"]).reshape(B, H, hd).astype(jnp.float32) * hd ** -0.5
+    k = (xi @ p["wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (xi @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    ig = (xi.astype(jnp.float32) @ p["w_i"] + p["b_i"])[:, 0]  # (B,H)
+    fg = (xi.astype(jnp.float32) @ p["w_f"] + p["b_f"])[:, 0]
+    C, n, m = state
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m, ig)
+    w_old = jnp.exp(logf + m - m_new)
+    w_new = jnp.exp(ig - m_new)
+    C = C * w_old[..., None, None] + w_new[..., None, None] \
+        * (k[..., :, None] * v[..., None, :])
+    n = n * w_old[..., None] + w_new[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, d_in).astype(x.dtype)
+    h = layers.rmsnorm(h * jax.nn.silu(z), p["norm_w"])
+    return h @ p["w_down"], (C, n, m_new)
+
+
+def init_slstm(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": layers.dense_init(ks[0], d, 4 * d, dtype),  # i,f,z,o
+        # block-diagonal recurrent weights per head: (4, H, hd, hd)
+        "r_gates": (jax.random.normal(ks[1], (4, H, hd, hd)) * 0.02
+                    ).astype(jnp.float32),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))
+        ]).astype(jnp.float32),
+        "norm_w": jnp.ones((d,), dtype),
+        "w_out": layers.dense_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_forward(cfg: ModelConfig, p, x, *, state=None):
+    """Sequential sLSTM over the full sequence. x: (B,S,d).
+    state: (c, n, m, h) each (B, H, hd) except m: (B, H, hd)."""
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    B, S, _ = x.shape
+    pre = (x @ p["w_gates"]).astype(jnp.float32) + p["b_gates"]  # (B,S,4d)
+    pre = pre.reshape(B, S, 4, H, hd)
+    if state is None:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        state = (z, z, z - 10.0, z)  # c, n, m, h
+
+    def step(carry, pre_t):
+        c, n, m, h = carry
+        rec = jnp.einsum("ghde,bhd->bghe", p["r_gates"], h)  # (B,4,H,hd)
+        g = pre_t + rec
+        ig, fg, zg, og = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        logf = jax.nn.log_sigmoid(fg)
+        m_new = jnp.maximum(logf + m, ig)
+        i_p = jnp.exp(ig - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(zg)
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h), h
+
+    pre_t = jnp.moveaxis(pre, 1, 0)  # (S,B,4,H,hd)
+    new_state, hs = jax.lax.scan(step, state, pre_t)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    hs = layers.rmsnorm(hs, p["norm_w"])
+    return hs @ p["w_out"], new_state
+
+
+def slstm_decode(cfg: ModelConfig, p, x, state):
+    out, new_state = slstm_forward(cfg, p, x, state=state)
+    return out, new_state

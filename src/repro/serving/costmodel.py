@@ -1,0 +1,102 @@
+"""Analytic serving cost model (paper Eq. 3 / Eq. 4) + hardware profiles.
+
+Used by (a) the SLO-aware scheduler's admission decisions — exactly as the
+paper does on real hardware — and (b) the discrete-event simulator that
+reproduces the paper-scale figures on this CPU-only container.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HWProfile:
+    name: str
+    flops_per_s: float          # dense (bf16/fp16) peak per chip
+    hbm_bw: float               # bytes/s per chip
+    offload_bw: float           # bytes/s host<->device (PCIe or host DMA)
+    ici_bw: float               # bytes/s per inter-chip link (collectives)
+    mem_bytes: float            # device memory per chip
+    f_precision: int = 2        # KV cache bytes per element
+
+    def scaled(self, tp: int) -> "HWProfile":
+        """Tensor-parallel aggregate view over `tp` chips. Offload bandwidth:
+        the paper's testbed shares one PCIe link per two GPUs; we expose
+        aggregate = offload_bw * tp (each shard moves its own KV slice)."""
+        return dataclasses.replace(
+            self, name=f"{self.name}x{tp}",
+            flops_per_s=self.flops_per_s * tp,
+            hbm_bw=self.hbm_bw * tp,
+            offload_bw=self.offload_bw * tp,
+            mem_bytes=self.mem_bytes * tp)
+
+
+# NVIDIA L20 (the paper's testbed): 119.5 TFLOP/s FP16, 864 GB/s GDDR6,
+# 48 GB; PCIe Gen4 x16 shared by two GPUs -> ~16 GB/s effective per GPU.
+L20 = HWProfile("L20", 119.5e12, 864e9, 16e9, 64e9, 48e9)
+
+# TPU v5e (our deployment target).
+TPU_V5E = HWProfile("TPUv5e", 197e12, 819e9, 100e9, 50e9, 16e9)
+
+PROFILES = {"L20": L20, "TPUv5e": TPU_V5E}
+
+
+@dataclasses.dataclass
+class CostModel:
+    cfg: ModelConfig
+    hw: HWProfile
+    alpha: float = 1.15         # Eq.3 empirical correction (profiling fudge)
+    beta: float = 1.1           # Eq.4 empirical correction
+    mfu_prefill: float = 0.55   # achievable fraction of peak in prefill
+    mbu_decode: float = 0.70    # achievable fraction of HBM bw in decode
+
+    # ------------------------------------------------------------------ Eq.3
+    def prefill_time(self, seqlen: int) -> float:
+        """T_prefill = alpha * seqlen * (2 n_param + 2 seqlen n_hidden)
+        / FLOPs  (paper Eq. 3), with FLOPs derated by achievable MFU."""
+        n_param = self.cfg.active_param_count()
+        n_hidden = self.cfg.d_model
+        flops = 2 * n_param + 2 * seqlen * n_hidden
+        return self.alpha * seqlen * flops / (
+            self.hw.flops_per_s * self.mfu_prefill)
+
+    # ------------------------------------------------------------------ Eq.4
+    def kv_bytes(self, seqlen: int, n_layers: int | None = None) -> int:
+        """KV bytes for `seqlen` tokens across `n_layers` attention layers
+        (default: all of them). 2 * d_heads * n_heads * f_precision per
+        token-layer, with GQA heads."""
+        L = self.cfg.n_attention_layers() if n_layers is None else n_layers
+        hd = self.cfg.resolved_head_dim
+        return int(2 * L * self.cfg.n_kv_heads * hd * self.hw.f_precision
+                   * seqlen)
+
+    def offload_time(self, seqlen: int, n_offload_layers: int) -> float:
+        """T_offload = beta * seqlen * 2 (L-x) d_heads n_heads f / BW."""
+        return self.beta * self.kv_bytes(seqlen, n_offload_layers) \
+            / self.hw.offload_bw
+
+    def min_retained_layers(self, seqlen: int) -> int:
+        """Smallest x with T_offload(L - x) <= T_prefill(seqlen) (paper
+        §3.1.1): retain x layers on device, offload the rest fully hidden
+        under prefill compute."""
+        L = self.cfg.n_attention_layers()
+        t_pre = self.prefill_time(seqlen)
+        for x in range(0, L + 1):
+            if self.offload_time(seqlen, L - x) <= t_pre:
+                return x
+        return L
+
+    # ---------------------------------------------------------------- decode
+    def decode_step_time(self, batch_size: int, avg_ctx: int,
+                         host_kv_bytes: float = 0.0) -> float:
+        """One decode iteration for a running batch. Memory-bound: stream
+        active params once + the batch's KV; `host_kv_bytes` of KV resident
+        on the host streams over the offload link overlapped with compute
+        (paper §4), so the step takes max(HBM-bound compute, host reload)."""
+        p_bytes = self.cfg.active_param_count() * self.hw.f_precision
+        kv_total = self.kv_bytes(avg_ctx) * batch_size
+        t_hbm = (p_bytes + kv_total) / (self.hw.hbm_bw * self.mbu_decode)
+        t_reload = host_kv_bytes / self.hw.offload_bw
+        return max(t_hbm, t_reload)

@@ -1,0 +1,274 @@
+"""The LayerKV serving engine: continuous batching over real JAX execution.
+
+Wires the paper's decision components (block manager, offload plans, SLO
+scheduler, Eq.5 forecast) to the `PagedExecutor`. Two policies:
+
+  'vllm'     request-wise: admit a prefill only when device blocks for the
+             whole prompt x all layers are free (baseline).
+  'layerkv'  layer-wise: admit with Eq.4's x retained layers (+1 send
+             buffer); offloaded layers live in the HOST pool and are
+             streamed/promoted back for decode.
+
+The engine clock is virtual (driven by the cost model) so runs are exactly
+reproducible and policy behaviour — not CPU speed — determines metrics;
+generated TOKENS are real model outputs, which is what the losslessness
+tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    DEVICE, HOST, LayerwiseBlockManager, OffloadEngine, PoolExhausted,
+    SLOScheduler, interleave_offload_layers,
+)
+from repro.core.predictor import HistogramPredictor, LengthPredictor
+from repro.serving.costmodel import CostModel, HWProfile, TPU_V5E
+from repro.serving.executor import PagedExecutor
+from repro.serving.request import Phase, Request
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    policy: str = "layerkv"
+    slo_aware: bool = True
+    num_device_blocks: int = 128
+    num_host_blocks: int = 1024
+    block_size: int = 16
+    max_batch_size: int = 64
+    max_tokens_per_request: int = 4096
+
+
+class LayerKVEngine:
+    def __init__(self, cfg: ModelConfig, params=None,
+                 ec: Optional[EngineConfig] = None,
+                 hw: HWProfile = TPU_V5E,
+                 predictor: Optional[LengthPredictor] = None, rng=None):
+        self.cfg = cfg
+        self.ec = ec or EngineConfig()
+        self.ex = PagedExecutor(cfg, params, self.ec.num_device_blocks,
+                                self.ec.num_host_blocks, self.ec.block_size,
+                                rng=rng)
+        self.L = cfg.n_layers
+        self.bm = LayerwiseBlockManager(self.ec.num_device_blocks,
+                                        self.ec.num_host_blocks,
+                                        self.ec.block_size, self.L)
+        self.cost = CostModel(cfg, hw)
+        self.off = OffloadEngine(self.cost, self.L)
+        self.predictor = predictor or HistogramPredictor(
+            [16, 32, 64, 128, 256])
+        self.sched = SLOScheduler(self.cost, self.predictor)
+        self.now = 0.0
+        self.waiting: deque[Request] = deque()
+        self.decoding: List[Request] = []
+        self.done: List[Request] = []
+        self.host_layers: Dict[str, int] = {}
+
+    # ------------------------------------------------------------- helpers
+    def _blocks(self, tokens: int) -> int:
+        return self.bm.blocks_for_tokens(tokens)
+
+    def _device_need(self, r: Request) -> int:
+        if self.ec.policy == "vllm":
+            return self._blocks(r.prompt_len) * self.L
+        plan = self.off.plan_for_prompt(r.prompt_len)
+        send_buf = 1 if plan.offload_layers else 0
+        return self._blocks(r.prompt_len) * (plan.x + send_buf)
+
+    # -------------------------------------------------------------- prefill
+    def _do_prefill(self, r: Request) -> bool:
+        per_layer = self._blocks(r.prompt_len)
+        if self.ec.policy == "vllm":
+            retain = list(range(self.L))
+            off = []
+        else:
+            plan = self.off.plan_for_prompt(r.prompt_len)
+            fit = max(self.bm.num_free(DEVICE) // max(per_layer, 1) - 1, 0)
+            retain_n = min(self.L, max(plan.x, fit))
+            off = interleave_offload_layers(self.L, retain_n)
+            retain = [l for l in range(self.L) if l not in set(off)]
+        try:
+            for l in retain:
+                self.bm.alloc_layer(r.rid, l, r.prompt_len, DEVICE)
+            for l in off:
+                self.bm.alloc_layer(r.rid, l, r.prompt_len, HOST)
+        except PoolExhausted:
+            self.bm.free_request(r.rid)
+            return False
+
+        pad = self._blocks(r.prompt_len) * self.ec.block_size
+        next_tok, k, v = self.ex.prefill(r.prompt, pad)
+        for l in retain:
+            a = self.bm.allocation(r.rid, l)
+            self.ex.write_layer("device", a.blocks, k[l], v[l])
+        for l in off:
+            a = self.bm.allocation(r.rid, l)
+            self.ex.write_layer("host", a.blocks, k[l], v[l])
+        if off:
+            from repro.core import OffloadPlan
+            self.off.prefill_offload_done(
+                self.now, r.prompt_len, OffloadPlan(retain, off, len(retain)))
+        self.host_layers[r.rid] = len(off)
+        self.now += self.cost.prefill_time(r.prompt_len)
+        r.prefill_start = r.prefill_start if r.prefill_start >= 0 else self.now
+        r.first_token_time = self.now
+        r.tokens_out = 1
+        r.generated.append(next_tok)
+        r.phase = Phase.DECODE
+        self.decoding.append(r)
+        return True
+
+    # ------------------------------------------------------ residency mgmt
+    def _ensure_device(self, r: Request) -> bool:
+        """Promote every host-resident layer of r to device (h2d). Returns
+        False when blocks run out (request pauses this iteration)."""
+        for l in self.bm.layers_on(r.rid, HOST):
+            a = self.bm.allocation(r.rid, l)
+            need = len(a.blocks)
+            if self.bm.num_free(DEVICE) < need:
+                return False
+            src, dst = self.bm.move_layer(r.rid, l, DEVICE)
+            self.ex.copy_blocks("host", "device", src, dst)
+            self.off.ledger.submit(
+                self.now, self.cost.kv_bytes(a.num_tokens, 1), "reload")
+        self.host_layers[r.rid] = 0
+        return True
+
+    def _evict_newest(self, exclude=()) -> bool:
+        """Push the newest request's device layers to host to make room."""
+        excl = set(exclude)
+        for r in sorted(self.decoding, key=lambda q: -q.prefill_start):
+            if r.rid in excl:
+                continue
+            dev = self.bm.layers_on(r.rid, DEVICE)
+            if not dev:
+                continue
+            for l in dev:
+                a = self.bm.allocation(r.rid, l)
+                if self.bm.num_free(HOST) < len(a.blocks):
+                    return False
+                src, dst = self.bm.move_layer(r.rid, l, HOST)
+                self.ex.copy_blocks("device", "host", src, dst)
+                self.off.proactive_offload(self.now, a.num_tokens, 1)
+            self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
+            return True
+        return False
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One scheduler iteration. Returns False when fully idle."""
+        # admission
+        admitted = 0
+        if self.waiting:
+            if self.ec.policy == "layerkv" and self.ec.slo_aware:
+                budget_n = self.sched.max_prefills(
+                    list(self.waiting), self.decoding, self.now)
+            else:
+                budget_n = len(self.waiting)
+            while self.waiting and budget_n > 0 and \
+                    len(self.decoding) < self.ec.max_batch_size:
+                r = self.waiting[0]
+                if self.bm.num_free(DEVICE) < self._device_need(r):
+                    break
+                self.waiting.popleft()
+                r.prefill_start = self.now
+                if not self._do_prefill(r):
+                    self.waiting.appendleft(r)
+                    break
+                admitted += 1
+                budget_n -= 1
+        if admitted:
+            return True
+
+        if not self.decoding:
+            return False
+
+        # decode iteration: select runnable requests (device-resident or
+        # promotable + room to grow), most-behind-on-TPOT first
+        sel: List[Request] = []
+        reserved = 0  # growth blocks earmarked for already-selected requests
+        for r in sorted(self.decoding,
+                        key=lambda q: q.tpot_slo - q.current_tpot(self.now)):
+            sel_ids = [q.rid for q in sel] + [r.rid]
+
+            def _need():
+                """Promotion blocks + growth blocks for r this iteration."""
+                need = 0
+                for l in self.bm.layers_on(r.rid, HOST):
+                    a = self.bm.allocation(r.rid, l)
+                    need += len(a.blocks)
+                    if a.num_tokens % self.ec.block_size == 0:
+                        need += 1
+                for l in self.bm.layers_on(r.rid, DEVICE):
+                    a = self.bm.allocation(r.rid, l)
+                    if a.num_tokens % self.ec.block_size == 0:
+                        need += 1
+                return need
+            while self.bm.num_free(DEVICE) - reserved < _need():
+                if not self._evict_newest(exclude=sel_ids):
+                    break
+            if self.bm.num_free(DEVICE) - reserved < _need():
+                continue  # pause this iteration
+            growth = _need()
+            if self.host_layers.get(r.rid, 0):
+                if not self._ensure_device(r):
+                    continue
+                # promotion blocks were consumed; growth remains earmarked
+                growth = sum(
+                    1 for l in self.bm.layers_on(r.rid, DEVICE)
+                    if self.bm.allocation(r.rid, l).num_tokens
+                    % self.ec.block_size == 0)
+            reserved += growth
+            sel.append(r)
+        if not sel:
+            raise RuntimeError("engine wedged: no runnable request")
+
+        # grow allocations for the incoming token, then build tables
+        for r in sel:
+            for l in list(self.bm.tables[r.rid]):
+                self.bm.extend_layer(r.rid, l, 1)
+        maxb = max(len(self.bm.allocation(r.rid, 0).blocks) for r in sel)
+        R = len(sel)
+        tables = np.zeros((self.L, R, maxb), np.int32)
+        for i, r in enumerate(sel):
+            for l in range(self.L):
+                a = self.bm.allocation(r.rid, l)
+                assert a.pool == DEVICE
+                tables[l, i, :len(a.blocks)] = a.blocks
+        kv_lens = [r.prompt_len + r.tokens_out - 1 for r in sel]
+        toks = [r.generated[-1] for r in sel]
+        new_toks = self.ex.decode(toks, tables, kv_lens)
+
+        avg_ctx = int(sum(kv_lens) / R) + 1
+        self.now += self.cost.decode_step_time(R, avg_ctx, 0.0)
+        for r, tok in zip(sel, new_toks):
+            r.generated.append(tok)
+            r.tokens_out += 1
+            if r.tokens_out >= r.output_len:
+                r.finish_time = self.now
+                r.phase = Phase.FINISHED
+                self.bm.free_request(r.rid)
+                self.host_layers.pop(r.rid, None)
+                self.predictor.observe(r.output_len)
+                self.decoding.remove(r)
+                self.done.append(r)
+        return True
+
+    # ----------------------------------------------------------------- run
+    def run(self, requests: List[Request]) -> List[Request]:
+        pending = deque(sorted(requests, key=lambda r: r.arrival))
+        while pending or self.waiting or self.decoding:
+            while pending and pending[0].arrival <= self.now:
+                self.waiting.append(pending.popleft())
+            if not self.step():
+                if pending:
+                    self.now = max(self.now, pending[0].arrival)
+                elif self.waiting:
+                    raise RuntimeError("wedged with waiting requests")
+        self.bm.check()
+        return self.done

@@ -1,0 +1,149 @@
+"""Real JAX executor for the serving engine: paged KV pools + jitted steps.
+
+Physical layout follows the paper's §4: ONE pooled tensor per memory tier
+(device / host), shared by all layers — `(num_blocks, block_size, 2, KV, hd)`
+— so any physical block can hold any (request, layer) slice; logical
+placement lives in the block manager.
+
+Decoder-only families (dense / moe) — the families the paper evaluates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import build_model, layers
+
+
+def _round_up(n, m):
+    return -(-n // m) * m
+
+
+class PagedExecutor:
+    def __init__(self, cfg: ModelConfig, params, num_device_blocks: int,
+                 num_host_blocks: int, block_size: int, rng=None):
+        assert cfg.family in ("dense", "moe"), cfg.family
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            rng if rng is not None else jax.random.PRNGKey(0))
+        hd = cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.dtype)
+        self.block_size = block_size
+        self.device_pool = jnp.zeros(
+            (num_device_blocks, block_size, 2, cfg.n_kv_heads, hd), dt)
+        self.host_pool = jnp.zeros(
+            (num_host_blocks, block_size, 2, cfg.n_kv_heads, hd), dt)
+        self._decode_fn = jax.jit(self._paged_decode,
+                                  donate_argnames=("dpool",))
+        self._prefill_fn = jax.jit(
+            functools.partial(self.model.prefill, dropless=True),
+            static_argnames=())
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, prompt: List[int], pad_to: int):
+        """Run one request's prefill (B=1). Returns (next_token,
+        k_layers, v_layers) with shapes (L, S_pad, KV, hd); only the first
+        len(prompt) positions are valid."""
+        S = len(prompt)
+        toks = np.zeros((1, pad_to), np.int32)
+        toks[0, :S] = prompt
+        batch = {"tokens": jnp.asarray(toks),
+                 "prompt_len": jnp.asarray([S], jnp.int32)}
+        cache = self.model.init_cache(1, pad_to, self.cfg.dtype)
+        logits, cache = self._prefill_fn(self.params, batch, cache)
+        next_tok = int(jnp.argmax(logits[0]))
+        k = cache["k"][:, 0]  # (L, S_pad, KV, hd)
+        v = cache["v"][:, 0]
+        return next_tok, k, v
+
+    # ---------------------------------------------------------- pool writes
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _scatter_layer(self, pool, block_ids, k, v):
+        """Write one layer's KV (S_pad, KV, hd) into `pool` blocks.
+        block_ids: (nb,) int32; S_pad == nb * block_size."""
+        nb = block_ids.shape[0]
+        BS = pool.shape[1]
+        kr = k.reshape(nb, BS, *k.shape[1:]).astype(pool.dtype)
+        vr = v.reshape(nb, BS, *v.shape[1:]).astype(pool.dtype)
+        kv = jnp.stack([kr, vr], axis=2)  # (nb, BS, 2, KV, hd)
+        return pool.at[block_ids].set(kv)
+
+    def write_layer(self, tier: str, block_ids: List[int], k, v):
+        ids = jnp.asarray(block_ids, jnp.int32)
+        S_pad = len(block_ids) * self.block_size
+        k = k[:S_pad]
+        v = v[:S_pad]
+        if tier == "device":
+            self.device_pool = self._scatter_layer(self.device_pool, ids, k, v)
+        else:
+            self.host_pool = self._scatter_layer(self.host_pool, ids, k, v)
+
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=2)
+    def _copy_blocks(self, src, dst, src_ids, dst_ids):
+        return dst.at[dst_ids].set(src[src_ids])
+
+    def copy_blocks(self, src_tier: str, dst_tier: str, src_ids, dst_ids):
+        """Physical block copy between tiers (the d2h/h2d transfer)."""
+        si = jnp.asarray(src_ids, jnp.int32)
+        di = jnp.asarray(dst_ids, jnp.int32)
+        src = self.device_pool if src_tier == "device" else self.host_pool
+        if dst_tier == "device":
+            self.device_pool = self._copy_blocks(src, self.device_pool, si, di)
+        else:
+            self.host_pool = self._copy_blocks(src, self.host_pool, si, di)
+
+    # --------------------------------------------------------------- decode
+    def _paged_decode(self, params, tokens, tables, kv_lens, dpool):
+        """tokens: (R,) int32; tables: (L, R, MAXB) device block ids;
+        kv_lens: (R,) tokens already cached. Returns (logits, dpool)."""
+        cfg = self.cfg
+        BS = self.block_size
+        R = tokens.shape[0]
+        x = params["embed"][tokens][:, None]  # (R,1,d)
+        positions = kv_lens[:, None]  # new token's absolute position
+        if cfg.pos_emb == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, R, 1))
+        r_idx = jnp.arange(R)
+        cur_block = kv_lens // BS
+        cur_off = kv_lens % BS
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            h = layers.apply_norm(cfg, lp["attn_norm"], x)
+            q, k, v = layers.decode_self_attention(
+                cfg, lp["attn"], h, None, None, None, positions)
+            # scatter the new token's KV into its block
+            blk = tables[l][r_idx, cur_block]  # (R,)
+            dpool = dpool.at[blk, cur_off, 0].set(
+                k[:, 0].astype(dpool.dtype))
+            dpool = dpool.at[blk, cur_off, 1].set(
+                v[:, 0].astype(dpool.dtype))
+            o = ops.paged_attention(q[:, 0], dpool, tables[l], kv_lens + 1)
+            x = x + layers.attn_out(cfg, lp["attn"], o[:, None])
+            h = layers.apply_norm(cfg, lp["mlp_norm"], x)
+            if cfg.family == "moe":
+                from repro.models import moe as moe_mod
+                f, _ = moe_mod.moe_ffn(cfg, lp["moe"], h, dropless=True)
+            else:
+                f = layers.mlp(cfg, lp["mlp"], h)
+            x = x + f
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"])
+        return (x[:, 0] @ w), dpool
+
+    def decode(self, tokens: List[int], tables: np.ndarray,
+               kv_lens: List[int]) -> List[int]:
+        """One decode iteration. tables: (L, R, MAXB) int32 into the DEVICE
+        pool (caller guarantees residency)."""
+        logits, self.device_pool = self._decode_fn(
+            self.params, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(tables, jnp.int32),
+            jnp.asarray(kv_lens, jnp.int32), self.device_pool)
+        return [int(t) for t in jnp.argmax(logits, axis=-1)]

@@ -1,0 +1,76 @@
+"""Request lifecycle and SLO metrics."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class Phase(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: str
+    prompt_len: int
+    output_len: int                  # target generation length (EOS position)
+    arrival: float = 0.0
+    tpot_slo: float = 0.2            # seconds/token (paper Fig.8: 200 ms)
+    ttft_slo: float = 3.0            # seconds (paper Fig.8: 3000 ms)
+    prompt: Optional[list] = None    # token ids (real engine)
+
+    phase: Phase = Phase.QUEUED
+    prefill_start: float = -1.0
+    first_token_time: float = -1.0   # TTFT reference point
+    finish_time: float = -1.0
+    tokens_out: int = 0
+    decode_start: float = -1.0
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    # --- derived metrics -----------------------------------------------------
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival
+
+    @property
+    def queuing_delay(self) -> float:
+        return self.prefill_start - self.arrival
+
+    @property
+    def prefill_latency(self) -> float:
+        return self.first_token_time - self.prefill_start
+
+    @property
+    def tpot(self) -> float:
+        """Average time per output token after the first."""
+        if self.tokens_out <= 1 or self.finish_time < 0:
+            return 0.0
+        return (self.finish_time - self.first_token_time) \
+            / (self.tokens_out - 1)
+
+    def current_tpot(self, now: float) -> float:
+        """Running average time/token (paper: 'the current TPOT'),
+        including waiting time between tokens."""
+        if self.first_token_time < 0 or self.tokens_out <= 1:
+            return 0.0
+        return (now - self.first_token_time) / (self.tokens_out - 1)
+
+    # --- scheduler state (paper Eq. 1) ---------------------------------------
+    def t_past(self, now: float) -> float:
+        """Decoding time already spent, incl. waiting between tokens."""
+        if self.first_token_time < 0:
+            return 0.0
+        return now - self.first_token_time
+
+    @property
+    def n_past(self) -> int:
+        return self.tokens_out
+
+    def slo_violated(self) -> bool:
+        if self.first_token_time >= 0 and self.ttft > self.ttft_slo:
+            return True
+        return self.tokens_out > 1 and self.tpot > self.tpot_slo

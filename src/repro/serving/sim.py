@@ -1,0 +1,424 @@
+"""Discrete-event serving simulator.
+
+Drives the *production* LayerKV decision logic (block manager, offload
+engine, SLO scheduler, forecast) with a simulated clock and the Eq.3/4 cost
+model, reproducing the paper's 7B-70B figures on a CPU-only box. The only
+thing swapped vs. the real engine is the executor: step latencies come from
+`CostModel` instead of measured JAX step times.
+
+Engine-step semantics follow vLLM 0.5.5 (the paper's baseline): iteration-
+level batching; prefills run exclusively (no chunked prefill), stalling the
+decode batch; decode batches every running sequence; preemption-by-recompute
+when a decode step cannot get a block.
+
+Policies:
+  'vllm'     request-wise allocation: a prefill is admitted only when KV
+             blocks for ALL layers of the whole prompt are free on device.
+  'layerkv'  layer-wise allocation (paper): device blocks for the x retained
+             layers (+1 transient send-buffer layer), the remaining L-x
+             layers stream to host hidden under prefill compute; optional
+             SLO-aware admission (Alg. 1) and Eq.5 proactive eviction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    DEVICE, HOST, AvailabilityForecast, LayerwiseBlockManager, OffloadEngine,
+    OffloadPlan, PoolExhausted, SLOScheduler, interleave_offload_layers,
+)
+from repro.core.predictor import LengthPredictor, OraclePredictor
+from repro.serving.costmodel import CostModel, HWProfile
+from repro.serving.request import Phase, Request
+
+
+@dataclasses.dataclass
+class SimConfig:
+    policy: str = "layerkv"             # 'layerkv' | 'vllm'
+    slo_aware: bool = True              # Alg.1 admission (layerkv only)
+    proactive: bool = True              # Eq.5 forecast eviction
+    num_device_blocks: int = 0          # 0 -> derive from HW memory
+    num_host_blocks: int = 1 << 20
+    block_size: int = 16
+    max_batch_size: int = 256           # vLLM max_num_seqs
+    max_prefill_tokens: int = 8192      # batched prefill token budget
+    forecast_horizon: int = 32
+    forecast_threshold_frac: float = 0.05
+    gpu_mem_util: float = 0.9           # vLLM gpu_memory_utilization
+    max_model_len: int = 16384          # drives activation reservation
+
+
+@dataclasses.dataclass
+class SimMetrics:
+    ttft: List[float]
+    queuing: List[float]
+    prefill_lat: List[float]
+    tpot: List[float]
+    finish_times: List[float]
+    tokens_out: int
+    makespan: float
+    slo_violations: int
+    n_requests: int
+    preemptions: int
+
+    @property
+    def mean_ttft(self):
+        return statistics.mean(self.ttft) if self.ttft else 0.0
+
+    @property
+    def p99_ttft(self):
+        if not self.ttft:
+            return 0.0
+        s = sorted(self.ttft)
+        return s[min(len(s) - 1, int(0.99 * len(s)))]
+
+    @property
+    def mean_tpot(self):
+        vals = [t for t in self.tpot if t > 0]
+        return statistics.mean(vals) if vals else 0.0
+
+    @property
+    def mean_queuing(self):
+        return statistics.mean(self.queuing) if self.queuing else 0.0
+
+    @property
+    def mean_prefill(self):
+        return statistics.mean(self.prefill_lat) if self.prefill_lat else 0.0
+
+    @property
+    def throughput(self):
+        return self.tokens_out / self.makespan if self.makespan > 0 else 0.0
+
+    @property
+    def violation_rate(self):
+        return self.slo_violations / max(self.n_requests, 1)
+
+
+def derive_device_blocks(cfg: ModelConfig, hw: HWProfile, sim: SimConfig
+                         ) -> int:
+    """vLLM-style profiling: KV pool = gpu_mem_util * (mem - params -
+    activations(max_model_len)); longer max context -> more activation
+    reservation -> fewer KV blocks (paper §2.2)."""
+    param_bytes = cfg.param_count() * hw.f_precision
+    act_bytes = 2 * sim.max_model_len * cfg.d_model * 24 * hw.f_precision
+    free = hw.mem_bytes * sim.gpu_mem_util - param_bytes - act_bytes
+    kv_per_block = 2 * cfg.n_kv_heads * cfg.resolved_head_dim \
+        * hw.f_precision * sim.block_size  # one layer's block
+    blocks = int(free // kv_per_block) // max(cfg.n_attention_layers(), 1) \
+        * cfg.n_attention_layers()
+    return max(blocks, 0)
+
+
+class ServingSimulator:
+    def __init__(self, cfg: ModelConfig, hw: HWProfile, sim: SimConfig,
+                 predictor: Optional[LengthPredictor] = None,
+                 alpha: float = 1.15, beta: float = 1.1):
+        self.cfg = cfg
+        self.hw = hw
+        self.sim = sim
+        self.cost = CostModel(cfg, hw, alpha=alpha, beta=beta)
+        self.L = max(cfg.n_attention_layers(), 1)
+        ndb = sim.num_device_blocks or derive_device_blocks(cfg, hw, sim)
+        self.bm = LayerwiseBlockManager(ndb, sim.num_host_blocks,
+                                        sim.block_size, self.L)
+        self.off = OffloadEngine(self.cost, self.L)
+        self.predictor = predictor or OraclePredictor(
+            [64, 128, 256, 512, 1024])
+        self.sched = SLOScheduler(self.cost, self.predictor)
+        self.fc = AvailabilityForecast(self.predictor, sim.block_size)
+        # per-request bookkeeping
+        self.host_layers: Dict[str, int] = {}   # layers resident on host
+        self.plans: Dict[str, object] = {}
+        self.preemptions = 0
+
+    # ------------------------------------------------------------ helpers
+    def _blocks(self, tokens: int) -> int:
+        return self.bm.blocks_for_tokens(tokens)
+
+    def _device_need(self, r: Request) -> int:
+        """MINIMUM device blocks to start r's prefill."""
+        if self.sim.policy == "vllm":
+            return self._blocks(r.prompt_len) * self.L
+        plan = self.off.plan_for_prompt(r.prompt_len)
+        self.plans[r.rid] = plan
+        # x retained layers + 1 layer of transient send buffer
+        send_buf = 1 if plan.offload_layers else 0
+        return self._blocks(r.prompt_len) * (plan.x + send_buf)
+
+    def _admit(self, r: Request, now: float) -> bool:
+        """Try to allocate for r's prefill; True on success.
+
+        LayerKV retains *as many layers as currently fit* (free
+        prefetching, §3.1.1) but never fewer than Eq.4's x; only the
+        remainder is offloaded during prefill."""
+        try:
+            if self.sim.policy == "vllm":
+                for l in range(self.L):
+                    self.bm.alloc_layer(r.rid, l, r.prompt_len, DEVICE)
+                self.host_layers[r.rid] = 0
+            else:
+                plan = self.plans[r.rid]
+                per_layer = self._blocks(r.prompt_len)
+                reserve = int(self.sim.forecast_threshold_frac
+                              * self.bm.pools[DEVICE].num_blocks)
+                fit = max((self.bm.num_free(DEVICE) - reserve)
+                          // max(per_layer, 1) - 1, 0)
+                retain_n = min(self.L, max(plan.x, fit))
+                off = interleave_offload_layers(self.L,
+                                                retain_n)
+                retain = [l for l in range(self.L) if l not in set(off)]
+                for l in retain:
+                    self.bm.alloc_layer(r.rid, l, r.prompt_len, DEVICE)
+                for l in off:
+                    self.bm.alloc_layer(r.rid, l, r.prompt_len, HOST)
+                self.host_layers[r.rid] = len(off)
+                if off:
+                    self.off.prefill_offload_done(
+                        now, r.prompt_len,
+                        OffloadPlan(retain, off, len(retain)))
+            return True
+        except PoolExhausted:
+            self.bm.free_request(r.rid)
+            return False
+
+    def _promote(self, now: float, dt: float, decoding: List[Request]):
+        """Swap host-resident layers back to device while blocks and link
+        bandwidth allow (paper: 'maximizing the number of layers retained
+        on the GPU'). Budget: what the link can move within one step."""
+        reserve = int(2 * self.sim.forecast_threshold_frac
+                      * self.bm.pools[DEVICE].num_blocks)
+        budget = self.cost.hw.offload_bw * max(dt, 1e-6)
+        for r in sorted(decoding, key=lambda q: q.prefill_start):
+            if budget <= 0:
+                break
+            host = self.bm.layers_on(r.rid, HOST)
+            if not host:
+                continue
+            ctx = r.prompt_len + r.tokens_out
+            per_layer_blocks = self._blocks(ctx)
+            per_layer_bytes = self.cost.kv_bytes(ctx, 1)
+            for l in host:
+                if budget <= 0:
+                    break
+                if self.bm.num_free(DEVICE) < per_layer_blocks + reserve:
+                    return
+                self.bm.move_layer(r.rid, l, DEVICE)
+                self.off.ledger.submit(now, per_layer_bytes, "reload")
+                budget -= per_layer_bytes
+            self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
+
+    def _extend_for_token(self, r: Request) -> bool:
+        """Grow allocations by one token across all layers; False if the
+        device pool is exhausted (caller preempts)."""
+        try:
+            for l in list(self.bm.tables[r.rid]):
+                self.bm.extend_layer(r.rid, l, 1)
+            return True
+        except PoolExhausted:
+            return False
+
+    def _preempt(self, r: Request, waiting: deque):
+        """vLLM recompute-preemption: drop all KV, requeue at the FRONT."""
+        self.bm.free_request(r.rid)
+        self.host_layers.pop(r.rid, None)
+        r.phase = Phase.QUEUED
+        r.tokens_out = 0
+        r.first_token_time = -1.0
+        waiting.appendleft(r)
+        self.preemptions += 1
+
+    def _select_decode_batch(self, now: float, decoding: List[Request]
+                             ) -> tuple:
+        """Pick this iteration's running batch. Device-resident requests
+        always run; host-resident ones join only while their layer-wise
+        h2d streaming stays hideable under the step's HBM-bound compute
+        (paper §4 overlap), most-behind-on-TPOT first. The rest pause this
+        iteration — their TPOT *average* is protected by Eq.1 admission.
+        vLLM policy: everything is device-resident, so sel == decoding."""
+        if self.sim.policy == "vllm":
+            return list(decoding), 0.0
+
+        def urgency(r):
+            return r.tpot_slo - r.current_tpot(now)  # ascending: worst first
+
+        cand = sorted(decoding, key=urgency)
+        avg_ctx = sum(r.prompt_len + r.tokens_out for r in cand) / len(cand)
+        t_est = self.cost.decode_step_time(len(cand), int(avg_ctx), 0.0)
+        budget = self.cost.hw.offload_bw * t_est * 0.9
+        sel, used = [], 0.0
+        for r in cand:
+            hb = self.cost.kv_bytes(r.prompt_len + r.tokens_out,
+                                    self.host_layers.get(r.rid, 0))
+            if hb == 0.0:
+                sel.append(r)
+            elif hb <= budget:
+                sel.append(r)
+                budget -= hb
+                used += hb
+        if not sel:  # progress guarantee: run the most urgent one anyway
+            r = cand[0]
+            used = self.cost.kv_bytes(r.prompt_len + r.tokens_out,
+                                      self.host_layers.get(r.rid, 0))
+            sel = [r]
+        return sel, used
+
+    def _evict_for_space(self, now: float, decoding: List[Request],
+                         min_free_blocks: int = 64):
+        """Emergency eviction: move device layers of the most recently
+        admitted requests to host until some headroom exists."""
+        for r in sorted(decoding, key=lambda q: -q.prefill_start):
+            if self.bm.num_free(DEVICE) >= min_free_blocks:
+                return
+            dev_layers = self.bm.layers_on(r.rid, DEVICE)
+            ctx = r.prompt_len + r.tokens_out
+            for l in dev_layers:
+                self.bm.move_layer(r.rid, l, HOST)
+                if self.bm.num_free(DEVICE) >= min_free_blocks:
+                    break
+            moved = len(dev_layers) - len(self.bm.layers_on(r.rid, DEVICE))
+            if moved:
+                self.off.proactive_offload(now, ctx, moved)
+                self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
+
+    def _proactive_evict(self, now: float, decoding: List[Request]):
+        """Eq.5: if the forecast dips below threshold, offload retained
+        layers of the most recent requests (x/2 first, then all)."""
+        thresh = int(self.sim.forecast_threshold_frac
+                     * self.bm.pools[DEVICE].num_blocks)
+        if not self.fc.needs_proactive_offload(
+                self.bm.num_free(DEVICE), decoding,
+                self.sim.forecast_horizon, thresh):
+            return
+        for r in sorted(decoding, key=lambda q: -q.prefill_start):
+            dev_layers = self.bm.layers_on(r.rid, DEVICE)
+            if not dev_layers:
+                continue
+            n_evict = max(len(dev_layers) // 2, 1)
+            ctx = r.prompt_len + r.tokens_out
+            for l in dev_layers[:n_evict]:
+                self.bm.move_layer(r.rid, l, HOST)
+            self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
+            self.off.proactive_offload(now, ctx, n_evict)
+            if self.bm.num_free(DEVICE) >= thresh:
+                break
+
+    # ---------------------------------------------------------------- run
+    def run(self, requests: List[Request]) -> SimMetrics:
+        pending = deque(sorted(requests, key=lambda r: r.arrival))
+        waiting: deque[Request] = deque()
+        decoding: List[Request] = []
+        done: List[Request] = []
+        t = 0.0
+
+        while pending or waiting or decoding:
+            while pending and pending[0].arrival <= t:
+                waiting.append(pending.popleft())
+
+            # ---- admission -------------------------------------------------
+            admitted: List[Request] = []
+            if waiting:
+                if self.sim.policy == "layerkv" and self.sim.slo_aware:
+                    budget_n = self.sched.max_prefills(list(waiting),
+                                                       decoding, t)
+                else:
+                    budget_n = len(waiting)
+                tok_budget = self.sim.max_prefill_tokens
+                while waiting and budget_n > 0 and \
+                        len(decoding) + len(admitted) < self.sim.max_batch_size:
+                    r = waiting[0]
+                    if admitted and r.prompt_len > tok_budget:
+                        break
+                    if self.bm.num_free(DEVICE) < self._device_need(r):
+                        break
+                    if not self._admit(r, t):
+                        break
+                    waiting.popleft()
+                    admitted.append(r)
+                    budget_n -= 1
+                    tok_budget -= r.prompt_len
+
+            if admitted:
+                # prefills run exclusively (vLLM 0.5.5 semantics)
+                for r in admitted:
+                    r.phase = Phase.PREFILL
+                    r.prefill_start = t
+                dt = sum(self.cost.prefill_time(r.prompt_len)
+                         for r in admitted)
+                t += dt
+                for r in admitted:
+                    r.first_token_time = t
+                    r.tokens_out = 1
+                    r.phase = Phase.DECODE
+                    decoding.append(r)
+                continue
+
+            # ---- decode step ----------------------------------------------
+            if decoding:
+                if self.sim.policy == "layerkv" and self.sim.proactive:
+                    self._proactive_evict(t, decoding)
+                sel, host_bytes = self._select_decode_batch(t, decoding)
+                B = len(sel)
+                avg_ctx = sum(r.prompt_len + r.tokens_out for r in sel) / B
+                dt = self.cost.decode_step_time(B, int(avg_ctx), host_bytes)
+                if self.sim.policy == "layerkv":
+                    self._promote(t, dt, decoding)
+                t += dt
+                finished: List[Request] = []
+                for r in sel:
+                    ok = self._extend_for_token(r)
+                    if not ok and self.sim.policy == "layerkv":
+                        # evict device layers (newest requests first) to
+                        # host instead of preempting (paper §3.1.1)
+                        self._evict_for_space(t, decoding)
+                        ok = self._extend_for_token(r)
+                    if not ok:
+                        self._preempt(r, waiting)
+                        decoding.remove(r)
+                        continue
+                    r.tokens_out += 1
+                    if r.tokens_out >= r.output_len:
+                        r.finish_time = t
+                        r.phase = Phase.FINISHED
+                        self.bm.free_request(r.rid)
+                        self.host_layers.pop(r.rid, None)
+                        self.predictor.observe(r.output_len)
+                        done.append(r)
+                        finished.append(r)
+                for r in finished:
+                    decoding.remove(r)
+                continue
+
+            # ---- idle: jump to next arrival --------------------------------
+            if pending:
+                t = max(t, pending[0].arrival)
+            elif waiting:
+                # waiting but nothing admissible and nothing decoding:
+                # blocked forever would be a bug — force-admit head
+                r = waiting[0]
+                if self.bm.num_free(DEVICE) >= self._device_need(r) \
+                        and self._admit(r, t):
+                    continue
+                raise RuntimeError(
+                    f"deadlock: head request {r.rid} "
+                    f"(prompt {r.prompt_len}) needs "
+                    f"{self._device_need(r)} blocks, pool has "
+                    f"{self.bm.pools[DEVICE].num_blocks}")
+
+        self.bm.check()
+        mk = max((r.finish_time for r in done), default=0.0)
+        return SimMetrics(
+            ttft=[r.ttft for r in done],
+            queuing=[r.queuing_delay for r in done],
+            prefill_lat=[r.prefill_latency for r in done],
+            tpot=[r.tpot for r in done],
+            finish_times=[r.finish_time for r in done],
+            tokens_out=sum(r.tokens_out for r in done),
+            makespan=mk,
+            slo_violations=sum(1 for r in done if r.slo_violated()),
+            n_requests=len(done),
+            preemptions=self.preemptions,
+        )

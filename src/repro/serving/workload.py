@@ -1,0 +1,45 @@
+"""Workload generators for the serving benchmarks.
+
+`sharegpt_like` mirrors the ShareGPT trace statistics the paper uses
+(conversations collected from ChatGPT-3.5: prompt/output lengths 4-2.3k
+tokens, heavy-tailed) without requiring the dataset download in this
+offline container: lognormal lengths clipped to the paper's range.
+"""
+from __future__ import annotations
+
+import random
+from typing import List
+
+from repro.serving.request import Request
+
+
+def fixed_length(n: int, prompt_len: int, output_len: int, rate: float,
+                 seed: int = 0, tpot_slo: float = 0.2, ttft_slo: float = 3.0
+                 ) -> List[Request]:
+    """Poisson arrivals at `rate` req/s with fixed prompt/output lengths
+    (paper Fig. 1/4/5 methodology)."""
+    rng = random.Random(seed)
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += rng.expovariate(rate)
+        out.append(Request(rid=f"r{i}", prompt_len=prompt_len,
+                           output_len=output_len, arrival=t,
+                           tpot_slo=tpot_slo, ttft_slo=ttft_slo))
+    return out
+
+
+def sharegpt_like(n: int, rate: float, seed: int = 0, tpot_slo: float = 0.2,
+                  ttft_slo: float = 3.0, min_len: int = 4,
+                  max_len: int = 2300) -> List[Request]:
+    """Heavy-tailed prompt/output lengths in the ShareGPT range."""
+    rng = random.Random(seed)
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += rng.expovariate(rate)
+        p = int(min(max(rng.lognormvariate(5.6, 1.1), min_len), max_len))
+        o = int(min(max(rng.lognormvariate(5.1, 0.9), min_len), max_len))
+        out.append(Request(rid=f"r{i}", prompt_len=p, output_len=o,
+                           arrival=t, tpot_slo=tpot_slo, ttft_slo=ttft_slo))
+    return out

@@ -1,0 +1,63 @@
+"""Minimal dependency-free checkpointing: npz for arrays + json manifest."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree: Any, meta: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    # npz cannot hold bfloat16: widen to f32 and record the original dtype
+    dtypes = {k: str(v.dtype) for k, v in flat.items()}
+    flat = {k: (v.astype(np.float32) if v.dtype.name == "bfloat16" else v)
+            for k, v in flat.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    treedef = jax.tree.structure(tree)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "meta": meta or {},
+                   "keys": sorted(flat), "dtypes": dtypes}, f)
+
+
+def load(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of `like` (names must match)."""
+    import ml_dtypes
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    meta = manifest["meta"]
+    dtypes = manifest.get("dtypes", {})
+    flat = _flatten(like)
+    restored = {}
+    for k in flat:
+        arr = data[k]
+        if dtypes.get(k) == "bfloat16":
+            arr = arr.astype(ml_dtypes.bfloat16)
+        restored[k] = arr
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            vals = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+            return type(tree)(vals)
+        return restored[prefix[:-1]]
+
+    return rebuild(like), meta

@@ -1,0 +1,76 @@
+"""Training loop: jitted train_step (loss + grad + AdamW) and the driver."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.training.checkpoint import save as ckpt_save
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import (
+    AdamWConfig, OptState, adamw_update, init_opt_state,
+)
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    donate: bool = True) -> Callable:
+    model = build_model(cfg)
+
+    def train_step(params, opt_state: OptState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            opt, grads, opt_state, params)
+        metrics = {**metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    return jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    final_loss: float
+    steps: int
+    tokens_per_s: float
+
+
+def train(cfg: ModelConfig, steps: int = 200, dc: Optional[DataConfig] = None,
+          opt: Optional[AdamWConfig] = None, seed: int = 0,
+          ckpt_path: Optional[str] = None, ckpt_every: int = 0,
+          log_every: int = 20, verbose: bool = True) -> TrainResult:
+    dc = dc or DataConfig()
+    opt = opt or AdamWConfig(lr=1e-3, total_steps=steps,
+                             warmup_steps=max(steps // 10, 5))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = init_opt_state(params)
+    step_fn = make_train_step(cfg, opt)
+    data = SyntheticLM(cfg, dc).batches()
+
+    losses = []
+    t0 = time.perf_counter()
+    tokens = 0
+    for step in range(steps):
+        batch = next(data)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        tokens += dc.batch_size * dc.seq_len
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"grad_norm {float(metrics['grad_norm']):7.3f} "
+                  f"lr {float(metrics['lr']):.2e}")
+        if ckpt_path and ckpt_every and (step + 1) % ckpt_every == 0:
+            ckpt_save(ckpt_path, {"params": params},
+                      meta={"step": step + 1, "loss": loss})
+    dt = time.perf_counter() - t0
+    if ckpt_path:
+        ckpt_save(ckpt_path, {"params": params},
+                  meta={"step": steps, "loss": losses[-1]})
+    return TrainResult(losses, losses[-1], steps, tokens / dt)

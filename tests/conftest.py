@@ -1,0 +1,11 @@
+import os
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# flag in a separate process); keep jax quiet and deterministic
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

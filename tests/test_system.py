@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests for the LayerKV system.
+
+These exercise the full stack: config -> model -> engine/simulator ->
+metrics, at smoke scale.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke_config
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.serving.costmodel import L20, TPU_V5E, CostModel
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import fixed_length
+
+
+def test_all_archs_have_configs():
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        smoke = get_smoke_config(a)
+        assert cfg.arch_id == a
+        assert smoke.n_layers <= 4 and smoke.d_model <= 512
+        if smoke.moe.n_experts:
+            assert smoke.moe.n_experts <= 4
+        assert cfg.source, "every config cites its source"
+
+
+def test_assigned_configs_exact():
+    """The 10 assigned architectures match the published specs exactly."""
+    expect = {
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }
+    for a, (L, d, H, KV, ff, V) in expect.items():
+        c = get_config(a)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab_size) == (L, d, H, KV, ff, V), a
+    # MoE extras
+    dm = get_config("deepseek-moe-16b").moe
+    assert (dm.n_experts, dm.top_k, dm.n_shared) == (64, 6, 2)
+    l4 = get_config("llama4-scout-17b-a16e").moe
+    assert (l4.n_experts, l4.top_k) == (16, 1)
+    assert get_config("zamba2-2.7b").ssm.state_dim == 64
+
+
+def test_input_shapes_match_spec():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_e2e_paper_pipeline_small():
+    """Full pipeline: workload -> simulator (both policies) -> the paper's
+    headline ordering holds (LayerKV TTFT <= vLLM TTFT)."""
+    r1 = fixed_length(40, 1024, 256, rate=1.0, seed=2)
+    r2 = fixed_length(40, 1024, 256, rate=1.0, seed=2)
+    mv = ServingSimulator(LLAMA2_7B, L20, SimConfig(policy="vllm")).run(r1)
+    ml = ServingSimulator(LLAMA2_7B, L20,
+                          SimConfig(policy="layerkv")).run(r2)
+    # light load: parity within tolerance (the big wins are at congestion,
+    # asserted in test_serving); here we check the pipeline end-to-end
+    assert ml.mean_ttft <= mv.mean_ttft * 1.15
+    assert ml.n_requests == mv.n_requests == 40
+
+
+def test_tpu_profile_no_contention_pathway():
+    """On TPU the offload fabric is disjoint from ICI: the ledger never
+    defers when no reservations exist."""
+    from repro.core import LinkLedger
+    led = LinkLedger(TPU_V5E.offload_bw)
+    t_done = led.submit(0.0, 100 << 20, "offload")
+    assert t_done == pytest.approx((100 << 20) / TPU_V5E.offload_bw)
+
+
+def test_pcie_contention_defers_transfers():
+    """Paper §3.1.3: transfers yield to an ongoing all-reduce."""
+    from repro.core import LinkLedger
+    led = LinkLedger(16e9, chunk_bytes=1 << 20)
+    led.reserve(0.0, 0.010)  # all-reduce occupying the link for 10 ms
+    t_done = led.submit(0.0, 16 << 20, "offload")
+    uncontended = (16 << 20) / 16e9
+    assert t_done > 0.010  # waited out the reservation
+    assert t_done == pytest.approx(0.010 + uncontended, rel=0.5)
+
+
+def test_eq4_long_prompt_offloads_everything():
+    """Paper: 'When the prompt is long, x can be zero'."""
+    cm = CostModel(LLAMA2_7B, L20)
+    assert cm.min_retained_layers(16384) == 0
+
+
+def test_kv_bytes_formula():
+    """Eq.4 numerator: 2 * L * kv_heads * head_dim * f * seqlen."""
+    cfg = get_config("chatglm3-6b")
+    cm = CostModel(cfg, L20)
+    assert cm.kv_bytes(1000) == 2 * 28 * 2 * 128 * 2 * 1000
