@@ -17,8 +17,8 @@ from repro.serving.workload import fixed_length
 CTX = [128, 512, 1024, 2048, 4096, 8192, 16384]
 
 
-def main(n_requests: int = 100) -> None:
-    for ctx in CTX:
+def main(n_requests: int = 100, smoke: bool = False) -> None:
+    for ctx in CTX[:2] if smoke else CTX:
         t0 = time.perf_counter()
         reqs = fixed_length(n_requests, ctx, 512, rate=1.0, seed=1)
         m = ServingSimulator(LLAMA2_7B, L20,

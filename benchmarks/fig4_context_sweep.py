@@ -1,8 +1,25 @@
 """Paper Figure 4: LayerKV vs vLLM across context lengths (Llama2-7B,
-1 req/s) — TTFT (top row) and throughput (bottom row)."""
+1 req/s) — TTFT (top row) and throughput (bottom row) — plus a
+layerkv+chunked arm (chunked prefill with mixed batching, this repo's
+extension beyond the paper).
+
+``main(json_out=...)`` additionally dumps the three-arm TTFT comparison to
+a JSON file; `BENCH_chunked_prefill.json` in the repo root is that
+artifact, committed so future PRs have a perf trajectory to diff against:
+
+    PYTHONPATH=src python benchmarks/fig4_context_sweep.py
+"""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
+from typing import Optional
+
+if __package__ in (None, ""):  # `python benchmarks/fig4_context_sweep.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import emit
 from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
@@ -13,24 +30,55 @@ from repro.serving.workload import fixed_length
 CTX = [512, 1024, 2048, 4096, 8192]
 
 
-def main(n_requests: int = 100) -> None:
-    for ctx in CTX:
+def main(n_requests: int = 100, smoke: bool = False,
+         json_out: Optional[str] = None) -> None:
+    rows = {}
+    for ctx in CTX[:2] if smoke else CTX:
         t0 = time.perf_counter()
-        mv = ServingSimulator(LLAMA2_7B, L20, SimConfig(policy="vllm")).run(
-            fixed_length(n_requests, ctx, 512, rate=1.0, seed=1))
+        mk = lambda: fixed_length(n_requests, ctx, 512, rate=1.0, seed=1)
+        mv = ServingSimulator(LLAMA2_7B, L20,
+                              SimConfig(policy="vllm")).run(mk())
         ml = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="layerkv")).run(
-            fixed_length(n_requests, ctx, 512, rate=1.0, seed=1))
+                              SimConfig(policy="layerkv")).run(mk())
+        mc = ServingSimulator(LLAMA2_7B, L20,
+                              SimConfig(policy="layerkv",
+                                        chunked=True)).run(mk())
         us = (time.perf_counter() - t0) * 1e6
         speedup = mv.mean_ttft / max(ml.mean_ttft, 1e-9)
         thr_gap = 1.0 - ml.throughput / max(mv.throughput, 1e-9)
         emit(f"fig4.ctx{ctx}", us,
              f"vllm_ttft_s={mv.mean_ttft:.3f};lkv_ttft_s={ml.mean_ttft:.3f};"
+             f"lkv_chunked_ttft_s={mc.mean_ttft:.3f};"
              f"ttft_speedup_x={speedup:.2f};"
+             f"chunked_speedup_x={mv.mean_ttft/max(mc.mean_ttft,1e-9):.2f};"
              f"vllm_tpot_ms={mv.mean_tpot*1e3:.1f};"
              f"lkv_tpot_ms={ml.mean_tpot*1e3:.1f};"
+             f"lkv_chunked_tpot_ms={mc.mean_tpot*1e3:.1f};"
              f"thr_gap_pct={thr_gap*100:.1f}")
+        rows[ctx] = {
+            "vllm": {"mean_ttft_s": mv.mean_ttft, "p99_ttft_s": mv.p99_ttft,
+                     "mean_tpot_ms": mv.mean_tpot * 1e3},
+            "layerkv": {"mean_ttft_s": ml.mean_ttft,
+                        "p99_ttft_s": ml.p99_ttft,
+                        "mean_tpot_ms": ml.mean_tpot * 1e3},
+            "layerkv_chunked": {"mean_ttft_s": mc.mean_ttft,
+                                "p99_ttft_s": mc.p99_ttft,
+                                "mean_tpot_ms": mc.mean_tpot * 1e3,
+                                "chunk_iters": mc.chunk_iters},
+        }
+    if json_out:
+        doc = {
+            "benchmark": "fig4_context_sweep",
+            "model": LLAMA2_7B.arch_id,
+            "hw": L20.name,
+            "n_requests": n_requests,
+            "arms": ["vllm", "layerkv", "layerkv_chunked"],
+            "by_context": rows,
+        }
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
 
 
 if __name__ == "__main__":
-    main()
+    main(json_out="BENCH_chunked_prefill.json")

@@ -21,8 +21,8 @@ YI_34B = ModelConfig(
     source="hf:01-ai/Yi-34B-200K (paper evaluation model)")
 
 
-def main(n_requests: int = 80) -> None:
-    for dop in [2, 4, 8]:
+def main(n_requests: int = 80, smoke: bool = False) -> None:
+    for dop in ([2] if smoke else [2, 4, 8]):
         t0 = time.perf_counter()
         hw = L20.scaled(dop)
         mk = lambda: fixed_length(n_requests, 2048, 384, rate=1.0, seed=4)

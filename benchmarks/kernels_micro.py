@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.kernels import ref
@@ -16,10 +15,10 @@ from repro.kernels.flash_prefill import flash_attention_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     key = jax.random.PRNGKey(0)
     # flash prefill
-    B, S, H, KV, D = 1, 512, 8, 2, 128
+    B, S, H, KV, D = 1, (128 if smoke else 512), 8, 2, 128
     q = jax.random.normal(key, (B, S, H, D), jnp.float32)
     k = jax.random.normal(key, (B, S, KV, D), jnp.float32)
     v = jax.random.normal(key, (B, S, KV, D), jnp.float32)
@@ -28,13 +27,16 @@ def main() -> None:
     out_p = flash_attention_pallas(q, k, v)
     err = float(jnp.max(jnp.abs(out_p - ref_fn(q, k, v))))
     c = jax.jit(lambda *a: ref.mha_reference(*a)).lower(q, k, v).compile()
-    flops = c.cost_analysis().get("flops", 0.0)
+    cost = c.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict] per device
+        cost = cost[0] if cost else {}
+    flops = (cost or {}).get("flops", 0.0)
     emit("kernel.flash_prefill", us_ref,
          f"maxerr_vs_pallas={err:.2e};hlo_flops={flops:.3g};"
          f"shape=B{B}xS{S}xH{H}xKV{KV}xD{D}")
 
     # paged decode attention
-    B, H, KV, D, NB, BS, MAXB = 8, 8, 2, 128, 128, 16, 16
+    B, H, KV, D, NB, BS, MAXB = 8, 8, 2, 128, 128, 16, (4 if smoke else 16)
     q1 = jax.random.normal(key, (B, H, D), jnp.float32)
     pool = jax.random.normal(key, (NB, BS, 2, KV, D), jnp.float32)
     tab = jax.random.permutation(key, NB)[:B * MAXB].reshape(B, MAXB)

@@ -1,21 +1,34 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python benchmarks/run.py [--quick|--smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = harness wall
 time for that experiment; `derived` carries the figure's metrics).
+
+``--smoke`` runs every figure script at toy scale (a few requests, two
+sweep points each) so CI can catch perf-script rot in minutes.
 """
 import argparse
+import os
+import sys
+
+# allow `python benchmarks/run.py` from the repo root (the CI invocation)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer requests per experiment")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy scale: CI guard that every script still runs")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig4,fig5,fig6,fig8,kernels")
     args = ap.parse_args()
     n = 40 if args.quick else 100
+    if args.smoke:
+        n = 8
+    smoke = args.smoke
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig1_motivation, fig4_context_sweep,
@@ -24,17 +37,20 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     if not only or "fig1" in only:
-        fig1_motivation.main(n_requests=n)
+        fig1_motivation.main(n_requests=n, smoke=smoke)
     if not only or "fig4" in only:
-        fig4_context_sweep.main(n_requests=n)
+        fig4_context_sweep.main(n_requests=n, smoke=smoke)
     if not only or "fig5" in only:
-        fig5_parallelism.main(n_requests=max(n - 20, 30))
+        fig5_parallelism.main(n_requests=max(n - 20, 8), smoke=smoke)
     if not only or "fig6" in only:
-        fig6_fig7_arrival.main(n_requests=n + 50 if not args.quick else n)
+        fig6_fig7_arrival.main(
+            n_requests=n + 50 if not (args.quick or smoke) else n,
+            smoke=smoke)
     if not only or "fig8" in only:
-        fig8_slo.main(n_requests=n + 50 if not args.quick else n)
+        fig8_slo.main(n_requests=n + 50 if not (args.quick or smoke) else n,
+                      smoke=smoke)
     if not only or "kernels" in only:
-        kernels_micro.main()
+        kernels_micro.main(smoke=smoke)
 
 
 if __name__ == "__main__":

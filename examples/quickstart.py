@@ -9,7 +9,6 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.models import build_model
 from repro.serving.engine import EngineConfig, LayerKVEngine
 from repro.serving.request import Request
 from repro.training.data import DataConfig

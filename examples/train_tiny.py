@@ -6,7 +6,6 @@
 --steps 50 for a quick look.)
 """
 import argparse
-import dataclasses
 
 from repro.configs.base import ModelConfig
 from repro.training.data import DataConfig

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

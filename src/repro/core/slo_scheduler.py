@@ -13,7 +13,7 @@ N_future by the bucketed length predictor.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Sequence
 
 from repro.core.predictor import LengthPredictor
 from repro.serving.costmodel import CostModel
@@ -65,3 +65,26 @@ class SLOScheduler:
             else:
                 break
         return n
+
+    # ------------------------------------------------- chunked prefill budget
+    def max_chunk_tokens(self, decoding: Sequence[Request], now: float,
+                         cap: int, floor: int = 16) -> int:
+        """Per-iteration prefill-TOKEN budget for chunked prefill (the
+        token-budget analogue of Alg.1). With mixed batching decodes are
+        not stalled by a prefill, but the iteration stretches to the chunk
+        compute time — so the chunk is sized to fit the minimum Eq.1 TPOT
+        slack. A small floor guarantees prefill progress (same fairness
+        rationale as `min_admit_when_idle`); `cap` is the engine's
+        max_prefill_tokens."""
+        if not decoding:
+            return cap
+        slack = self.allow_prefill_budget(decoding, now)
+        if slack == float("inf"):
+            return cap
+        if slack <= 0.0:
+            return min(floor, cap)
+        # Eq.3 linear term gives a conservative (attention-free) per-token
+        # cost; inverting it bounds the chunk that fits in the slack.
+        per_token = self.cost.chunk_prefill_time(1, 0)
+        n = int(slack / max(per_token, 1e-12))
+        return max(min(floor, cap), min(cap, n))

@@ -10,10 +10,6 @@ Select globally via `set_backend` or per-call via `backend=`.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-
 from repro.kernels import ref as _ref
 
 _BACKEND = "ref"

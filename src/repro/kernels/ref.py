@@ -5,8 +5,6 @@ memory-O(S * chunk) and GSPMD-friendly), so they must be jit/scan-clean.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -138,6 +138,5 @@ def constrain_moe_tokens(x):
     dp = tuple(_MOE_SPEC)[1]  # (E, C, d) -> C carries the data axes
     if dp is None:
         return x
-    import jax.numpy as jnp  # local to avoid cycles at import time
     spec = jax.sharding.PartitionSpec(dp, *([None] * (x.ndim - 1)))
     return jax.lax.with_sharding_constraint(x, spec)

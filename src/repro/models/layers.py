@@ -8,10 +8,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

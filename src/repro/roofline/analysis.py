@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Optional
+from typing import Optional
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import InputShape, ModelConfig

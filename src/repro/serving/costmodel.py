@@ -62,6 +62,21 @@ class CostModel:
         return self.alpha * seqlen * flops / (
             self.hw.flops_per_s * self.mfu_prefill)
 
+    def chunk_prefill_time(self, chunk_len: int, prefix_len: int) -> float:
+        """Eq.3 cost of prefilling tokens [prefix, prefix+chunk) given that
+        `prefix_len` tokens are already cached (chunked prefill). The
+        quadratic attention term is split so chunk costs telescope exactly:
+        sum over a request's chunks == prefill_time(prompt_len), i.e.
+        chunking never changes total prefill compute, only its placement."""
+        if chunk_len <= 0:
+            return 0.0
+        n_param = self.cfg.active_param_count()
+        n_hidden = self.cfg.d_model
+        end = prefix_len + chunk_len
+        flops = 2 * n_param * chunk_len \
+            + 2 * n_hidden * (end * end - prefix_len * prefix_len)
+        return self.alpha * flops / (self.hw.flops_per_s * self.mfu_prefill)
+
     # ------------------------------------------------------------------ Eq.4
     def kv_bytes(self, seqlen: int, n_layers: int | None = None) -> int:
         """KV bytes for `seqlen` tokens across `n_layers` attention layers
@@ -100,3 +115,15 @@ class CostModel:
         t_hbm = (p_bytes + kv_total) / (self.hw.hbm_bw * self.mbu_decode)
         t_reload = host_kv_bytes / self.hw.offload_bw
         return max(t_hbm, t_reload)
+
+    # ----------------------------------------------------------- mixed batch
+    def mixed_step_time(self, prefill_chunk_time: float, batch_size: int,
+                        avg_ctx: int, host_kv_bytes: float = 0.0) -> float:
+        """One iteration that batches prefill-chunk tokens WITH the decode
+        tokens (chunked prefill). The chunk portion is FLOPs-bound, the
+        decode portion HBM-bound, and the combined pass streams weights
+        once — so the iteration takes the max of the two, not the sum
+        (this overlap is the mixed-batching win)."""
+        t_dec = self.decode_step_time(batch_size, avg_ctx, host_kv_bytes) \
+            if batch_size > 0 else 0.0
+        return max(prefill_chunk_time, t_dec)

@@ -9,10 +9,26 @@ scheduler, Eq.5 forecast) to the `PagedExecutor`. Two policies:
              buffer); offloaded layers live in the HOST pool and are
              streamed/promoted back for decode.
 
+Orthogonally, `EngineConfig.chunked` selects the engine-step semantics,
+completing a 3-axis scheduling matrix (policy x slo_aware x chunked):
+
+  exclusive  (default) a prefill runs its whole prompt in one call,
+             stalling the decode batch — vLLM 0.5.5 semantics.
+  chunked    prompts prefill in scheduler-controlled chunks under a
+             per-iteration token budget (`chunk_size`, tightened by Eq.1
+             slack when slo_aware); chunk compute batches with the decode
+             step, the clock advancing by max(chunk, decode) per
+             iteration. Chunk KV appends into the paged pools at arbitrary
+             token offsets (`PagedExecutor.write_layer_slice`), with
+             causal masking against already-cached blocks, and each
+             chunk's offloaded-layer d2h traffic hits the link ledger as
+             it is produced.
+
 The engine clock is virtual (driven by the cost model) so runs are exactly
 reproducible and policy behaviour — not CPU speed — determines metrics;
 generated TOKENS are real model outputs, which is what the losslessness
-tests assert.
+tests assert — in chunked mode the tokens must match the exclusive-mode
+engine exactly (see tests/test_chunked.py).
 """
 from __future__ import annotations
 
@@ -20,6 +36,7 @@ import dataclasses
 from collections import deque
 from typing import Dict, List, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
@@ -42,6 +59,9 @@ class EngineConfig:
     block_size: int = 16
     max_batch_size: int = 64
     max_tokens_per_request: int = 4096
+    chunked: bool = False           # chunked prefill + mixed batching
+    chunk_size: int = 32            # per-iteration prefill token budget
+    chunk_floor: int = 8            # min chunk tokens/iter (progress)
 
 
 class LayerKVEngine:
@@ -65,9 +85,11 @@ class LayerKVEngine:
         self.sched = SLOScheduler(self.cost, self.predictor)
         self.now = 0.0
         self.waiting: deque[Request] = deque()
+        self.prefilling: List[Request] = []   # chunked mode: in-flight chunks
         self.decoding: List[Request] = []
         self.done: List[Request] = []
         self.host_layers: Dict[str, int] = {}
+        self._chunk_bufs: Dict[str, tuple] = {}  # rid -> cached (kbuf, vbuf)
 
     # ------------------------------------------------------------- helpers
     def _blocks(self, tokens: int) -> int:
@@ -81,7 +103,9 @@ class LayerKVEngine:
         return self._blocks(r.prompt_len) * (plan.x + send_buf)
 
     # -------------------------------------------------------------- prefill
-    def _do_prefill(self, r: Request) -> bool:
+    def _alloc_prefill(self, r: Request):
+        """Allocate r's prompt KV per the policy; returns (retain, off)
+        layer lists or None when the pools cannot fit it."""
         per_layer = self._blocks(r.prompt_len)
         if self.ec.policy == "vllm":
             retain = list(range(self.L))
@@ -99,7 +123,14 @@ class LayerKVEngine:
                 self.bm.alloc_layer(r.rid, l, r.prompt_len, HOST)
         except PoolExhausted:
             self.bm.free_request(r.rid)
+            return None
+        return retain, off
+
+    def _do_prefill(self, r: Request) -> bool:
+        alloc = self._alloc_prefill(r)
+        if alloc is None:
             return False
+        retain, off = alloc
 
         pad = self._blocks(r.prompt_len) * self.ec.block_size
         next_tok, k, v = self.ex.prefill(r.prompt, pad)
@@ -118,10 +149,58 @@ class LayerKVEngine:
         r.prefill_start = r.prefill_start if r.prefill_start >= 0 else self.now
         r.first_token_time = self.now
         r.tokens_out = 1
+        r.prefill_done = r.prompt_len
+        r.n_chunks += 1
         r.generated.append(next_tok)
         r.phase = Phase.DECODE
         self.decoding.append(r)
         return True
+
+    # ------------------------------------------------------- chunked prefill
+    def _gather_buffers(self, r: Request):
+        """Dense (L, S_buf, KV, hd) K/V prefix buffers for r. Gathered from
+        the pools on the request's FIRST chunk, then cached and kept fresh
+        with the chunk appends: a prefilling request's block contents only
+        change through its own chunks (evictions touch decoding requests),
+        so re-gathering every chunk would be pure waste."""
+        if r.rid in self._chunk_bufs:
+            return self._chunk_bufs[r.rid]
+        ks, vs = [], []
+        for l in range(self.L):
+            a = self.bm.allocation(r.rid, l)
+            tier = "device" if a.pool == DEVICE else "host"
+            k, v = self.ex.gather_layer(tier, a.blocks)
+            ks.append(k)
+            vs.append(v)
+        bufs = (jnp.stack(ks), jnp.stack(vs))
+        self._chunk_bufs[r.rid] = bufs
+        return bufs
+
+    def _run_chunk(self, r: Request, c: int) -> None:
+        """Prefill tokens [prefill_done, prefill_done + c) of r: run the
+        chunk against the cached prefix, append its KV into the paged pools
+        at the token offset, and account the chunk's d2h traffic."""
+        p = r.prefill_done
+        kbuf, vbuf = self._gather_buffers(r)
+        logits, kc, vc = self.ex.prefill_chunk(r.prompt[p:p + c], p,
+                                               kbuf, vbuf)
+        for l in range(self.L):
+            a = self.bm.allocation(r.rid, l)
+            tier = "device" if a.pool == DEVICE else "host"
+            self.ex.write_layer_slice(tier, a.blocks, p, kc[l], vc[l])
+        n_off = len(self.bm.layers_on(r.rid, HOST))
+        if n_off:
+            self.off.ledger.submit(
+                self.now, self.cost.kv_bytes(c, n_off), "offload")
+        r.prefill_done += c
+        r.n_chunks += 1
+        if r.prefill_complete:
+            self._chunk_bufs.pop(r.rid, None)
+            r.generated.append(int(jnp.argmax(logits)))
+        else:
+            self._chunk_bufs[r.rid] = (
+                kbuf.at[:, p:p + c].set(kc.astype(kbuf.dtype)),
+                vbuf.at[:, p:p + c].set(vc.astype(vbuf.dtype)))
 
     # ------------------------------------------------------ residency mgmt
     def _ensure_device(self, r: Request) -> bool:
@@ -159,37 +238,10 @@ class LayerKVEngine:
             return True
         return False
 
-    # ---------------------------------------------------------------- step
-    def step(self) -> bool:
-        """One scheduler iteration. Returns False when fully idle."""
-        # admission
-        admitted = 0
-        if self.waiting:
-            if self.ec.policy == "layerkv" and self.ec.slo_aware:
-                budget_n = self.sched.max_prefills(
-                    list(self.waiting), self.decoding, self.now)
-            else:
-                budget_n = len(self.waiting)
-            while self.waiting and budget_n > 0 and \
-                    len(self.decoding) < self.ec.max_batch_size:
-                r = self.waiting[0]
-                if self.bm.num_free(DEVICE) < self._device_need(r):
-                    break
-                self.waiting.popleft()
-                r.prefill_start = self.now
-                if not self._do_prefill(r):
-                    self.waiting.appendleft(r)
-                    break
-                admitted += 1
-                budget_n -= 1
-        if admitted:
-            return True
-
-        if not self.decoding:
-            return False
-
-        # decode iteration: select runnable requests (device-resident or
-        # promotable + room to grow), most-behind-on-TPOT first
+    # ------------------------------------------------------ decode iteration
+    def _select_runnable(self, allow_empty: bool = False) -> List[Request]:
+        """Pick this iteration's decode batch: device-resident or promotable
+        requests with room to grow, most-behind-on-TPOT first."""
         sel: List[Request] = []
         reserved = 0  # growth blocks earmarked for already-selected requests
         for r in sorted(self.decoding,
@@ -225,10 +277,14 @@ class LayerKVEngine:
                     % self.ec.block_size == 0)
             reserved += growth
             sel.append(r)
-        if not sel:
+        if not sel and not allow_empty:
             raise RuntimeError("engine wedged: no runnable request")
+        return sel
 
-        # grow allocations for the incoming token, then build tables
+    def _run_decode(self, sel: List[Request]) -> float:
+        """Grow allocations, run one real decode step over `sel`, append the
+        new tokens. Returns the modeled step time; the caller advances the
+        clock and retires finished requests."""
         for r in sel:
             for l in list(self.bm.tables[r.rid]):
                 self.bm.extend_layer(r.rid, l, 1)
@@ -243,12 +299,14 @@ class LayerKVEngine:
         kv_lens = [r.prompt_len + r.tokens_out - 1 for r in sel]
         toks = [r.generated[-1] for r in sel]
         new_toks = self.ex.decode(toks, tables, kv_lens)
-
-        avg_ctx = int(sum(kv_lens) / R) + 1
-        self.now += self.cost.decode_step_time(R, avg_ctx, 0.0)
         for r, tok in zip(sel, new_toks):
             r.generated.append(tok)
             r.tokens_out += 1
+        avg_ctx = int(sum(kv_lens) / R) + 1
+        return self.cost.decode_step_time(R, avg_ctx, 0.0)
+
+    def _retire_finished(self) -> None:
+        for r in list(self.decoding):
             if r.tokens_out >= r.output_len:
                 r.finish_time = self.now
                 r.phase = Phase.FINISHED
@@ -257,12 +315,114 @@ class LayerKVEngine:
                 self.predictor.observe(r.output_len)
                 self.decoding.remove(r)
                 self.done.append(r)
+
+    # ---------------------------------------------------------------- step
+    def _admit_waiting(self) -> int:
+        """Shared admission loop. Exclusive mode runs each admitted prefill
+        immediately (`_do_prefill`); chunked mode only allocates and queues
+        the request for chunk-by-chunk prefill."""
+        if not self.waiting:
+            return 0
+        if self.ec.policy == "layerkv" and self.ec.slo_aware:
+            budget_n = self.sched.max_prefills(
+                list(self.waiting), self.decoding, self.now)
+        else:
+            budget_n = len(self.waiting)
+        admitted = 0
+        while self.waiting and budget_n > 0 and \
+                len(self.decoding) + len(self.prefilling) \
+                < self.ec.max_batch_size:
+            r = self.waiting[0]
+            if self.bm.num_free(DEVICE) < self._device_need(r):
+                break
+            if self.ec.chunked:
+                alloc = self._alloc_prefill(r)
+                if alloc is None:
+                    break
+                self.waiting.popleft()
+                self.host_layers[r.rid] = len(alloc[1])
+                r.phase = Phase.PREFILL
+                r.prefill_start = self.now
+                self.prefilling.append(r)
+            else:
+                self.waiting.popleft()
+                r.prefill_start = self.now
+                if not self._do_prefill(r):
+                    self.waiting.appendleft(r)
+                    break
+            admitted += 1
+            budget_n -= 1
+        return admitted
+
+    def step(self) -> bool:
+        """One scheduler iteration. Returns False when fully idle."""
+        if self.ec.chunked:
+            return self._step_chunked()
+        if self._admit_waiting():
+            return True
+        if not self.decoding:
+            return False
+        sel = self._select_runnable()
+        self.now += self._run_decode(sel)
+        self._retire_finished()
+        return True
+
+    def _step_chunked(self) -> bool:
+        """One chunked-mode iteration: admit into the chunk queue, run up to
+        `chunk_size` prompt-chunk tokens (FCFS, Eq.1-tightened when
+        slo_aware) plus one decode step, and advance the clock by
+        max(chunk compute, decode compute) — mixed batching."""
+        self._admit_waiting()
+        if not (self.prefilling or self.decoding):
+            return False
+
+        # decode batch first: its tokens count against the iteration's
+        # token budget (same semantics as the simulator)
+        sel: List[Request] = []
+        if self.decoding:
+            sel = self._select_runnable(allow_empty=bool(self.prefilling))
+
+        # chunk assembly: FCFS under the per-iteration token budget
+        if self.ec.policy == "layerkv" and self.ec.slo_aware:
+            cap = self.sched.max_chunk_tokens(
+                self.decoding, self.now, self.ec.chunk_size,
+                floor=self.ec.chunk_floor)
+        else:
+            cap = self.ec.chunk_size
+        budget = cap - len(sel)
+        if self.prefilling and not sel:
+            budget = max(budget, self.ec.chunk_floor)
+        chunk_work: List[tuple] = []
+        for r in list(self.prefilling):
+            if budget <= 0:
+                break
+            c = min(budget, r.prefill_remaining)
+            chunk_work.append((r, c))
+            budget -= c
+
+        chunk_time = 0.0
+        for r, c in chunk_work:
+            chunk_time += self.cost.chunk_prefill_time(c, r.prefill_done)
+            self._run_chunk(r, c)
+
+        dec_time = self._run_decode(sel) if sel else 0.0
+        self.now += max(chunk_time, dec_time)
+
+        # requests whose final chunk just ran get their first token now
+        for r, _ in chunk_work:
+            if r.prefill_complete and r.phase is Phase.PREFILL:
+                r.first_token_time = self.now
+                r.tokens_out = 1
+                r.phase = Phase.DECODE
+                self.prefilling.remove(r)
+                self.decoding.append(r)
+        self._retire_finished()
         return True
 
     # ----------------------------------------------------------------- run
     def run(self, requests: List[Request]) -> List[Request]:
         pending = deque(sorted(requests, key=lambda r: r.arrival))
-        while pending or self.waiting or self.decoding:
+        while pending or self.waiting or self.prefilling or self.decoding:
             while pending and pending[0].arrival <= self.now:
                 self.waiting.append(pending.popleft())
             if not self.step():

@@ -10,7 +10,7 @@ Decoder-only families (dense / moe) — the families the paper evaluates.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +19,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models import build_model, layers
+from repro.models.model import _mask_pad_logits
 
 
 def _round_up(n, m):
@@ -85,6 +86,39 @@ class PagedExecutor:
         else:
             self.host_pool = self._scatter_layer(self.host_pool, ids, k, v)
 
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _scatter_slice(self, pool, blk_ids, offs, k, v):
+        """Write C tokens of one layer's KV into per-token (block, offset)
+        slots — the partial-block append used by chunked prefill."""
+        pool = pool.at[blk_ids, offs, 0].set(k.astype(pool.dtype))
+        return pool.at[blk_ids, offs, 1].set(v.astype(pool.dtype))
+
+    def write_layer_slice(self, tier: str, block_ids: List[int],
+                          token_offset: int, k, v):
+        """Append one layer's chunk KV (C, KV, hd) into `block_ids` starting
+        at absolute token `token_offset` (need not be block-aligned)."""
+        C = k.shape[0]
+        pos = np.arange(token_offset, token_offset + C)
+        blk = jnp.asarray(np.asarray(block_ids, np.int32)
+                          [pos // self.block_size])
+        off = jnp.asarray(pos % self.block_size, jnp.int32)
+        if tier == "device":
+            self.device_pool = self._scatter_slice(
+                self.device_pool, blk, off, k, v)
+        else:
+            self.host_pool = self._scatter_slice(
+                self.host_pool, blk, off, k, v)
+
+    def gather_layer(self, tier: str, block_ids: List[int]):
+        """Dense (nb*BS, KV, hd) K and V views of one layer's block list —
+        the contiguous prefix buffer a prefill chunk attends against."""
+        pool = self.device_pool if tier == "device" else self.host_pool
+        gathered = pool[jnp.asarray(block_ids, jnp.int32)]
+        nb = len(block_ids)
+        k = gathered[:, :, 0].reshape(nb * self.block_size, *pool.shape[3:])
+        v = gathered[:, :, 1].reshape(nb * self.block_size, *pool.shape[3:])
+        return k, v
+
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=2)
     def _copy_blocks(self, src, dst, src_ids, dst_ids):
         return dst.at[dst_ids].set(src[src_ids])
@@ -98,6 +132,61 @@ class PagedExecutor:
             self.device_pool = self._copy_blocks(src, self.device_pool, si, di)
         else:
             self.host_pool = self._copy_blocks(src, self.host_pool, si, di)
+
+    # ------------------------------------------------------- chunked prefill
+    @functools.partial(jax.jit, static_argnums=0)
+    def _chunk_forward(self, params, tokens, kbuf, vbuf, offset, kv_valid):
+        """One prefill chunk at absolute token `offset`. tokens: (C,) int32;
+        kbuf/vbuf: (L, S_buf, KV, hd) dense prefix buffers gathered from the
+        pools (rows >= offset ignored). Causal masking runs against the
+        cached prefix via q_offset; kv_valid = offset + C masks the tail.
+        Returns (last-position logits, k_chunk, v_chunk) with chunk KV
+        shaped (L, C, KV, hd) for the caller to append into the pools."""
+        cfg = self.cfg
+        C = tokens.shape[0]
+        x = params["embed"][tokens][None]               # (1, C, d)
+        positions = offset + jnp.arange(C)[None]        # (1, C)
+        if cfg.pos_emb == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, 1, C))
+        ks_out, vs_out = [], []
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            h = layers.apply_norm(cfg, lp["attn_norm"], x)
+            q, k, v = layers.qkv_proj(cfg, lp["attn"], h)
+            q = layers.apply_rope(cfg, q, positions)
+            k = layers.apply_rope(cfg, k, positions)
+            kb = jax.lax.dynamic_update_slice(
+                kbuf[l], k[0].astype(kbuf.dtype), (offset, 0, 0))
+            vb = jax.lax.dynamic_update_slice(
+                vbuf[l], v[0].astype(vbuf.dtype), (offset, 0, 0))
+            o = ops.flash_attention(q, kb[None], vb[None], causal=True,
+                                    kv_len=kv_valid.reshape(1),
+                                    q_offset=offset)
+            x = x + layers.attn_out(cfg, lp["attn"], o)
+            h = layers.apply_norm(cfg, lp["mlp_norm"], x)
+            if cfg.family == "moe":
+                from repro.models import moe as moe_mod
+                f, _ = moe_mod.moe_ffn(cfg, lp["moe"], h, dropless=True)
+            else:
+                f = layers.mlp(cfg, lp["mlp"], h)
+            x = x + f
+            ks_out.append(k[0])
+            vs_out.append(v[0])
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["lm_head"])
+        logits = _mask_pad_logits(cfg, x[0, -1] @ w)
+        return logits, jnp.stack(ks_out), jnp.stack(vs_out)
+
+    def prefill_chunk(self, chunk: List[int], offset: int, kbuf, vbuf):
+        """Run `chunk` prompt tokens starting at `offset`. Returns
+        (logits, k_chunk, v_chunk); logits stay on-device (async) — the
+        caller argmaxes them only on a request's FINAL chunk, so
+        intermediate chunks never force a host sync."""
+        return self._chunk_forward(
+            self.params, jnp.asarray(chunk, jnp.int32), kbuf, vbuf,
+            jnp.asarray(offset, jnp.int32),
+            jnp.asarray(offset + len(chunk), jnp.int32))
 
     # --------------------------------------------------------------- decode
     def _paged_decode(self, params, tokens, tables, kv_lens, dpool):

@@ -31,6 +31,18 @@ class Request:
     decode_start: float = -1.0
     generated: List[int] = dataclasses.field(default_factory=list)
 
+    # --- chunked-prefill progress (scheduler-owned) --------------------------
+    prefill_done: int = 0            # prompt tokens whose KV is cached
+    n_chunks: int = 0                # chunks this prefill was split into
+
+    @property
+    def prefill_remaining(self) -> int:
+        return max(self.prompt_len - self.prefill_done, 0)
+
+    @property
+    def prefill_complete(self) -> bool:
+        return self.prefill_done >= self.prompt_len
+
     # --- derived metrics -----------------------------------------------------
     @property
     def ttft(self) -> float:

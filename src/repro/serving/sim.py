@@ -6,18 +6,34 @@ model, reproducing the paper's 7B-70B figures on a CPU-only box. The only
 thing swapped vs. the real engine is the executor: step latencies come from
 `CostModel` instead of measured JAX step times.
 
-Engine-step semantics follow vLLM 0.5.5 (the paper's baseline): iteration-
-level batching; prefills run exclusively (no chunked prefill), stalling the
-decode batch; decode batches every running sequence; preemption-by-recompute
-when a decode step cannot get a block.
+Engine-step semantics (SimConfig.chunked selects the second mode):
 
-Policies:
+  exclusive  vLLM 0.5.5 (the paper's baseline): iteration-level batching;
+             prefills run exclusively, stalling the decode batch; decode
+             batches every running sequence; preemption-by-recompute when a
+             decode step cannot get a block.
+  chunked    chunked prefill with mixed batching: each prompt is split into
+             scheduler-controlled chunks under a per-iteration token budget
+             (max_prefill_tokens, tightened by Eq.1 slack when slo_aware);
+             chunk tokens batch WITH the decode tokens, so an iteration
+             costs max(chunk compute, decode compute) instead of their sum.
+             Chunk costs telescope exactly (CostModel.chunk_prefill_time),
+             and each chunk's offloaded-layer KV is submitted to the link
+             ledger as it is produced (chunk-granular d2h overlap).
+
+Policies (orthogonal to the step semantics — a 3-axis matrix
+policy x slo_aware x chunked):
   'vllm'     request-wise allocation: a prefill is admitted only when KV
              blocks for ALL layers of the whole prompt are free on device.
   'layerkv'  layer-wise allocation (paper): device blocks for the x retained
              layers (+1 transient send-buffer layer), the remaining L-x
              layers stream to host hidden under prefill compute; optional
              SLO-aware admission (Alg. 1) and Eq.5 proactive eviction.
+
+Reproduce the chunked-vs-exclusive TTFT comparison with
+`PYTHONPATH=src python benchmarks/fig4_context_sweep.py` (adds a
+layerkv+chunked arm next to the two exclusive-mode baselines) or the
+arrival-rate sweep in `benchmarks/fig6_fig7_arrival.py`.
 """
 from __future__ import annotations
 
@@ -41,6 +57,8 @@ class SimConfig:
     policy: str = "layerkv"             # 'layerkv' | 'vllm'
     slo_aware: bool = True              # Alg.1 admission (layerkv only)
     proactive: bool = True              # Eq.5 forecast eviction
+    chunked: bool = False               # chunked prefill + mixed batching
+    chunk_floor: int = 16               # min chunk tokens/iter (progress)
     num_device_blocks: int = 0          # 0 -> derive from HW memory
     num_host_blocks: int = 1 << 20
     block_size: int = 16
@@ -64,6 +82,9 @@ class SimMetrics:
     slo_violations: int
     n_requests: int
     preemptions: int
+    # chunked-mode accounting (zero in exclusive mode)
+    chunk_iters: int = 0                 # iterations that carried a chunk
+    max_iter_prefill_tokens: int = 0     # largest per-iteration chunk total
 
     @property
     def mean_ttft(self):
@@ -134,6 +155,8 @@ class ServingSimulator:
         self.host_layers: Dict[str, int] = {}   # layers resident on host
         self.plans: Dict[str, object] = {}
         self.preemptions = 0
+        self._chunk_iters = 0
+        self._max_iter_prefill_tokens = 0
 
     # ------------------------------------------------------------ helpers
     def _blocks(self, tokens: int) -> int:
@@ -149,12 +172,14 @@ class ServingSimulator:
         send_buf = 1 if plan.offload_layers else 0
         return self._blocks(r.prompt_len) * (plan.x + send_buf)
 
-    def _admit(self, r: Request, now: float) -> bool:
+    def _admit(self, r: Request, now: float, ledger: bool = True) -> bool:
         """Try to allocate for r's prefill; True on success.
 
         LayerKV retains *as many layers as currently fit* (free
         prefetching, §3.1.1) but never fewer than Eq.4's x; only the
-        remainder is offloaded during prefill."""
+        remainder is offloaded during prefill. With `ledger=False` the
+        d2h traffic is NOT submitted here — chunked mode accounts it
+        chunk-by-chunk as each chunk's KV is produced."""
         try:
             if self.sim.policy == "vllm":
                 for l in range(self.L):
@@ -176,7 +201,7 @@ class ServingSimulator:
                 for l in off:
                     self.bm.alloc_layer(r.rid, l, r.prompt_len, HOST)
                 self.host_layers[r.rid] = len(off)
-                if off:
+                if off and ledger:
                     self.off.prefill_offload_done(
                         now, r.prompt_len,
                         OffloadPlan(retain, off, len(retain)))
@@ -228,6 +253,8 @@ class ServingSimulator:
         r.phase = Phase.QUEUED
         r.tokens_out = 0
         r.first_token_time = -1.0
+        r.prefill_done = 0
+        r.n_chunks = 0
         waiting.appendleft(r)
         self.preemptions += 1
 
@@ -276,6 +303,9 @@ class ServingSimulator:
             dev_layers = self.bm.layers_on(r.rid, DEVICE)
             ctx = r.prompt_len + r.tokens_out
             for l in dev_layers:
+                a = self.bm.allocation(r.rid, l)
+                if self.bm.num_free(HOST) < len(a.blocks):
+                    return  # host tier full: nothing more to evict into
                 self.bm.move_layer(r.rid, l, HOST)
                 if self.bm.num_free(DEVICE) >= min_free_blocks:
                     break
@@ -299,15 +329,84 @@ class ServingSimulator:
                 continue
             n_evict = max(len(dev_layers) // 2, 1)
             ctx = r.prompt_len + r.tokens_out
+            moved = 0
             for l in dev_layers[:n_evict]:
+                a = self.bm.allocation(r.rid, l)
+                if self.bm.num_free(HOST) < len(a.blocks):
+                    break  # host tier full: stop evicting
                 self.bm.move_layer(r.rid, l, HOST)
+                moved += 1
+            if not moved:
+                return
             self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
-            self.off.proactive_offload(now, ctx, n_evict)
+            self.off.proactive_offload(now, ctx, moved)
             if self.bm.num_free(DEVICE) >= thresh:
                 break
 
+    # ------------------------------------------------------ shared pieces
+    def _decode_bookkeep(self, t: float, sel: List[Request],
+                         decoding: List[Request], waiting: deque,
+                         done: List[Request]) -> None:
+        """Post-step accounting for one decode batch: grow allocations,
+        evict-or-preempt on exhaustion, retire finished requests."""
+        finished: List[Request] = []
+        for r in sel:
+            ok = self._extend_for_token(r)
+            if not ok and self.sim.policy == "layerkv":
+                # evict device layers (newest requests first) to host
+                # instead of preempting (paper §3.1.1)
+                self._evict_for_space(t, decoding)
+                ok = self._extend_for_token(r)
+            if not ok:
+                self._preempt(r, waiting)
+                decoding.remove(r)
+                continue
+            r.tokens_out += 1
+            if r.tokens_out >= r.output_len:
+                r.finish_time = t
+                r.phase = Phase.FINISHED
+                self.bm.free_request(r.rid)
+                self.host_layers.pop(r.rid, None)
+                self.predictor.observe(r.output_len)
+                done.append(r)
+                finished.append(r)
+        for r in finished:
+            decoding.remove(r)
+
+    def _deadlock(self, r: Request) -> RuntimeError:
+        return RuntimeError(
+            f"deadlock: head request {r.rid} "
+            f"(prompt {r.prompt_len}) needs "
+            f"{self._device_need(r)} blocks, pool has "
+            f"{self.bm.pools[DEVICE].num_blocks}")
+
+    def _metrics(self, done: List[Request]) -> SimMetrics:
+        mk = max((r.finish_time for r in done), default=0.0)
+        return SimMetrics(
+            ttft=[r.ttft for r in done],
+            queuing=[r.queuing_delay for r in done],
+            prefill_lat=[r.prefill_latency for r in done],
+            tpot=[r.tpot for r in done],
+            finish_times=[r.finish_time for r in done],
+            tokens_out=sum(r.tokens_out for r in done),
+            makespan=mk,
+            slo_violations=sum(1 for r in done if r.slo_violated()),
+            n_requests=len(done),
+            preemptions=self.preemptions,
+            chunk_iters=self._chunk_iters,
+            max_iter_prefill_tokens=self._max_iter_prefill_tokens,
+        )
+
     # ---------------------------------------------------------------- run
     def run(self, requests: List[Request]) -> SimMetrics:
+        self._chunk_iters = 0
+        self._max_iter_prefill_tokens = 0
+        if self.sim.chunked:
+            return self._run_chunked(requests)
+        return self._run_exclusive(requests)
+
+    def _run_exclusive(self, requests: List[Request]) -> SimMetrics:
+        """vLLM 0.5.5 engine-step loop: prefills stall the decode batch."""
         pending = deque(sorted(requests, key=lambda r: r.arrival))
         waiting: deque[Request] = deque()
         decoding: List[Request] = []
@@ -352,6 +451,8 @@ class ServingSimulator:
                 for r in admitted:
                     r.first_token_time = t
                     r.tokens_out = 1
+                    r.prefill_done = r.prompt_len
+                    r.n_chunks += 1
                     r.phase = Phase.DECODE
                     decoding.append(r)
                 continue
@@ -367,29 +468,7 @@ class ServingSimulator:
                 if self.sim.policy == "layerkv":
                     self._promote(t, dt, decoding)
                 t += dt
-                finished: List[Request] = []
-                for r in sel:
-                    ok = self._extend_for_token(r)
-                    if not ok and self.sim.policy == "layerkv":
-                        # evict device layers (newest requests first) to
-                        # host instead of preempting (paper §3.1.1)
-                        self._evict_for_space(t, decoding)
-                        ok = self._extend_for_token(r)
-                    if not ok:
-                        self._preempt(r, waiting)
-                        decoding.remove(r)
-                        continue
-                    r.tokens_out += 1
-                    if r.tokens_out >= r.output_len:
-                        r.finish_time = t
-                        r.phase = Phase.FINISHED
-                        self.bm.free_request(r.rid)
-                        self.host_layers.pop(r.rid, None)
-                        self.predictor.observe(r.output_len)
-                        done.append(r)
-                        finished.append(r)
-                for r in finished:
-                    decoding.remove(r)
+                self._decode_bookkeep(t, sel, decoding, waiting, done)
                 continue
 
             # ---- idle: jump to next arrival --------------------------------
@@ -397,28 +476,144 @@ class ServingSimulator:
                 t = max(t, pending[0].arrival)
             elif waiting:
                 # waiting but nothing admissible and nothing decoding:
-                # blocked forever would be a bug — force-admit head
+                # blocked forever would be a bug — force-admit the head and
+                # run its prefill exclusively
                 r = waiting[0]
                 if self.bm.num_free(DEVICE) >= self._device_need(r) \
                         and self._admit(r, t):
+                    waiting.popleft()
+                    r.phase = Phase.PREFILL
+                    r.prefill_start = t
+                    t += self.cost.prefill_time(r.prompt_len)
+                    r.first_token_time = t
+                    r.tokens_out = 1
+                    r.prefill_done = r.prompt_len
+                    r.n_chunks += 1
+                    r.phase = Phase.DECODE
+                    decoding.append(r)
                     continue
-                raise RuntimeError(
-                    f"deadlock: head request {r.rid} "
-                    f"(prompt {r.prompt_len}) needs "
-                    f"{self._device_need(r)} blocks, pool has "
-                    f"{self.bm.pools[DEVICE].num_blocks}")
+                raise self._deadlock(r)
 
         self.bm.check()
-        mk = max((r.finish_time for r in done), default=0.0)
-        return SimMetrics(
-            ttft=[r.ttft for r in done],
-            queuing=[r.queuing_delay for r in done],
-            prefill_lat=[r.prefill_latency for r in done],
-            tpot=[r.tpot for r in done],
-            finish_times=[r.finish_time for r in done],
-            tokens_out=sum(r.tokens_out for r in done),
-            makespan=mk,
-            slo_violations=sum(1 for r in done if r.slo_violated()),
-            n_requests=len(done),
-            preemptions=self.preemptions,
-        )
+        return self._metrics(done)
+
+    def _run_chunked(self, requests: List[Request]) -> SimMetrics:
+        """Chunked-prefill engine-step loop: every iteration batches up to
+        `max_prefill_tokens` prompt-chunk tokens (FCFS across in-flight
+        prefills, Eq.1-tightened when slo_aware) WITH the decode tokens;
+        the iteration costs max(chunk compute, decode compute)."""
+        pending = deque(sorted(requests, key=lambda r: r.arrival))
+        waiting: deque[Request] = deque()
+        prefilling: List[Request] = []
+        decoding: List[Request] = []
+        done: List[Request] = []
+        t = 0.0
+
+        while pending or waiting or prefilling or decoding:
+            while pending and pending[0].arrival <= t:
+                waiting.append(pending.popleft())
+
+            # ---- admission: allocate KV, enter the chunk queue -------------
+            if waiting:
+                if self.sim.policy == "layerkv" and self.sim.slo_aware:
+                    budget_n = self.sched.max_prefills(list(waiting),
+                                                       decoding, t)
+                else:
+                    budget_n = len(waiting)
+                while waiting and budget_n > 0 and \
+                        len(decoding) + len(prefilling) \
+                        < self.sim.max_batch_size:
+                    r = waiting[0]
+                    if self.bm.num_free(DEVICE) < self._device_need(r):
+                        break
+                    if not self._admit(r, t, ledger=False):
+                        break
+                    waiting.popleft()
+                    r.phase = Phase.PREFILL
+                    r.prefill_start = t
+                    prefilling.append(r)
+                    budget_n -= 1
+
+            if not (prefilling or decoding):
+                # ---- idle: jump to next arrival ----------------------------
+                if pending:
+                    t = max(t, pending[0].arrival)
+                    continue
+                if waiting:
+                    r = waiting[0]
+                    if self.bm.num_free(DEVICE) >= self._device_need(r) \
+                            and self._admit(r, t, ledger=False):
+                        waiting.popleft()
+                        r.phase = Phase.PREFILL
+                        r.prefill_start = t
+                        prefilling.append(r)
+                        continue
+                    raise self._deadlock(r)
+                continue
+
+            # ---- one mixed iteration ---------------------------------------
+            if self.sim.policy == "layerkv" and self.sim.proactive:
+                self._proactive_evict(t, decoding)
+            sel: List[Request] = []
+            host_bytes = 0.0
+            avg_ctx = 0
+            if decoding:
+                sel, host_bytes = self._select_decode_batch(t, decoding)
+                avg_ctx = int(sum(r.prompt_len + r.tokens_out for r in sel)
+                              / len(sel))
+
+            # chunk assembly: FCFS (no starvation) under the token budget;
+            # this iteration's decode tokens count against the budget
+            if self.sim.policy == "layerkv" and self.sim.slo_aware:
+                cap = self.sched.max_chunk_tokens(
+                    decoding, t, self.sim.max_prefill_tokens,
+                    floor=self.sim.chunk_floor)
+            else:
+                cap = self.sim.max_prefill_tokens
+            budget = cap - len(sel)
+            if prefilling and not sel:
+                budget = max(budget, self.sim.chunk_floor)
+            chunks: List[tuple] = []
+            for r in sorted(prefilling, key=lambda q: q.prefill_start):
+                if budget <= 0:
+                    break
+                c = min(budget, r.prefill_remaining)
+                chunks.append((r, c))
+                budget -= c
+            t_chunk = sum(self.cost.chunk_prefill_time(c, r.prefill_done)
+                          for r, c in chunks)
+
+            # chunk-granular d2h: each chunk's offloaded-layer KV enters
+            # the link ledger as it is produced, overlapping chunk compute
+            if self.sim.policy == "layerkv":
+                for r, c in chunks:
+                    n_off = self.host_layers.get(r.rid, 0)
+                    if n_off:
+                        self.off.ledger.submit(
+                            t, self.cost.kv_bytes(c, n_off), "offload")
+
+            dt = self.cost.mixed_step_time(t_chunk, len(sel), avg_ctx,
+                                           host_bytes)
+            if self.sim.policy == "layerkv" and decoding:
+                self._promote(t, dt, decoding)
+            t += dt
+
+            if chunks:
+                self._chunk_iters += 1
+                self._max_iter_prefill_tokens = max(
+                    self._max_iter_prefill_tokens,
+                    sum(c for _, c in chunks))
+            for r, c in chunks:
+                r.prefill_done += c
+                r.n_chunks += 1
+                if r.prefill_complete:
+                    r.first_token_time = t
+                    r.tokens_out = 1
+                    r.phase = Phase.DECODE
+                    prefilling.remove(r)
+                    decoding.append(r)
+
+            self._decode_bookkeep(t, sel, decoding, waiting, done)
+
+        self.bm.check()
+        return self._metrics(done)

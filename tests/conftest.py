@@ -4,8 +4,6 @@ import os
 # flag in a separate process); keep jax quiet and deterministic
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import pytest  # noqa: E402
-
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,180 @@
+"""Chunked-prefill coverage (the third axis of the scheduling matrix).
+
+Three layers of guarantees:
+  * simulator invariants — the per-iteration token budget bounds chunk
+    work (no decode starvation), and at high load chunked TTFT is no
+    worse than the exclusive-prefill step semantics;
+  * engine losslessness — with chunking on, generated tokens match the
+    unchunked engine exactly, in all three scheduling modes (vllm,
+    layerkv exclusive, layerkv chunked) and under tight pools that force
+    real offload/reload traffic mid-prefill;
+  * `interleave_offload_layers` edge cases under per-chunk admission.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.core import interleave_offload_layers
+from repro.serving.costmodel import L20, CostModel
+from repro.serving.engine import EngineConfig, LayerKVEngine
+from repro.serving.request import Request
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import sharegpt_like
+
+RATE = 8.0  # congested regime: queue pressure on every arrival
+
+
+def _sim(policy, chunked, n=150, **kw):
+    return ServingSimulator(
+        LLAMA2_7B, L20,
+        SimConfig(policy=policy, chunked=chunked, **kw)).run(
+        sharegpt_like(n, rate=RATE, seed=7))
+
+
+# ------------------------------------------------------------- simulator ---
+
+def test_sim_chunked_respects_token_budget():
+    """No decode starvation: one iteration never carries more prefill
+    tokens than max_prefill_tokens, for either policy."""
+    for policy in ("vllm", "layerkv"):
+        m = _sim(policy, True, max_prefill_tokens=512)
+        assert m.chunk_iters > 0
+        assert 0 < m.max_iter_prefill_tokens <= 512
+
+
+def test_sim_chunked_ttft_not_worse_at_high_load():
+    """Chunk costs telescope (no extra prefill compute) and decode hides
+    under chunk compute, so at high arrival rates TTFT can only improve
+    vs the exclusive-prefill step semantics — for both policies."""
+    for policy in ("vllm", "layerkv"):
+        excl = _sim(policy, False)
+        chnk = _sim(policy, True)
+        assert chnk.p99_ttft <= excl.p99_ttft + 1e-9
+        assert chnk.mean_ttft <= excl.mean_ttft + 1e-9
+
+
+def test_sim_chunked_beats_exclusive_vllm_tail():
+    """The acceptance bar: layerkv+chunked p99 TTFT strictly below the
+    exclusive-prefill vLLM baseline at high arrival rates."""
+    mv = _sim("vllm", False)
+    mc = _sim("layerkv", True)
+    assert mc.p99_ttft < mv.p99_ttft
+
+
+def test_sim_chunked_block_accounting_clean():
+    sim = ServingSimulator(LLAMA2_7B, L20,
+                           SimConfig(policy="layerkv", chunked=True))
+    sim.run(sharegpt_like(60, rate=3.0, seed=11))
+    sim.bm.check()
+    assert sim.bm.num_free("device") == sim.bm.pools["device"].num_blocks
+    assert not sim.bm.live_requests()
+
+
+def test_chunk_cost_telescopes():
+    """CostModel.chunk_prefill_time sums exactly to Eq.3's whole-prompt
+    cost for ANY chunking — chunking moves compute, never adds it."""
+    cm = CostModel(LLAMA2_7B, L20)
+    for total, sizes in [(1024, [256] * 4), (1000, [512, 488]),
+                         (777, [1] + [97] * 8)]:
+        assert sum(sizes) == total
+        acc, p = 0.0, 0
+        for c in sizes:
+            acc += cm.chunk_prefill_time(c, p)
+            p += c
+        assert acc == pytest.approx(cm.prefill_time(total), rel=1e-12)
+    assert cm.chunk_prefill_time(0, 123) == 0.0
+
+
+# ------------------------------------------- interleaving, per-chunk Eq.4 --
+
+def test_interleave_retain_all_and_none():
+    assert interleave_offload_layers(7, 7) == []
+    assert interleave_offload_layers(7, 0) == list(range(7))
+    assert interleave_offload_layers(1, 0) == [0]
+    assert interleave_offload_layers(1, 1) == []
+
+
+def test_interleave_clamps_out_of_range():
+    assert interleave_offload_layers(4, 9) == []      # retain > L
+    assert interleave_offload_layers(4, -3) == [0, 1, 2, 3]
+
+
+def test_interleave_single_offload_positions():
+    # L-1 retained: exactly one offloaded layer, a valid index, stable
+    for L in range(2, 12):
+        off = interleave_offload_layers(L, L - 1)
+        assert len(off) == 1 and 0 <= off[0] < L
+
+
+def test_interleave_stable_across_chunk_admissions():
+    """Per-chunk admission re-derives the offload set from the SAME
+    retain_n every chunk; the split must be deterministic and disjoint
+    so chunk K never writes a layer chunk K-1 placed elsewhere."""
+    for L in (1, 2, 5, 8, 31):
+        for retain in range(0, L + 1):
+            a = interleave_offload_layers(L, retain)
+            b = interleave_offload_layers(L, retain)
+            assert a == b
+            retain_set = set(range(L)) - set(a)
+            assert len(retain_set) == retain
+            assert retain_set.isdisjoint(a)
+
+
+# ------------------------------------------------------------ real engine --
+
+def _workload(cfg, n, plen_range, out_range, seed=0):
+    r0 = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(r0.randint(*plen_range))
+        reqs.append(Request(
+            rid=f"r{i}", prompt_len=plen,
+            output_len=int(r0.randint(*out_range)), arrival=0.0,
+            prompt=[int(x) for x in r0.randint(0, cfg.vocab_size, plen)]))
+    return reqs
+
+
+def _run_engine(cfg, policy, ndb, reqs, chunked=False, chunk_size=24):
+    eng = LayerKVEngine(
+        cfg, None,
+        EngineConfig(policy=policy, slo_aware=False,
+                     num_device_blocks=ndb, num_host_blocks=512,
+                     block_size=8, chunked=chunked, chunk_size=chunk_size),
+        rng=jax.random.PRNGKey(42))
+    done = eng.run(reqs)
+    return {r.rid: r.generated for r in done}, eng
+
+
+@pytest.mark.slow
+def test_engine_chunked_lossless_vs_unchunked():
+    """THE chunked guarantee: splitting a prompt into scheduler-sized
+    chunks (appended into the paged pools at token offsets, causal-masked
+    against the cached prefix) never changes generated tokens."""
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    mk = lambda: _workload(cfg, 5, (28, 52), (8, 16))
+    out_u, _ = _run_engine(cfg, "layerkv", 40, mk(), chunked=False)
+    out_c, eng = _run_engine(cfg, "layerkv", 40, mk(), chunked=True)
+    assert max(r.n_chunks for r in eng.done) > 1, \
+        "workload must actually chunk"
+    assert out_u == out_c
+
+
+@pytest.mark.slow
+def test_engine_chunked_lossless_under_offload():
+    """All three scheduling modes agree under a tight pool that forces
+    offload+reload traffic DURING chunked prefill."""
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    mk = lambda: _workload(cfg, 5, (28, 52), (8, 16), seed=2)
+    out_v, _ = _run_engine(cfg, "vllm", 1024, mk())           # mode 1
+    out_l, _ = _run_engine(cfg, "layerkv", 30, mk())          # mode 2
+    out_c, eng = _run_engine(cfg, "layerkv", 30, mk(), chunked=True)  # 3
+    n_off = len([t for t in eng.off.ledger.log if t.kind == "offload"])
+    n_rel = len([t for t in eng.off.ledger.log if t.kind == "reload"])
+    assert n_off > 0 and n_rel > 0, "pool must be tight enough to offload"
+    assert out_v == out_l == out_c

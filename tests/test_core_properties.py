@@ -1,7 +1,17 @@
-"""Hypothesis property tests for the LayerKV core invariants."""
-import hypothesis.strategies as st
+"""Hypothesis property tests for the LayerKV core invariants.
+
+Degrades to a skip on minimal installs: `hypothesis` is an optional test
+dependency (declared in pyproject's `test` extra), and the suite must still
+collect without it.
+"""
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional 'hypothesis' test dependency")
+
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.configs import get_config
 from repro.core import (

@@ -3,10 +3,6 @@
 These exercise the full stack: config -> model -> engine/simulator ->
 metrics, at smoke scale.
 """
-import dataclasses
-
-import jax
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke_config

@@ -1,23 +1,31 @@
 """Training substrate: loss goes down, checkpoint round-trips, optimizer
-math properties."""
+math properties.
+
+Degrades to a skip on minimal installs (same as test_core_properties):
+`hypothesis` is an optional test dependency and the suite must still
+collect without it.
+"""
 import dataclasses
-import os
 import tempfile
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
 
-from repro.configs import get_smoke_config
-from repro.training import checkpoint
-from repro.training.data import DataConfig, SyntheticLM
-from repro.training.optimizer import (
-    AdamWConfig, adamw_update, global_norm, init_opt_state, lr_at,
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional 'hypothesis' test dependency")
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.training import checkpoint  # noqa: E402
+from repro.training.data import DataConfig, SyntheticLM  # noqa: E402
+from repro.training.optimizer import (  # noqa: E402
+    AdamWConfig, adamw_update, init_opt_state, lr_at,
 )
-from repro.training.train_loop import train
+from repro.training.train_loop import train  # noqa: E402
 
 
 @pytest.mark.slow
