@@ -3,10 +3,24 @@
 Yi-34B: 60L d_model=7168 56H GQA kv=8 d_ff=20480 vocab=64000 (200k ctx)
 [hf:01-ai/Yi-34B-200K] — built here inline since it is the paper's own
 evaluation model, not part of the assigned pool.
+
+TP > 1 on the L20 testbed shares the PCIe link between KV offload traffic
+and the tensor-parallel all-reduce, so each sim reserves the link for a
+fraction of every prefill iteration (`collective_reserve_frac`, paper
+§3.1.3): KV transfers are cut into sub-units that defer around the
+reservation instead of colliding with the collective's critical path. The
+emitted rows report how many transfers deferred (`deferred_n`) and the
+mean queueing delay the ledger observed.
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+if __package__ in (None, ""):  # `python benchmarks/fig5_parallelism.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import emit
 from repro.configs.base import ModelConfig
@@ -25,15 +39,26 @@ def main(n_requests: int = 80, smoke: bool = False) -> None:
     for dop in ([2] if smoke else [2, 4, 8]):
         t0 = time.perf_counter()
         hw = L20.scaled(dop)
+        # TP shares the PCIe link with the all-reduce: reserve it for a
+        # slice of each prefill iteration (§3.1.3 contention avoidance)
+        frac = 0.25 if dop > 1 else 0.0
         mk = lambda: fixed_length(n_requests, 2048, 384, rate=1.0, seed=4)
-        mv = ServingSimulator(YI_34B, hw, SimConfig(policy="vllm")).run(mk())
-        ml = ServingSimulator(YI_34B, hw,
-                              SimConfig(policy="layerkv")).run(mk())
+        mv = ServingSimulator(YI_34B, hw, SimConfig(
+            policy="vllm", collective_reserve_frac=frac)).run(mk())
+        sim_l = ServingSimulator(YI_34B, hw, SimConfig(
+            policy="layerkv", collective_reserve_frac=frac))
+        ml = sim_l.run(mk())
         us = (time.perf_counter() - t0) * 1e6
+        log = sim_l.off.ledger.log
+        deferred = [t for t in log if t.start > t.submitted + 1e-12]
+        mean_q = (sum(t.start - t.submitted for t in deferred)
+                  / len(deferred)) if deferred else 0.0
         emit(f"fig5.dop{dop}", us,
              f"vllm_ttft_s={mv.mean_ttft:.3f};lkv_ttft_s={ml.mean_ttft:.3f};"
              f"ttft_speedup_x={mv.mean_ttft/max(ml.mean_ttft,1e-9):.2f};"
-             f"thr_gap_pct={(1-ml.throughput/max(mv.throughput,1e-9))*100:.1f}")
+             f"thr_gap_pct={(1-ml.throughput/max(mv.throughput,1e-9))*100:.1f};"
+             f"deferred_n={len(deferred)};"
+             f"mean_link_queue_ms={mean_q*1e3:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,95 @@
+"""Prefix-cache benchmark: TTFT vs prefix-share ratio (this repo's
+extension beyond the paper — heavy shared-system-prompt traffic).
+
+Three arms per share ratio, all Llama2-7B on L20 at a congested arrival
+rate:
+
+  vllm              exclusive prefill, request-wise allocation (baseline)
+  layerkv_chunked   the PR 1 arm: layer-wise + chunked prefill, no sharing
+  layerkv_prefix    layerkv_chunked + ref-counted cross-request prefix
+                    caching (content-addressed blocks, COW tails)
+
+``main(json_out=...)`` dumps the sweep to JSON; `BENCH_prefix_cache.json`
+in the repo root is that artifact, committed so future PRs can diff the
+perf trajectory. Per-arm prefix-hit-rate is reported (token-granular).
+
+    PYTHONPATH=src python benchmarks/prefix_cache.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Optional
+
+if __package__ in (None, ""):  # `python benchmarks/prefix_cache.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.serving.costmodel import L20
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import shared_prefix
+
+SHARE_RATIOS = [0.0, 0.25, 0.5, 0.75, 0.9]
+ARMS = {
+    "vllm": dict(policy="vllm", chunked=False, prefix_cache=False),
+    "layerkv_chunked": dict(policy="layerkv", chunked=True,
+                            prefix_cache=False),
+    "layerkv_prefix": dict(policy="layerkv", chunked=True,
+                           prefix_cache=True),
+}
+
+
+def _one(arm_kw: dict, n: int, ratio: float, scenario: str):
+    reqs = shared_prefix(n, rate=2.0, scenario=scenario, share_ratio=ratio,
+                         prompt_len=1024, output_len=256, seed=13)
+    m = ServingSimulator(LLAMA2_7B, L20, SimConfig(**arm_kw)).run(reqs)
+    return m
+
+
+def main(n_requests: int = 100, smoke: bool = False,
+         json_out: Optional[str] = None,
+         scenario: str = "system_prompt") -> None:
+    ratios = [0.5] if smoke else SHARE_RATIOS
+    rows = {}
+    for ratio in ratios:
+        t0 = time.perf_counter()
+        ms = {name: _one(kw, n_requests, ratio, scenario)
+              for name, kw in ARMS.items()}
+        us = (time.perf_counter() - t0) * 1e6
+        mb, mc, mp = ms["vllm"], ms["layerkv_chunked"], ms["layerkv_prefix"]
+        emit(f"prefix_cache.share{int(ratio * 100)}", us,
+             f"vllm_ttft_s={mb.mean_ttft:.3f};"
+             f"lkv_chunked_ttft_s={mc.mean_ttft:.3f};"
+             f"lkv_prefix_ttft_s={mp.mean_ttft:.3f};"
+             f"prefix_speedup_x={mc.mean_ttft / max(mp.mean_ttft, 1e-9):.2f};"
+             f"hit_rate={mp.prefix_hit_rate:.2f};"
+             f"prefix_tpot_ms={mp.mean_tpot * 1e3:.1f}")
+        rows[ratio] = {
+            name: {"mean_ttft_s": m.mean_ttft, "p99_ttft_s": m.p99_ttft,
+                   "mean_tpot_ms": m.mean_tpot * 1e3,
+                   "prefix_hit_rate": m.prefix_hit_rate,
+                   "prefix_hit_tokens": m.prefix_hit_tokens,
+                   "preemptions": m.preemptions}
+            for name, m in ms.items()
+        }
+    if json_out:
+        doc = {
+            "benchmark": "prefix_cache_share_sweep",
+            "model": LLAMA2_7B.arch_id,
+            "hw": L20.name,
+            "scenario": scenario,
+            "n_requests": n_requests,
+            "arms": list(ARMS),
+            "by_share_ratio": rows,
+        }
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main(json_out="BENCH_prefix_cache.json")

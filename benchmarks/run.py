@@ -23,7 +23,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="toy scale: CI guard that every script still runs")
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,fig4,fig5,fig6,fig8,kernels")
+                    help="comma list: fig1,fig4,fig5,fig6,fig8,prefix,"
+                         "kernels")
     args = ap.parse_args()
     n = 40 if args.quick else 100
     if args.smoke:
@@ -33,7 +34,7 @@ def main() -> None:
 
     from benchmarks import (fig1_motivation, fig4_context_sweep,
                             fig5_parallelism, fig6_fig7_arrival, fig8_slo,
-                            kernels_micro)
+                            kernels_micro, prefix_cache)
 
     print("name,us_per_call,derived")
     if not only or "fig1" in only:
@@ -49,6 +50,8 @@ def main() -> None:
     if not only or "fig8" in only:
         fig8_slo.main(n_requests=n + 50 if not (args.quick or smoke) else n,
                       smoke=smoke)
+    if not only or "prefix" in only:
+        prefix_cache.main(n_requests=n, smoke=smoke)
     if not only or "kernels" in only:
         kernels_micro.main(smoke=smoke)
 

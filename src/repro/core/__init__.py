@@ -7,10 +7,14 @@ predictor       bucketed generation-length prediction
 forecast        Eq.5 availability state transition
 """
 from repro.core.block_manager import (
+    CACHE_OWNER,
     DEVICE,
     HOST,
     LayerwiseBlockManager,
     PoolExhausted,
+    PrefixAcquisition,
+    PrefixCache,
+    block_hashes,
 )
 from repro.core.forecast import AvailabilityForecast
 from repro.core.offload_engine import (
@@ -27,7 +31,8 @@ from repro.core.predictor import (
 from repro.core.slo_scheduler import SLOScheduler
 
 __all__ = [
-    "DEVICE", "HOST", "LayerwiseBlockManager", "PoolExhausted",
+    "CACHE_OWNER", "DEVICE", "HOST", "LayerwiseBlockManager",
+    "PoolExhausted", "PrefixAcquisition", "PrefixCache", "block_hashes",
     "AvailabilityForecast", "LinkLedger", "OffloadEngine", "OffloadPlan",
     "interleave_offload_layers", "HistogramPredictor", "LengthPredictor",
     "OraclePredictor", "SLOScheduler",

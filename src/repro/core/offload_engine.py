@@ -44,10 +44,12 @@ def interleave_offload_layers(n_layers: int, retain: int) -> List[int]:
 
 @dataclasses.dataclass
 class Transfer:
-    start: float
+    start: float      # when bytes actually began moving (post-queueing)
     end: float
     nbytes: int
-    kind: str  # 'offload' (d2h) | 'reload' (h2d)
+    kind: str         # 'offload' (d2h) | 'reload' (h2d)
+    submitted: float = 0.0  # when the transfer was queued; start - submitted
+    #                         is the link-queueing delay
 
 
 class LinkLedger:
@@ -64,6 +66,9 @@ class LinkLedger:
 
     # collectives (all-reduce) reserve the link on non-NVLink testbeds
     def reserve(self, start: float, dur: float) -> None:
+        # prune expired windows so _blocked stays O(live reservations)
+        self.reservations = [(s, e) for s, e in self.reservations
+                             if e > start]
         self.reservations.append((start, start + dur))
 
     def _blocked(self, t: float) -> Optional[float]:
@@ -75,19 +80,25 @@ class LinkLedger:
     def submit(self, now: float, nbytes: int, kind: str) -> float:
         """Queue a transfer at `now`; returns completion time. The transfer
         is chunked; each chunk checks the link and defers by a fraction of
-        the blocking reservation when occupied (paper §3.1.3)."""
+        the blocking reservation when occupied (paper §3.1.3). The logged
+        `start` is when the FIRST byte moves — after both the link-busy
+        queue and any reservation deferrals — not the submit time."""
         t = max(now, self.busy_until)
         remaining = nbytes
+        start = None
         while remaining > 0:
             blk = self._blocked(t)
             if blk is not None:
                 t += max((blk - t) * self.backoff, 1e-6)
                 continue
+            if start is None:
+                start = t
             sz = min(self.chunk, remaining)
             t += sz / self.bw
             remaining -= sz
         self.busy_until = t
-        self.log.append(Transfer(now, t, nbytes, kind))
+        self.log.append(Transfer(start if start is not None else t, t,
+                                 nbytes, kind, submitted=now))
         return t
 
     def idle_at(self, now: float) -> bool:

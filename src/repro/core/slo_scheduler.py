@@ -13,7 +13,7 @@ N_future by the bucketed length predictor.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Callable, Optional, Sequence
 
 from repro.core.predictor import LengthPredictor
 from repro.serving.costmodel import CostModel
@@ -48,10 +48,16 @@ class SLOScheduler:
 
     # ------------------------------------------------------------- Alg.1
     def max_prefills(self, queue: Sequence[Request],
-                     decoding: Sequence[Request], now: float) -> int:
+                     decoding: Sequence[Request], now: float,
+                     cached_len: Optional[Callable[[Request], int]] = None
+                     ) -> int:
         """Maximum n such that the first n queued prefills fit in the
         minimum TPOT slack (Eq. 2). FCFS order — no reordering, hence no
-        starvation (paper §1)."""
+        starvation (paper §1). `cached_len(q)` reports the prompt tokens a
+        prefix-cache hit would skip: the Eq.3 estimate must price only the
+        UNCACHED suffix, or admission over-throttles exactly the workloads
+        the cache accelerates (chunk_prefill_time(p, 0) == prefill_time(p),
+        so the uncached case telescopes to the original estimate)."""
         if not queue:
             return 0
         budget = self.allow_prefill_budget(decoding, now)
@@ -59,7 +65,8 @@ class SLOScheduler:
             return len(queue)  # nothing to protect
         total, n = 0.0, 0
         for q in queue:
-            total += self.cost.prefill_time(q.prompt_len)
+            c = cached_len(q) if cached_len is not None else 0
+            total += self.cost.chunk_prefill_time(q.prompt_len - c, c)
             if total < budget:
                 n += 1
             else:

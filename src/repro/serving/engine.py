@@ -62,6 +62,7 @@ class EngineConfig:
     chunked: bool = False           # chunked prefill + mixed batching
     chunk_size: int = 32            # per-iteration prefill token budget
     chunk_floor: int = 8            # min chunk tokens/iter (progress)
+    prefix_cache: bool = False      # ref-counted cross-request sharing
 
 
 class LayerKVEngine:
@@ -77,7 +78,12 @@ class LayerKVEngine:
         self.L = cfg.n_layers
         self.bm = LayerwiseBlockManager(self.ec.num_device_blocks,
                                         self.ec.num_host_blocks,
-                                        self.ec.block_size, self.L)
+                                        self.ec.block_size, self.L,
+                                        prefix_cache=self.ec.prefix_cache)
+        if self.ec.prefix_cache:
+            # cache-driven copies (COW, promote, demote) move REAL bytes
+            # through the executor and charge the transfer ledger
+            self.bm.on_copy = self._cache_copy
         self.cost = CostModel(cfg, hw)
         self.off = OffloadEngine(self.cost, self.L)
         self.predictor = predictor or HistogramPredictor(
@@ -95,17 +101,68 @@ class LayerKVEngine:
     def _blocks(self, tokens: int) -> int:
         return self.bm.blocks_for_tokens(tokens)
 
+    def _cache_copy(self, src_pool: str, src: int, dst_pool: str,
+                    dst: int) -> None:
+        src_tier = "device" if src_pool == DEVICE else "host"
+        dst_tier = "device" if dst_pool == DEVICE else "host"
+        self.ex.copy_blocks(src_tier, dst_tier, [src], [dst])
+        nbytes = self.cost.kv_bytes(self.ec.block_size, 1)
+        if src_pool == HOST and dst_pool == DEVICE:
+            self.off.ledger.submit(self.now, nbytes, "reload")
+        elif src_pool == DEVICE and dst_pool == HOST:
+            self.off.ledger.submit(self.now, nbytes, "offload")
+
+    def _cached_hint(self, r: Request) -> int:
+        """Cached-prefix length for Eq.3 admission estimates (price the
+        uncached suffix only, or admission over-throttles)."""
+        if self.ec.prefix_cache and r.prompt:
+            return self.bm.match_prefix(r.prompt)
+        return 0
+
     def _device_need(self, r: Request) -> int:
+        """Admission gate: min of the plain-policy need and the hit-path
+        need — a hit estimate larger than the plain path (short prefix,
+        all layers device-resident) must never wedge a request the
+        layer-wise fallback fits."""
         if self.ec.policy == "vllm":
-            return self._blocks(r.prompt_len) * self.L
-        plan = self.off.plan_for_prompt(r.prompt_len)
-        send_buf = 1 if plan.offload_layers else 0
-        return self._blocks(r.prompt_len) * (plan.x + send_buf)
+            need = self._blocks(r.prompt_len) * self.L
+        else:
+            plan = self.off.plan_for_prompt(r.prompt_len)
+            send_buf = 1 if plan.offload_layers else 0
+            need = self._blocks(r.prompt_len) * (plan.x + send_buf)
+        if self.ec.prefix_cache and r.prompt:
+            c = self.bm.match_prefix(r.prompt)
+            if c > 0:
+                hit_need = (self._blocks(r.prompt_len)
+                            - c // self.ec.block_size) * self.L
+                need = min(need, hit_need)
+        return need
 
     # -------------------------------------------------------------- prefill
     def _alloc_prefill(self, r: Request):
         """Allocate r's prompt KV per the policy; returns (retain, off)
-        layer lists or None when the pools cannot fit it."""
+        layer lists or None when the pools cannot fit it.
+
+        With the prefix cache on, a content hit maps the shared prefix
+        blocks (refcount +1 per layer, COW copy of the partial tail) and
+        extends each layer with the uncached suffix — all device-resident;
+        prefill compute then starts at prefill_done = cached_len. A hit
+        that cannot fit falls through to the plain policy path."""
+        if self.ec.prefix_cache and r.prompt:
+            acq = self.bm.acquire_prefix(r.rid, r.prompt)
+            if acq is not None:
+                try:
+                    suffix = r.prompt_len - acq.cached_len
+                    for l in range(self.L):
+                        self.bm.extend_layer(r.rid, l, suffix)
+                except PoolExhausted:
+                    self.bm.free_request(r.rid)
+                    r.prefill_done = 0
+                else:
+                    r.prefill_done = acq.cached_len
+                    r.cached_prompt_len = acq.cached_len
+                    self.bm.cache.count(r.prompt_len, acq.cached_len)
+                    return list(range(self.L)), []
         per_layer = self._blocks(r.prompt_len)
         if self.ec.policy == "vllm":
             retain = list(range(self.L))
@@ -124,6 +181,8 @@ class LayerKVEngine:
         except PoolExhausted:
             self.bm.free_request(r.rid)
             return None
+        if self.ec.prefix_cache and r.prompt:
+            self.bm.cache.count(r.prompt_len, 0)  # admitted as a miss
         return retain, off
 
     def _do_prefill(self, r: Request) -> bool:
@@ -132,26 +191,37 @@ class LayerKVEngine:
             return False
         retain, off = alloc
 
-        pad = self._blocks(r.prompt_len) * self.ec.block_size
-        next_tok, k, v = self.ex.prefill(r.prompt, pad)
-        for l in retain:
-            a = self.bm.allocation(r.rid, l)
-            self.ex.write_layer("device", a.blocks, k[l], v[l])
-        for l in off:
-            a = self.bm.allocation(r.rid, l)
-            self.ex.write_layer("host", a.blocks, k[l], v[l])
-        if off:
-            from repro.core import OffloadPlan
-            self.off.prefill_offload_done(
-                self.now, r.prompt_len, OffloadPlan(retain, off, len(retain)))
+        if r.prefill_done > 0:
+            # prefix-cache hit: run the uncached suffix as ONE chunk
+            # against the shared prefix blocks (q_offset causal masking);
+            # compute for the cached tokens is skipped entirely
+            c, p = r.prefill_remaining, r.prefill_done
+            self._run_chunk(r, c)
+            self.now += self.cost.chunk_prefill_time(c, p)
+        else:
+            pad = self._blocks(r.prompt_len) * self.ec.block_size
+            next_tok, k, v = self.ex.prefill(r.prompt, pad)
+            for l in retain:
+                a = self.bm.allocation(r.rid, l)
+                self.ex.write_layer("device", a.blocks, k[l], v[l])
+            for l in off:
+                a = self.bm.allocation(r.rid, l)
+                self.ex.write_layer("host", a.blocks, k[l], v[l])
+            if off:
+                from repro.core import OffloadPlan
+                self.off.prefill_offload_done(
+                    self.now, r.prompt_len,
+                    OffloadPlan(retain, off, len(retain)))
+            self.now += self.cost.prefill_time(r.prompt_len)
+            r.prefill_done = r.prompt_len
+            r.n_chunks += 1
+            r.generated.append(next_tok)
+            if self.ec.prefix_cache and r.prompt:
+                self.bm.register_prefix(r.rid, r.prompt)
         self.host_layers[r.rid] = len(off)
-        self.now += self.cost.prefill_time(r.prompt_len)
         r.prefill_start = r.prefill_start if r.prefill_start >= 0 else self.now
         r.first_token_time = self.now
         r.tokens_out = 1
-        r.prefill_done = r.prompt_len
-        r.n_chunks += 1
-        r.generated.append(next_tok)
         r.phase = Phase.DECODE
         self.decoding.append(r)
         return True
@@ -194,6 +264,10 @@ class LayerKVEngine:
                 self.now, self.cost.kv_bytes(c, n_off), "offload")
         r.prefill_done += c
         r.n_chunks += 1
+        if self.ec.prefix_cache and r.prompt:
+            # incremental publication: full blocks whose KV is now written
+            # become hittable while the rest of this prompt still prefills
+            self.bm.register_prefix(r.rid, r.prompt, upto=r.prefill_done)
         if r.prefill_complete:
             self._chunk_bufs.pop(r.rid, None)
             r.generated.append(int(jnp.argmax(logits)))
@@ -219,7 +293,9 @@ class LayerKVEngine:
         return True
 
     def _evict_newest(self, exclude=()) -> bool:
-        """Push the newest request's device layers to host to make room."""
+        """Push the newest request's device layers to host to make room.
+        Shared prefix blocks are copied out (detach), never pulled from
+        under the requests still mapping them."""
         excl = set(exclude)
         for r in sorted(self.decoding, key=lambda q: -q.prefill_start):
             if r.rid in excl:
@@ -231,7 +307,7 @@ class LayerKVEngine:
                 a = self.bm.allocation(r.rid, l)
                 if self.bm.num_free(HOST) < len(a.blocks):
                     return False
-                src, dst = self.bm.move_layer(r.rid, l, HOST)
+                src, dst = self.bm.move_layer(r.rid, l, HOST, detach=True)
                 self.ex.copy_blocks("device", "host", src, dst)
                 self.off.proactive_offload(self.now, a.num_tokens, 1)
             self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
@@ -325,7 +401,8 @@ class LayerKVEngine:
             return 0
         if self.ec.policy == "layerkv" and self.ec.slo_aware:
             budget_n = self.sched.max_prefills(
-                list(self.waiting), self.decoding, self.now)
+                list(self.waiting), self.decoding, self.now,
+                cached_len=self._cached_hint)
         else:
             budget_n = len(self.waiting)
         admitted = 0

@@ -123,10 +123,26 @@ class PagedExecutor:
     def _copy_blocks(self, src, dst, src_ids, dst_ids):
         return dst.at[dst_ids].set(src[src_ids])
 
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _copy_blocks_within(self, pool, src_ids, dst_ids):
+        """Same-pool copy (prefix-cache COW): a separate jit so the pool
+        can still be donated — passing one buffer as both src and dst of
+        `_copy_blocks` would alias a donated input."""
+        return pool.at[dst_ids].set(pool[src_ids])
+
     def copy_blocks(self, src_tier: str, dst_tier: str, src_ids, dst_ids):
-        """Physical block copy between tiers (the d2h/h2d transfer)."""
+        """Physical block copy between (or within) tiers: d2h/h2d
+        transfers and d2d copy-on-write duplication."""
         si = jnp.asarray(src_ids, jnp.int32)
         di = jnp.asarray(dst_ids, jnp.int32)
+        if src_tier == dst_tier:
+            if src_tier == "device":
+                self.device_pool = self._copy_blocks_within(
+                    self.device_pool, si, di)
+            else:
+                self.host_pool = self._copy_blocks_within(
+                    self.host_pool, si, di)
+            return
         src = self.device_pool if src_tier == "device" else self.host_pool
         if dst_tier == "device":
             self.device_pool = self._copy_blocks(src, self.device_pool, si, di)

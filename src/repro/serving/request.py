@@ -34,6 +34,9 @@ class Request:
     # --- chunked-prefill progress (scheduler-owned) --------------------------
     prefill_done: int = 0            # prompt tokens whose KV is cached
     n_chunks: int = 0                # chunks this prefill was split into
+    cached_prompt_len: int = 0       # prompt tokens served from the
+    #                                  cross-request prefix cache (compute
+    #                                  skipped; subset of prefill_done)
 
     @property
     def prefill_remaining(self) -> int:

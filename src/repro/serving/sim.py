@@ -38,6 +38,7 @@ arrival-rate sweep in `benchmarks/fig6_fig7_arrival.py`.
 from __future__ import annotations
 
 import dataclasses
+import math
 import statistics
 from collections import deque
 from typing import Dict, List, Optional
@@ -59,6 +60,10 @@ class SimConfig:
     proactive: bool = True              # Eq.5 forecast eviction
     chunked: bool = False               # chunked prefill + mixed batching
     chunk_floor: int = 16               # min chunk tokens/iter (progress)
+    prefix_cache: bool = False          # ref-counted cross-request sharing
+    # §3.1.3: fraction of each prefill iteration the TP all-reduce keeps
+    # the offload link reserved (PCIe testbeds; 0 = disjoint fabrics)
+    collective_reserve_frac: float = 0.0
     num_device_blocks: int = 0          # 0 -> derive from HW memory
     num_host_blocks: int = 1 << 20
     block_size: int = 16
@@ -85,6 +90,9 @@ class SimMetrics:
     # chunked-mode accounting (zero in exclusive mode)
     chunk_iters: int = 0                 # iterations that carried a chunk
     max_iter_prefill_tokens: int = 0     # largest per-iteration chunk total
+    # prefix-cache accounting (zero with the cache off)
+    prefix_hit_tokens: int = 0           # prompt tokens served from cache
+    prefix_lookup_tokens: int = 0        # prompt tokens looked up
 
     @property
     def mean_ttft(self):
@@ -92,10 +100,17 @@ class SimMetrics:
 
     @property
     def p99_ttft(self):
+        """Nearest-rank p99: ceil(0.99 n)-th smallest. (int(0.99*n) was an
+        off-by-one that indexed the MAX at n=100.)"""
         if not self.ttft:
             return 0.0
         s = sorted(self.ttft)
-        return s[min(len(s) - 1, int(0.99 * len(s)))]
+        return s[min(len(s), math.ceil(0.99 * len(s))) - 1]
+
+    @property
+    def prefix_hit_rate(self):
+        return self.prefix_hit_tokens / self.prefix_lookup_tokens \
+            if self.prefix_lookup_tokens else 0.0
 
     @property
     def mean_tpot(self):
@@ -119,19 +134,37 @@ class SimMetrics:
         return self.slo_violations / max(self.n_requests, 1)
 
 
+class DeviceMemoryError(ValueError):
+    """Params + activation reservation exceed the device memory budget."""
+
+
 def derive_device_blocks(cfg: ModelConfig, hw: HWProfile, sim: SimConfig
                          ) -> int:
     """vLLM-style profiling: KV pool = gpu_mem_util * (mem - params -
     activations(max_model_len)); longer max context -> more activation
-    reservation -> fewer KV blocks (paper §2.2)."""
+    reservation -> fewer KV blocks (paper §2.2). Raises DeviceMemoryError
+    (naming the shortfall) instead of silently returning a zero-block pool
+    that would later die with a confusing scheduling deadlock."""
+    L = max(cfg.n_attention_layers(), 1)
     param_bytes = cfg.param_count() * hw.f_precision
     act_bytes = 2 * sim.max_model_len * cfg.d_model * 24 * hw.f_precision
-    free = hw.mem_bytes * sim.gpu_mem_util - param_bytes - act_bytes
+    budget = hw.mem_bytes * sim.gpu_mem_util
+    free = budget - param_bytes - act_bytes
     kv_per_block = 2 * cfg.n_kv_heads * cfg.resolved_head_dim \
         * hw.f_precision * sim.block_size  # one layer's block
-    blocks = int(free // kv_per_block) // max(cfg.n_attention_layers(), 1) \
-        * cfg.n_attention_layers()
-    return max(blocks, 0)
+    blocks = int(free // kv_per_block) // L * L if free > 0 else 0
+    if blocks < L:
+        raise DeviceMemoryError(
+            f"no room for a KV pool on {hw.name}: memory budget "
+            f"{budget / 1e9:.2f} GB (mem {hw.mem_bytes / 1e9:.1f} GB x "
+            f"gpu_mem_util {sim.gpu_mem_util}) - params "
+            f"{param_bytes / 1e9:.2f} GB - activation reservation "
+            f"{act_bytes / 1e9:.2f} GB (max_model_len={sim.max_model_len}) "
+            f"leaves {free / 1e9:.2f} GB, but one block per layer needs "
+            f"{L * kv_per_block / 1e9:.2f} GB ({L} layers x {kv_per_block} "
+            f"B). Lower max_model_len, raise gpu_mem_util, shard over more "
+            f"chips, or set num_device_blocks explicitly.")
+    return blocks
 
 
 class ServingSimulator:
@@ -145,8 +178,15 @@ class ServingSimulator:
         self.L = max(cfg.n_attention_layers(), 1)
         ndb = sim.num_device_blocks or derive_device_blocks(cfg, hw, sim)
         self.bm = LayerwiseBlockManager(ndb, sim.num_host_blocks,
-                                        sim.block_size, self.L)
+                                        sim.block_size, self.L,
+                                        prefix_cache=sim.prefix_cache)
         self.off = OffloadEngine(self.cost, self.L)
+        # cache-driven physical copies (COW / promote / demote) charge the
+        # link ledger here; d2d copies never touch the offload link
+        self._now = 0.0
+        self.reload_bytes_migrated = 0
+        if sim.prefix_cache:
+            self.bm.on_copy = self._cache_copy
         self.predictor = predictor or OraclePredictor(
             [64, 128, 256, 512, 1024])
         self.sched = SLOScheduler(self.cost, self.predictor)
@@ -162,15 +202,56 @@ class ServingSimulator:
     def _blocks(self, tokens: int) -> int:
         return self.bm.blocks_for_tokens(tokens)
 
+    def _cache_copy(self, src_pool: str, src: int, dst_pool: str,
+                    dst: int) -> None:
+        nbytes = self.cost.kv_bytes(self.sim.block_size, 1)
+        if src_pool == HOST and dst_pool == DEVICE:
+            self.off.ledger.submit(self._now, nbytes, "reload")
+            self.reload_bytes_migrated += nbytes
+        elif src_pool == DEVICE and dst_pool == HOST:
+            self.off.ledger.submit(self._now, nbytes, "offload")
+
+    def _cached_hint(self, r: Request) -> int:
+        """Cached-prefix length for Eq.3 prefill estimates (admission must
+        price the UNCACHED suffix or it over-throttles; stat-free probe)."""
+        if self.sim.prefix_cache and r.prompt:
+            return self.bm.match_prefix(r.prompt)
+        return 0
+
     def _device_need(self, r: Request) -> int:
-        """MINIMUM device blocks to start r's prefill."""
+        """MINIMUM device blocks to start r's prefill. With the prefix
+        cache on, a hit needs only the uncached suffix (+ COW tail), but
+        all layers device-resident — which for short prefixes can EXCEED
+        the layer-wise plan. _admit falls back to the plain path in that
+        case, so the gate takes the min of the two estimates (a larger
+        hit estimate must never deadlock a request the plain path fits)."""
         if self.sim.policy == "vllm":
-            return self._blocks(r.prompt_len) * self.L
-        plan = self.off.plan_for_prompt(r.prompt_len)
-        self.plans[r.rid] = plan
-        # x retained layers + 1 layer of transient send buffer
-        send_buf = 1 if plan.offload_layers else 0
-        return self._blocks(r.prompt_len) * (plan.x + send_buf)
+            need = self._blocks(r.prompt_len) * self.L
+        else:
+            plan = self.off.plan_for_prompt(r.prompt_len)
+            self.plans[r.rid] = plan
+            # x retained layers + 1 layer of transient send buffer
+            send_buf = 1 if plan.offload_layers else 0
+            need = self._blocks(r.prompt_len) * (plan.x + send_buf)
+        if self.sim.prefix_cache and r.prompt:
+            c = self.bm.match_prefix(r.prompt)
+            if c > 0:
+                hit_need = (self._blocks(r.prompt_len)
+                            - c // self.bm.block_size) * self.L
+                need = min(need, hit_need)
+        return need
+
+    def _prefill_cost(self, r: Request) -> float:
+        """Eq.3 prefill compute for the UNCACHED part of r's prompt (the
+        cached prefix, r.prefill_done at admission, skips compute)."""
+        c = r.prefill_done
+        return self.cost.chunk_prefill_time(r.prompt_len - c, c)
+
+    def _finish_prefill(self, r: Request) -> None:
+        """Prefill-complete bookkeeping shared by every admission path:
+        publish the prompt's full blocks into the prefix cache."""
+        if self.sim.prefix_cache and r.prompt:
+            self.bm.register_prefix(r.rid, r.prompt)
 
     def _admit(self, r: Request, now: float, ledger: bool = True) -> bool:
         """Try to allocate for r's prefill; True on success.
@@ -179,14 +260,40 @@ class ServingSimulator:
         prefetching, §3.1.1) but never fewer than Eq.4's x; only the
         remainder is offloaded during prefill. With `ledger=False` the
         d2h traffic is NOT submitted here — chunked mode accounts it
-        chunk-by-chunk as each chunk's KV is produced."""
+        chunk-by-chunk as each chunk's KV is produced.
+
+        With the prefix cache on, a hit maps the shared blocks (refcount
+        +1 per layer) and allocates only the uncached suffix, all layers
+        device-resident; prefill compute then starts at prefill_done =
+        cached_len. A hit that cannot fit its suffix/promotions falls
+        back to the plain (policy) path below."""
+        self._now = now
+        if self.sim.prefix_cache and r.prompt:
+            acq = self.bm.acquire_prefix(r.rid, r.prompt)
+            if acq is not None:
+                try:
+                    suffix = r.prompt_len - acq.cached_len
+                    for l in range(self.L):
+                        self.bm.extend_layer(r.rid, l, suffix)
+                except PoolExhausted:
+                    self.bm.free_request(r.rid)
+                    r.prefill_done = 0
+                else:
+                    r.prefill_done = acq.cached_len
+                    r.cached_prompt_len = acq.cached_len
+                    self.host_layers[r.rid] = 0
+                    self.bm.cache.count(r.prompt_len, acq.cached_len)
+                    return True
         try:
             if self.sim.policy == "vllm":
                 for l in range(self.L):
                     self.bm.alloc_layer(r.rid, l, r.prompt_len, DEVICE)
                 self.host_layers[r.rid] = 0
             else:
-                plan = self.plans[r.rid]
+                plan = self.plans.get(r.rid)
+                if plan is None:  # hit-path probe skipped the Eq.4 plan
+                    plan = self.off.plan_for_prompt(r.prompt_len)
+                    self.plans[r.rid] = plan
                 per_layer = self._blocks(r.prompt_len)
                 reserve = int(self.sim.forecast_threshold_frac
                               * self.bm.pools[DEVICE].num_blocks)
@@ -205,34 +312,48 @@ class ServingSimulator:
                     self.off.prefill_offload_done(
                         now, r.prompt_len,
                         OffloadPlan(retain, off, len(retain)))
+            if self.sim.prefix_cache and r.prompt:
+                self.bm.cache.count(r.prompt_len, 0)  # admitted as a miss
             return True
         except PoolExhausted:
             self.bm.free_request(r.rid)
             return False
 
-    def _promote(self, now: float, dt: float, decoding: List[Request]):
+    def _promote(self, now: float, dt: float, decoding: List[Request]
+                 ) -> None:
         """Swap host-resident layers back to device while blocks and link
         bandwidth allow (paper: 'maximizing the number of layers retained
-        on the GPU'). Budget: what the link can move within one step."""
+        on the GPU'). Budget: what the link can move within one step.
+
+        Accounting: each promoted byte is charged to the link ledger
+        exactly once, here. Callers must recompute the decode step's
+        host_kv_bytes AFTER promotion (from the post-promotion host_layers)
+        so promoted bytes are not ALSO charged as per-step host streaming —
+        double-charging inflated busy_until and delayed later prefill
+        offload completions."""
         reserve = int(2 * self.sim.forecast_threshold_frac
                       * self.bm.pools[DEVICE].num_blocks)
         budget = self.cost.hw.offload_bw * max(dt, 1e-6)
+        room = True
         for r in sorted(decoding, key=lambda q: q.prefill_start):
-            if budget <= 0:
+            if budget <= 0 or not room:
                 break
             host = self.bm.layers_on(r.rid, HOST)
             if not host:
                 continue
-            ctx = r.prompt_len + r.tokens_out
-            per_layer_blocks = self._blocks(ctx)
-            per_layer_bytes = self.cost.kv_bytes(ctx, 1)
             for l in host:
                 if budget <= 0:
                     break
-                if self.bm.num_free(DEVICE) < per_layer_blocks + reserve:
-                    return
+                a = self.bm.allocation(r.rid, l)
+                # charge the bytes actually resident in the allocation
+                # (ctx-1 during a step: this step's token isn't written yet)
+                per_layer_bytes = self.cost.kv_bytes(a.num_tokens, 1)
+                if self.bm.num_free(DEVICE) < len(a.blocks) + reserve:
+                    room = False
+                    break
                 self.bm.move_layer(r.rid, l, DEVICE)
                 self.off.ledger.submit(now, per_layer_bytes, "reload")
+                self.reload_bytes_migrated += per_layer_bytes
                 budget -= per_layer_bytes
             self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
 
@@ -255,6 +376,7 @@ class ServingSimulator:
         r.first_token_time = -1.0
         r.prefill_done = 0
         r.n_chunks = 0
+        r.cached_prompt_len = 0
         waiting.appendleft(r)
         self.preemptions += 1
 
@@ -301,12 +423,15 @@ class ServingSimulator:
             if self.bm.num_free(DEVICE) >= min_free_blocks:
                 return
             dev_layers = self.bm.layers_on(r.rid, DEVICE)
-            ctx = r.prompt_len + r.tokens_out
+            ctx = self.bm.allocation(r.rid, dev_layers[0]).num_tokens \
+                if dev_layers else 0
             for l in dev_layers:
                 a = self.bm.allocation(r.rid, l)
                 if self.bm.num_free(HOST) < len(a.blocks):
                     return  # host tier full: nothing more to evict into
-                self.bm.move_layer(r.rid, l, HOST)
+                # detach: shared prefix blocks are copied out, never pulled
+                # from under the requests still mapping them
+                self.bm.move_layer(r.rid, l, HOST, detach=True)
                 if self.bm.num_free(DEVICE) >= min_free_blocks:
                     break
             moved = len(dev_layers) - len(self.bm.layers_on(r.rid, DEVICE))
@@ -328,13 +453,13 @@ class ServingSimulator:
             if not dev_layers:
                 continue
             n_evict = max(len(dev_layers) // 2, 1)
-            ctx = r.prompt_len + r.tokens_out
+            ctx = self.bm.allocation(r.rid, dev_layers[0]).num_tokens
             moved = 0
             for l in dev_layers[:n_evict]:
                 a = self.bm.allocation(r.rid, l)
                 if self.bm.num_free(HOST) < len(a.blocks):
                     break  # host tier full: stop evicting
-                self.bm.move_layer(r.rid, l, HOST)
+                self.bm.move_layer(r.rid, l, HOST, detach=True)
                 moved += 1
             if not moved:
                 return
@@ -349,6 +474,7 @@ class ServingSimulator:
                          done: List[Request]) -> None:
         """Post-step accounting for one decode batch: grow allocations,
         evict-or-preempt on exhaustion, retire finished requests."""
+        self._now = t
         finished: List[Request] = []
         for r in sel:
             ok = self._extend_for_token(r)
@@ -395,6 +521,10 @@ class ServingSimulator:
             preemptions=self.preemptions,
             chunk_iters=self._chunk_iters,
             max_iter_prefill_tokens=self._max_iter_prefill_tokens,
+            prefix_hit_tokens=self.bm.cache.hit_tokens
+            if self.bm.cache else 0,
+            prefix_lookup_tokens=self.bm.cache.lookup_tokens
+            if self.bm.cache else 0,
         )
 
     # ---------------------------------------------------------------- run
@@ -414,6 +544,7 @@ class ServingSimulator:
         t = 0.0
 
         while pending or waiting or decoding:
+            self._now = t
             while pending and pending[0].arrival <= t:
                 waiting.append(pending.popleft())
 
@@ -421,8 +552,9 @@ class ServingSimulator:
             admitted: List[Request] = []
             if waiting:
                 if self.sim.policy == "layerkv" and self.sim.slo_aware:
-                    budget_n = self.sched.max_prefills(list(waiting),
-                                                       decoding, t)
+                    budget_n = self.sched.max_prefills(
+                        list(waiting), decoding, t,
+                        cached_len=self._cached_hint)
                 else:
                     budget_n = len(waiting)
                 tok_budget = self.sim.max_prefill_tokens
@@ -433,7 +565,9 @@ class ServingSimulator:
                         break
                     if self.bm.num_free(DEVICE) < self._device_need(r):
                         break
-                    if not self._admit(r, t):
+                    # ledger=False: this batch's d2h traffic is submitted
+                    # below, after the collective reservation is placed
+                    if not self._admit(r, t, ledger=False):
                         break
                     waiting.popleft()
                     admitted.append(r)
@@ -441,12 +575,24 @@ class ServingSimulator:
                     tok_budget -= r.prompt_len
 
             if admitted:
-                # prefills run exclusively (vLLM 0.5.5 semantics)
+                # prefills run exclusively (vLLM 0.5.5 semantics); cached
+                # prefixes skip their share of the Eq.3 compute. The TP
+                # all-reduce reserves the link FIRST (§3.1.3) so this
+                # batch's d2h offload traffic defers around it.
                 for r in admitted:
                     r.phase = Phase.PREFILL
                     r.prefill_start = t
-                dt = sum(self.cost.prefill_time(r.prompt_len)
-                         for r in admitted)
+                dt = sum(self._prefill_cost(r) for r in admitted)
+                if self.sim.collective_reserve_frac > 0.0:
+                    self.off.ledger.reserve(
+                        t, self.sim.collective_reserve_frac * dt)
+                if self.sim.policy == "layerkv":
+                    for r in admitted:
+                        n_off = self.host_layers.get(r.rid, 0)
+                        if n_off:
+                            self.off.ledger.submit(
+                                t, self.cost.kv_bytes(r.prompt_len, n_off),
+                                "offload")
                 t += dt
                 for r in admitted:
                     r.first_token_time = t
@@ -454,6 +600,7 @@ class ServingSimulator:
                     r.prefill_done = r.prompt_len
                     r.n_chunks += 1
                     r.phase = Phase.DECODE
+                    self._finish_prefill(r)
                     decoding.append(r)
                 continue
 
@@ -464,9 +611,19 @@ class ServingSimulator:
                 sel, host_bytes = self._select_decode_batch(t, decoding)
                 B = len(sel)
                 avg_ctx = sum(r.prompt_len + r.tokens_out for r in sel) / B
-                dt = self.cost.decode_step_time(B, int(avg_ctx), host_bytes)
                 if self.sim.policy == "layerkv":
-                    self._promote(t, dt, decoding)
+                    # promote against an ESTIMATED step time, then price
+                    # the step from what is STILL host-resident: promoted
+                    # bytes are charged once (to the ledger, in _promote),
+                    # never again as per-step host streaming
+                    dt_est = self.cost.decode_step_time(
+                        B, int(avg_ctx), host_bytes)
+                    self._promote(t, dt_est, decoding)
+                    host_bytes = sum(
+                        self.cost.kv_bytes(r.prompt_len + r.tokens_out,
+                                           self.host_layers.get(r.rid, 0))
+                        for r in sel)
+                dt = self.cost.decode_step_time(B, int(avg_ctx), host_bytes)
                 t += dt
                 self._decode_bookkeep(t, sel, decoding, waiting, done)
                 continue
@@ -484,12 +641,13 @@ class ServingSimulator:
                     waiting.popleft()
                     r.phase = Phase.PREFILL
                     r.prefill_start = t
-                    t += self.cost.prefill_time(r.prompt_len)
+                    t += self._prefill_cost(r)
                     r.first_token_time = t
                     r.tokens_out = 1
                     r.prefill_done = r.prompt_len
                     r.n_chunks += 1
                     r.phase = Phase.DECODE
+                    self._finish_prefill(r)
                     decoding.append(r)
                     continue
                 raise self._deadlock(r)
@@ -510,14 +668,16 @@ class ServingSimulator:
         t = 0.0
 
         while pending or waiting or prefilling or decoding:
+            self._now = t
             while pending and pending[0].arrival <= t:
                 waiting.append(pending.popleft())
 
             # ---- admission: allocate KV, enter the chunk queue -------------
             if waiting:
                 if self.sim.policy == "layerkv" and self.sim.slo_aware:
-                    budget_n = self.sched.max_prefills(list(waiting),
-                                                       decoding, t)
+                    budget_n = self.sched.max_prefills(
+                        list(waiting), decoding, t,
+                        cached_len=self._cached_hint)
                 else:
                     budget_n = len(waiting)
                 while waiting and budget_n > 0 and \
@@ -582,6 +742,11 @@ class ServingSimulator:
                 budget -= c
             t_chunk = sum(self.cost.chunk_prefill_time(c, r.prefill_done)
                           for r, c in chunks)
+            # §3.1.3: the TP all-reduce of the chunk compute reserves the
+            # link BEFORE this iteration's d2h traffic is submitted
+            if t_chunk > 0.0 and self.sim.collective_reserve_frac > 0.0:
+                self.off.ledger.reserve(
+                    t, self.sim.collective_reserve_frac * t_chunk)
 
             # chunk-granular d2h: each chunk's offloaded-layer KV enters
             # the link ledger as it is produced, overlapping chunk compute
@@ -592,10 +757,18 @@ class ServingSimulator:
                         self.off.ledger.submit(
                             t, self.cost.kv_bytes(c, n_off), "offload")
 
+            if self.sim.policy == "layerkv" and decoding:
+                # promote against an estimate, then re-price host streaming
+                # from post-promotion residency (each byte charged once)
+                dt_est = self.cost.mixed_step_time(t_chunk, len(sel),
+                                                   avg_ctx, host_bytes)
+                self._promote(t, dt_est, decoding)
+                host_bytes = sum(
+                    self.cost.kv_bytes(r.prompt_len + r.tokens_out,
+                                       self.host_layers.get(r.rid, 0))
+                    for r in sel)
             dt = self.cost.mixed_step_time(t_chunk, len(sel), avg_ctx,
                                            host_bytes)
-            if self.sim.policy == "layerkv" and decoding:
-                self._promote(t, dt, decoding)
             t += dt
 
             if chunks:
@@ -606,6 +779,11 @@ class ServingSimulator:
             for r, c in chunks:
                 r.prefill_done += c
                 r.n_chunks += 1
+                if self.sim.prefix_cache and r.prompt:
+                    # incremental publication, mirroring the engine: full
+                    # blocks written so far become hittable immediately
+                    self.bm.register_prefix(r.rid, r.prompt,
+                                            upto=r.prefill_done)
                 if r.prefill_complete:
                     r.first_token_time = t
                     r.tokens_out = 1

@@ -4,6 +4,12 @@
 (conversations collected from ChatGPT-3.5: prompt/output lengths 4-2.3k
 tokens, heavy-tailed) without requiring the dataset download in this
 offline container: lognormal lengths clipped to the paper's range.
+
+`shared_prefix` generates the scenario class the prefix cache targets:
+requests whose prompts share leading tokens (system prompts, multi-turn
+chat, RAG templates). These requests carry REAL token-id lists in
+`Request.prompt` — the content-addressed cache hashes them, in both the
+simulator and the real engine.
 """
 from __future__ import annotations
 
@@ -43,3 +49,78 @@ def sharegpt_like(n: int, rate: float, seed: int = 0, tpot_slo: float = 0.2,
         out.append(Request(rid=f"r{i}", prompt_len=p, output_len=o,
                            arrival=t, tpot_slo=tpot_slo, ttft_slo=ttft_slo))
     return out
+
+
+def _toks(rng: random.Random, n: int, vocab: int) -> List[int]:
+    return [rng.randrange(vocab) for _ in range(n)]
+
+
+def shared_prefix(n: int, rate: float, scenario: str = "system_prompt",
+                  share_ratio: float = 0.5, prompt_len: int = 1024,
+                  output_len: int = 128, n_templates: int = 4,
+                  turns_per_conv: int = 4, vocab_size: int = 32000,
+                  seed: int = 0, tpot_slo: float = 0.2,
+                  ttft_slo: float = 3.0) -> List[Request]:
+    """Poisson arrivals whose prompts share leading tokens.
+
+    scenario:
+      'system_prompt'  every request = one global system prompt of
+                       ~share_ratio * prompt_len tokens + a unique user
+                       suffix (heavy shared-system-prompt traffic);
+      'rag_template'   `n_templates` instruction/context templates; each
+                       request picks one (so sharing splits across
+                       template groups) + a unique query suffix;
+      'multi_turn'     conversations of `turns_per_conv` requests; turn k's
+                       prompt extends turn k-1's full context (prompt +
+                       answer + new user turn), so the shareable prefix
+                       GROWS within a conversation. share_ratio sets the
+                       first turn's length relative to prompt_len.
+
+    All scenarios draw the unique suffix length ~ +-25% around its mean so
+    block-boundary effects (partial tails, COW) are exercised."""
+    rng = random.Random(seed)
+    out: List[Request] = []
+    t = 0.0
+
+    def _arrive() -> float:
+        nonlocal t
+        t += rng.expovariate(rate)
+        return t
+
+    if scenario in ("system_prompt", "rag_template"):
+        shared_len = max(int(prompt_len * share_ratio), 1)
+        k = 1 if scenario == "system_prompt" else max(n_templates, 1)
+        prefixes = [_toks(rng, shared_len, vocab_size) for _ in range(k)]
+        for i in range(n):
+            sfx_mean = max(prompt_len - shared_len, 1)
+            sfx = max(1, int(sfx_mean * rng.uniform(0.75, 1.25)))
+            prompt = prefixes[rng.randrange(k)] \
+                + _toks(rng, sfx, vocab_size)
+            out.append(Request(
+                rid=f"r{i}", prompt_len=len(prompt), output_len=output_len,
+                arrival=_arrive(), tpot_slo=tpot_slo, ttft_slo=ttft_slo,
+                prompt=prompt))
+        return out
+
+    if scenario == "multi_turn":
+        i = 0
+        first_len = max(int(prompt_len * share_ratio), 1)
+        while i < n:
+            ctx = _toks(rng, first_len, vocab_size)
+            for _ in range(min(turns_per_conv, n - i)):
+                turn = max(
+                    1, int((prompt_len - first_len)
+                           / max(turns_per_conv - 1, 1)
+                           * rng.uniform(0.75, 1.25)))
+                prompt = list(ctx) + _toks(rng, turn, vocab_size)
+                out.append(Request(
+                    rid=f"r{i}", prompt_len=len(prompt),
+                    output_len=output_len, arrival=_arrive(),
+                    tpot_slo=tpot_slo, ttft_slo=ttft_slo, prompt=prompt))
+                # next turn continues from this prompt + its answer
+                ctx = prompt + _toks(rng, output_len, vocab_size)
+                i += 1
+        out.sort(key=lambda r: r.arrival)
+        return out
+
+    raise ValueError(f"unknown shared-prefix scenario: {scenario!r}")

@@ -102,6 +102,131 @@ def test_move_layer_roundtrip():
     bm.check()
 
 
+# ------------------------------------------- ref-counted prefix sharing ----
+
+def _prompt_pool():
+    """A few overlapping token sequences: equal prefixes collide in the
+    content-addressed cache, so random scripts genuinely share blocks."""
+    base = list(range(64))
+    return [base[:24], base[:24], base[:17], base[:33],
+            base[:8] + [99] * 16, list(range(100, 140))]
+
+
+@st.composite
+def share_script(draw):
+    n_ops = draw(st.integers(5, 50))
+    ops = []
+    for _ in range(n_ops):
+        ops.append((
+            draw(st.sampled_from(
+                ["admit", "extend", "evict", "promote", "free", "drop"])),
+            draw(st.integers(0, 5)),          # request index
+            draw(st.integers(0, 5)),          # prompt index
+        ))
+    return ops
+
+
+@given(share_script())
+@settings(max_examples=150, deadline=None)
+def test_prefix_cache_invariants(script):
+    """Random admit/extend/evict/free scripts over a shared-prefix prompt
+    pool. After EVERY operation: free + allocated == pool size, a shared
+    block is never freed while its refcount > 0, COW never mutates the
+    shared source, and check() validates refcount == table multiplicity."""
+    L = 2
+    bm = LayerwiseBlockManager(num_device_blocks=48, num_host_blocks=48,
+                               block_size=8, n_layers=L, prefix_cache=True)
+    prompts = _prompt_pool()
+    live = {}  # req -> prompt
+
+    def pool_conserved():
+        for p in bm.pools.values():
+            p.check()
+
+    for op, ri, pi in script:
+        req = f"r{ri}"
+        prompt = prompts[pi]
+        try:
+            if op == "admit" and req not in bm.tables:
+                acq = bm.acquire_prefix(req, prompt)
+                if acq is not None:
+                    # COW sources must stay registered and pool-allocated
+                    for l, src, dst in acq.cow_copies:
+                        assert src != dst
+                        assert bm.cache.lookup(DEVICE, src) is not None
+                        assert src in bm.pools[DEVICE]._owner
+                    suffix = len(prompt) - acq.cached_len
+                    for l in range(L):
+                        bm.extend_layer(req, l, suffix)
+                else:
+                    for l in range(L):
+                        bm.alloc_layer(req, l, len(prompt), DEVICE)
+                bm.register_prefix(req, prompt)
+                live[req] = prompt
+            elif op == "extend" and req in bm.tables:
+                for l in list(bm.tables[req]):
+                    bm.extend_layer(req, l, 1)
+            elif op == "evict" and req in bm.tables:
+                for l in bm.layers_on(req, DEVICE):
+                    bm.move_layer(req, l, HOST, detach=True)
+            elif op == "promote" and req in bm.tables:
+                for l in bm.layers_on(req, HOST):
+                    if bm.layer_shared(req, l):
+                        continue
+                    bm.move_layer(req, l, DEVICE)
+            elif op == "free":
+                bm.free_request(req)
+                live.pop(req, None)
+            elif op == "drop":
+                bm.drop_cache()
+        except PoolExhausted:
+            bm.free_request(req)
+            live.pop(req, None)
+        pool_conserved()
+        bm.check()  # refcount == multiplicity, LRU consistent, no leaks
+        # a block mapped by any live request is never on a free list
+        for r2 in bm.tables:
+            for l, a in bm.tables[r2].items():
+                for b in a.blocks:
+                    assert b in bm.pools[a.pool]._owner, \
+                        f"live block {b} of {r2} was freed"
+    for req in list(bm.tables):
+        bm.free_request(req)
+    bm.drop_cache()
+    bm.check()
+    assert bm.num_free(DEVICE) == 48 and bm.pools[DEVICE].num_free == 48
+    assert bm.num_free(HOST) == 48 and bm.pools[HOST].num_free == 48
+
+
+@given(st.integers(2, 6), st.integers(9, 40))
+@settings(max_examples=60, deadline=None)
+def test_prefix_sharing_refcount_matches_sharers(n_sharers, plen):
+    """N requests with an identical prompt: full blocks are mapped by all
+    of them, refcounts track the sharer count exactly, and frees release
+    in any order without breaking survivors."""
+    bm = LayerwiseBlockManager(256, 64, 8, 2, prefix_cache=True)
+    prompt = list(range(plen))
+    for l in range(2):
+        bm.alloc_layer("r0", l, plen, DEVICE)
+    bm.register_prefix("r0", prompt)
+    for i in range(1, n_sharers):
+        acq = bm.acquire_prefix(f"r{i}", prompt)
+        assert acq is not None
+        for l in range(2):
+            bm.extend_layer(f"r{i}", l, plen - acq.cached_len)
+    bm.check()
+    n_full = (plen - 1) // 8  # shared full blocks (cap leaves the tail)
+    if n_full:
+        b0 = bm.allocation("r0", 0).blocks[0]
+        e = bm.cache.lookup(DEVICE, b0)
+        assert e is not None and e.ref == n_sharers
+    # free in arbitrary-ish order; survivors keep working
+    for i in list(range(0, n_sharers, 2)) + list(range(1, n_sharers, 2)):
+        bm.free_request(f"r{i}")
+        bm.check()
+    assert bm.num_free(DEVICE) == 256
+
+
 # ------------------------------------------------------ interleaving -------
 
 @given(st.integers(1, 80), st.integers(0, 80))
