@@ -24,7 +24,7 @@ def main() -> None:
                     help="toy scale: CI guard that every script still runs")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig4,fig5,fig6,fig8,prefix,"
-                         "kernels")
+                         "fused,kernels")
     args = ap.parse_args()
     n = 40 if args.quick else 100
     if args.smoke:
@@ -34,7 +34,7 @@ def main() -> None:
 
     from benchmarks import (fig1_motivation, fig4_context_sweep,
                             fig5_parallelism, fig6_fig7_arrival, fig8_slo,
-                            kernels_micro, prefix_cache)
+                            fused_step, kernels_micro, prefix_cache)
 
     print("name,us_per_call,derived")
     if not only or "fig1" in only:
@@ -52,6 +52,8 @@ def main() -> None:
                       smoke=smoke)
     if not only or "prefix" in only:
         prefix_cache.main(n_requests=n, smoke=smoke)
+    if not only or "fused" in only:
+        fused_step.main(smoke=smoke)
     if not only or "kernels" in only:
         kernels_micro.main(smoke=smoke)
 

@@ -56,3 +56,26 @@ def paged_attention(q, kv_pool, block_table, kv_len, *, softmax_scale=None,
             q, kv_pool, block_table, kv_len, softmax_scale=softmax_scale)
     return _ref.paged_attention_reference(
         q, kv_pool, block_table, kv_len, softmax_scale=softmax_scale)
+
+
+def paged_prefill(q, kv_pool, block_table, seg_ids, q_pos, kv_len, *,
+                  host_pool=None, tier=None, tq=8, softmax_scale=None,
+                  backend=None):
+    """Segmented prefill/decode attention straight over the paged pool(s).
+
+    q: (T, H, D) flat token batch — per-request segments each padded to a
+    multiple of `tq` (so a query tile never straddles segments); the
+    chunk's own KV must already be scattered into the pool. block_table:
+    (S, MAXB); seg_ids/q_pos: (T,); kv_len: (S,). With `tier` (S,) bool,
+    a True segment's blocks are read from `host_pool`. Returns (T, H, D).
+    """
+    b = backend or _BACKEND
+    if b == "pallas":
+        from repro.kernels import paged_prefill as _pp
+        return _pp.paged_prefill_pallas(
+            q, kv_pool, block_table, seg_ids, q_pos, kv_len,
+            host_pool=host_pool, tier=tier, tq=tq,
+            softmax_scale=softmax_scale)
+    return _ref.paged_prefill_reference(
+        q, kv_pool, block_table, seg_ids, q_pos, kv_len,
+        host_pool=host_pool, tier=tier, tq=tq, softmax_scale=softmax_scale)

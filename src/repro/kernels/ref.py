@@ -159,6 +159,65 @@ def decode_attention_reference(q, k_cache, v_cache, kv_len, *, window=0,
     )
 
 
+def paged_prefill_reference(q, kv_pool, block_table, seg_ids, q_pos, kv_len,
+                            *, host_pool=None, tier=None, tq=8,
+                            softmax_scale=None):
+    """Segmented GQA prefill attention straight over a paged KV pool
+    (oracle for `paged_prefill.paged_prefill_pallas`).
+
+    The token batch is a flat concatenation of per-request *segments*: a
+    prefill chunk contributes its chunk tokens (a decode token is the
+    degenerate one-token segment), each padded to a multiple of the query
+    tile `tq` so a tile never straddles two segments — the same layout
+    contract as the Pallas kernel. Every query attends causally against
+    its segment's KV **in the pool** (the chunk's own KV must already be
+    scattered in) — no dense prefix gather, no staging buffer. KV is
+    gathered per query TILE (T/tq rows), not per token, so the oracle's
+    memory traffic is O(T/tq * MAXB*BS), mirroring the kernel's per-tile
+    block chase.
+
+    q:           (T, H, D)   flat token batch, T % tq == 0 (padding rows
+                 allowed; their outputs are garbage the caller discards)
+    kv_pool:     (NB, BS, 2, KV, D) device pool; [..., 0/1, :, :] = K/V
+    block_table: (S, MAXB) int32 physical block ids per segment
+    seg_ids:     (T,) int32 segment of each token
+    q_pos:       (T,) int32 absolute position of each token in its sequence
+    kv_len:      (S,) int32 valid tokens per segment (prefix + chunk)
+    host_pool/tier: when `tier` (S,) bool marks a segment's blocks as
+                 host-resident, its KV is gathered from `host_pool` instead
+                 (layer-wise offload mid-prefill). Both pools are gathered
+                 and selected — fine for the oracle, 2x traffic.
+    returns      (T, H, D)
+    """
+    T, H, D = q.shape
+    S, MAXB = block_table.shape
+    BS, KV = kv_pool.shape[1], kv_pool.shape[3]
+    G = H // KV
+    NT = T // tq
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    tile_seg = seg_ids.reshape(NT, tq)[:, 0]
+    tab_t = block_table[tile_seg]            # (NT, MAXB)
+    # a host-resident segment's ids index the HOST pool and vice versa —
+    # clamp the not-applicable gather into range, `where` discards it
+    g = kv_pool[jnp.minimum(tab_t, kv_pool.shape[0] - 1)]
+    if tier is not None:                     # (NT, MAXB, BS, 2, KV, D)
+        gh = host_pool[jnp.minimum(tab_t, host_pool.shape[0] - 1)]
+        tt = tier[tile_seg]
+        g = jnp.where(tt[:, None, None, None, None, None], gh, g)
+    k = g[:, :, :, 0].reshape(NT, MAXB * BS, KV, D)
+    v = g[:, :, :, 1].reshape(NT, MAXB * BS, KV, D)
+    qh = (q * scale).reshape(NT, tq, KV, G, D)
+    logits = jnp.einsum("ntkgd,nskd->nkgts", qh, k).astype(jnp.float32)
+    k_pos = jnp.arange(MAXB * BS)
+    qp = q_pos.reshape(NT, tq)
+    mask = (qp[:, :, None] >= k_pos[None, None]) \
+        & (k_pos[None, None] < kv_len[tile_seg][:, None, None])
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)      # (NT, KV, G, tq, Skv)
+    out = jnp.einsum("nkgts,nskd->ntkgd", p.astype(v.dtype), v)
+    return out.reshape(T, H, D)
+
+
 def paged_attention_reference(q, kv_pool, block_table, kv_len, *,
                               softmax_scale=None):
     """Decode GQA attention over a paged KV pool (oracle for the Pallas kernel).

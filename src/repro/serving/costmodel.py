@@ -118,12 +118,26 @@ class CostModel:
 
     # ----------------------------------------------------------- mixed batch
     def mixed_step_time(self, prefill_chunk_time: float, batch_size: int,
-                        avg_ctx: int, host_kv_bytes: float = 0.0) -> float:
+                        avg_ctx: int, host_kv_bytes: float = 0.0,
+                        fused: bool = False) -> float:
         """One iteration that batches prefill-chunk tokens WITH the decode
         tokens (chunked prefill). The chunk portion is FLOPs-bound, the
-        decode portion HBM-bound, and the combined pass streams weights
-        once — so the iteration takes the max of the two, not the sum
-        (this overlap is the mixed-batching win)."""
+        decode portion HBM-bound — the iteration takes the max of the two,
+        not the sum (this overlap is the mixed-batching win).
+
+        The default arm models the TWO-CALL executor (chunk forward +
+        decode forward): each call streams the weights itself, so the
+        decode side bills params + KV. The `fused` arm models the single
+        `mixed_step` forward: ONE weight stream per iteration — the decode
+        tokens ride the chunk's parameter pass, so the decode side bills
+        only its KV (and host reload) traffic. With no chunk in the
+        iteration the fused step degenerates to a plain decode step (the
+        params must stream for the decode batch either way)."""
         t_dec = self.decode_step_time(batch_size, avg_ctx, host_kv_bytes) \
             if batch_size > 0 else 0.0
-        return max(prefill_chunk_time, t_dec)
+        if not fused or batch_size <= 0 or prefill_chunk_time <= 0.0:
+            return max(prefill_chunk_time, t_dec)
+        kv_total = self.kv_bytes(avg_ctx) * batch_size
+        t_kv = kv_total / (self.hw.hbm_bw * self.mbu_decode)
+        t_reload = host_kv_bytes / self.hw.offload_bw
+        return max(prefill_chunk_time, t_kv, t_reload)

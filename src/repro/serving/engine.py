@@ -24,6 +24,15 @@ completing a 3-axis scheduling matrix (policy x slo_aware x chunked):
              chunk's offloaded-layer d2h traffic hits the link ledger as
              it is produced.
 
+`EngineConfig.fused` (chunked mode only) collapses the iteration's two
+executor calls (chunk forward + decode forward) into ONE
+`PagedExecutor.mixed_step`: chunk and decode tokens share a single
+weight stream per layer, and chunks attend directly against the paged
+pools through the paged-prefill kernel instead of a gathered dense
+prefix buffer. Tokens are identical to the two-call path
+(tests/test_fused.py); the iteration is charged
+`CostModel.mixed_step_time(..., fused=True)` (one weight stream).
+
 The engine clock is virtual (driven by the cost model) so runs are exactly
 reproducible and policy behaviour — not CPU speed — determines metrics;
 generated TOKENS are real model outputs, which is what the losslessness
@@ -46,7 +55,7 @@ from repro.core import (
 )
 from repro.core.predictor import HistogramPredictor, LengthPredictor
 from repro.serving.costmodel import CostModel, HWProfile, TPU_V5E
-from repro.serving.executor import PagedExecutor
+from repro.serving.executor import MixedChunk, MixedDecode, PagedExecutor
 from repro.serving.request import Phase, Request
 
 
@@ -63,6 +72,10 @@ class EngineConfig:
     chunk_size: int = 32            # per-iteration prefill token budget
     chunk_floor: int = 8            # min chunk tokens/iter (progress)
     prefix_cache: bool = False      # ref-counted cross-request sharing
+    fused: bool = False             # ONE forward per iteration: chunks +
+    #                                 decode batch share a weight stream and
+    #                                 chunks attend straight against the
+    #                                 paged pools (requires chunked=True)
 
 
 class LayerKVEngine:
@@ -72,6 +85,8 @@ class LayerKVEngine:
                  predictor: Optional[LengthPredictor] = None, rng=None):
         self.cfg = cfg
         self.ec = ec or EngineConfig()
+        if self.ec.fused and not self.ec.chunked:
+            raise ValueError("EngineConfig.fused requires chunked=True")
         self.ex = PagedExecutor(cfg, params, self.ec.num_device_blocks,
                                 self.ec.num_host_blocks, self.ec.block_size,
                                 rng=rng)
@@ -228,18 +243,23 @@ class LayerKVEngine:
 
     # ------------------------------------------------------- chunked prefill
     def _gather_buffers(self, r: Request):
-        """Dense (L, S_buf, KV, hd) K/V prefix buffers for r. Gathered from
-        the pools on the request's FIRST chunk, then cached and kept fresh
-        with the chunk appends: a prefilling request's block contents only
-        change through its own chunks (evictions touch decoding requests),
-        so re-gathering every chunk would be pure waste."""
+        """Dense (L, S_buf, KV, hd) K/V prefix buffers for r — the LEGACY
+        (two-call) chunk path only; fused mode attends straight against
+        the pools and never materializes these. Gathered from the pools on
+        the request's FIRST chunk, then cached and kept fresh with the
+        chunk appends: a prefilling request's block contents only change
+        through its own chunks (evictions touch decoding requests), so
+        re-gathering every chunk would be pure waste. Only the blocks
+        holding the `prefill_done` live tokens are physically gathered
+        (zero for a fresh prompt, the cached prefix for a hit)."""
         if r.rid in self._chunk_bufs:
             return self._chunk_bufs[r.rid]
         ks, vs = [], []
         for l in range(self.L):
             a = self.bm.allocation(r.rid, l)
             tier = "device" if a.pool == DEVICE else "host"
-            k, v = self.ex.gather_layer(tier, a.blocks)
+            k, v = self.ex.gather_layer(tier, a.blocks,
+                                        kv_valid=r.prefill_done)
             ks.append(k)
             vs.append(v)
         bufs = (jnp.stack(ks), jnp.stack(vs))
@@ -275,6 +295,58 @@ class LayerKVEngine:
             self._chunk_bufs[r.rid] = (
                 kbuf.at[:, p:p + c].set(kc.astype(kbuf.dtype)),
                 vbuf.at[:, p:p + c].set(vc.astype(vbuf.dtype)))
+
+    # ---------------------------------------------------------- fused step
+    def _run_mixed(self, chunk_work: List[tuple],
+                   sel: List[Request]) -> None:
+        """One fused iteration: every prefill chunk AND the decode batch in
+        a single `PagedExecutor.mixed_step` forward — one weight stream per
+        layer per iteration. Chunk tokens attend straight against the paged
+        pools (block tables sliced to the live prefix + chunk), so the
+        O(S) dense prefix gather of the two-call path is gone entirely;
+        new KV scatters into the pools inside the step. Bookkeeping
+        (ledger d2h, prefill progress, prefix registration, token appends)
+        mirrors `_run_chunk` + `_run_decode` exactly."""
+        for r in sel:
+            for l in list(self.bm.tables[r.rid]):
+                self.bm.extend_layer(r.rid, l, 1)
+        chunks: List[MixedChunk] = []
+        for r, c in chunk_work:
+            p = r.prefill_done
+            nb_live = -(-(p + c) // self.ec.block_size)
+            tabs, tiers = [], []
+            for l in range(self.L):
+                a = self.bm.allocation(r.rid, l)
+                tabs.append(a.blocks[:nb_live])
+                tiers.append(a.pool == HOST)
+            chunks.append(MixedChunk(tokens=r.prompt[p:p + c], offset=p,
+                                     tables=tabs, tiers=tiers))
+        decodes: List[MixedDecode] = []
+        for r in sel:
+            ctx = r.prompt_len + r.tokens_out - 1
+            tabs = []
+            for l in range(self.L):
+                a = self.bm.allocation(r.rid, l)
+                assert a.pool == DEVICE
+                tabs.append(a.blocks)
+            decodes.append(MixedDecode(token=r.generated[-1], ctx=ctx,
+                                       tables=tabs))
+        out = self.ex.mixed_step(chunks, decodes)
+        for i, (r, c) in enumerate(chunk_work):
+            n_off = len(self.bm.layers_on(r.rid, HOST))
+            if n_off:
+                self.off.ledger.submit(
+                    self.now, self.cost.kv_bytes(c, n_off), "offload")
+            r.prefill_done += c
+            r.n_chunks += 1
+            if self.ec.prefix_cache and r.prompt:
+                self.bm.register_prefix(r.rid, r.prompt,
+                                        upto=r.prefill_done)
+            if r.prefill_complete:
+                r.generated.append(int(out[i]))
+        for j, r in enumerate(sel):
+            r.generated.append(int(out[len(chunk_work) + j]))
+            r.tokens_out += 1
 
     # ------------------------------------------------------ residency mgmt
     def _ensure_device(self, r: Request) -> bool:
@@ -480,10 +552,20 @@ class LayerKVEngine:
         chunk_time = 0.0
         for r, c in chunk_work:
             chunk_time += self.cost.chunk_prefill_time(c, r.prefill_done)
-            self._run_chunk(r, c)
 
-        dec_time = self._run_decode(sel) if sel else 0.0
-        self.now += max(chunk_time, dec_time)
+        if self.ec.fused:
+            # ONE forward: chunks + decode batch share the weight stream
+            R = len(sel)
+            avg_ctx = (int(sum(r.prompt_len + r.tokens_out - 1
+                               for r in sel) / R) + 1) if sel else 0
+            self._run_mixed(chunk_work, sel)
+            self.now += self.cost.mixed_step_time(chunk_time, R, avg_ctx,
+                                                  fused=True)
+        else:
+            for r, c in chunk_work:
+                self._run_chunk(r, c)
+            dec_time = self._run_decode(sel) if sel else 0.0
+            self.now += max(chunk_time, dec_time)
 
         # requests whose final chunk just ran get their first token now
         for r, _ in chunk_work:

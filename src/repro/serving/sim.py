@@ -20,6 +20,11 @@ Engine-step semantics (SimConfig.chunked selects the second mode):
              Chunk costs telescope exactly (CostModel.chunk_prefill_time),
              and each chunk's offloaded-layer KV is submitted to the link
              ledger as it is produced (chunk-granular d2h overlap).
+             `SimConfig.fused` additionally prices the iteration as the
+             fused single-forward executor (one weight stream: the decode
+             tokens ride the chunk's parameter pass — see
+             CostModel.mixed_step_time(fused=True)), mirroring
+             EngineConfig.fused in the real engine.
 
 Policies (orthogonal to the step semantics — a 3-axis matrix
 policy x slo_aware x chunked):
@@ -61,6 +66,10 @@ class SimConfig:
     chunked: bool = False               # chunked prefill + mixed batching
     chunk_floor: int = 16               # min chunk tokens/iter (progress)
     prefix_cache: bool = False          # ref-counted cross-request sharing
+    fused: bool = False                 # fused mixed step (chunked only):
+    #                                     one weight stream per iteration —
+    #                                     mirrors EngineConfig.fused via
+    #                                     CostModel.mixed_step_time(fused=)
     # §3.1.3: fraction of each prefill iteration the TP all-reduce keeps
     # the offload link reserved (PCIe testbeds; 0 = disjoint fabrics)
     collective_reserve_frac: float = 0.0
@@ -174,6 +183,11 @@ class ServingSimulator:
         self.cfg = cfg
         self.hw = hw
         self.sim = sim
+        if sim.fused and not sim.chunked:
+            # mirror the engine's guard: the exclusive-prefill path never
+            # reads `fused`, so accepting it would silently report
+            # two-call numbers labeled as the fused arm
+            raise ValueError("SimConfig.fused requires chunked=True")
         self.cost = CostModel(cfg, hw, alpha=alpha, beta=beta)
         self.L = max(cfg.n_attention_layers(), 1)
         ndb = sim.num_device_blocks or derive_device_blocks(cfg, hw, sim)
@@ -761,14 +775,15 @@ class ServingSimulator:
                 # promote against an estimate, then re-price host streaming
                 # from post-promotion residency (each byte charged once)
                 dt_est = self.cost.mixed_step_time(t_chunk, len(sel),
-                                                   avg_ctx, host_bytes)
+                                                   avg_ctx, host_bytes,
+                                                   fused=self.sim.fused)
                 self._promote(t, dt_est, decoding)
                 host_bytes = sum(
                     self.cost.kv_bytes(r.prompt_len + r.tokens_out,
                                        self.host_layers.get(r.rid, 0))
                     for r in sel)
             dt = self.cost.mixed_step_time(t_chunk, len(sel), avg_ctx,
-                                           host_bytes)
+                                           host_bytes, fused=self.sim.fused)
             t += dt
 
             if chunks:
