@@ -11,7 +11,8 @@ import time
 from benchmarks.common import emit
 from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
 from repro.serving.costmodel import L20
-from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.scheduler import ServeConfig
+from repro.serving.sim import ServingSimulator
 from repro.serving.workload import fixed_length
 
 CTX = [128, 512, 1024, 2048, 4096, 8192, 16384]
@@ -22,7 +23,7 @@ def main(n_requests: int = 100, smoke: bool = False) -> None:
         t0 = time.perf_counter()
         reqs = fixed_length(n_requests, ctx, 512, rate=1.0, seed=1)
         m = ServingSimulator(LLAMA2_7B, L20,
-                             SimConfig(policy="vllm")).run(reqs)
+                             ServeConfig.for_sim(policy="vllm")).run(reqs)
         us = (time.perf_counter() - t0) * 1e6
         emit(f"fig1.ctx{ctx}", us,
              f"ttft_s={m.mean_ttft:.3f};tpot_ms={m.mean_tpot*1e3:.1f};"

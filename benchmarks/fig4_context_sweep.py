@@ -24,7 +24,8 @@ if __package__ in (None, ""):  # `python benchmarks/fig4_context_sweep.py`
 from benchmarks.common import emit
 from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
 from repro.serving.costmodel import L20
-from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.scheduler import ServeConfig
+from repro.serving.sim import ServingSimulator
 from repro.serving.workload import fixed_length
 
 CTX = [512, 1024, 2048, 4096, 8192]
@@ -37,11 +38,11 @@ def main(n_requests: int = 100, smoke: bool = False,
         t0 = time.perf_counter()
         mk = lambda: fixed_length(n_requests, ctx, 512, rate=1.0, seed=1)
         mv = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="vllm")).run(mk())
+                              ServeConfig.for_sim(policy="vllm")).run(mk())
         ml = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="layerkv")).run(mk())
+                              ServeConfig.for_sim(policy="layerkv")).run(mk())
         mc = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="layerkv",
+                              ServeConfig.for_sim(policy="layerkv",
                                         chunked=True)).run(mk())
         us = (time.perf_counter() - t0) * 1e6
         speedup = mv.mean_ttft / max(ml.mean_ttft, 1e-9)

@@ -25,7 +25,8 @@ if __package__ in (None, ""):  # `python benchmarks/fig5_parallelism.py`
 from benchmarks.common import emit
 from repro.configs.base import ModelConfig
 from repro.serving.costmodel import L20
-from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.scheduler import ServeConfig
+from repro.serving.sim import ServingSimulator
 from repro.serving.workload import fixed_length
 
 YI_34B = ModelConfig(
@@ -43,9 +44,9 @@ def main(n_requests: int = 80, smoke: bool = False) -> None:
         # slice of each prefill iteration (§3.1.3 contention avoidance)
         frac = 0.25 if dop > 1 else 0.0
         mk = lambda: fixed_length(n_requests, 2048, 384, rate=1.0, seed=4)
-        mv = ServingSimulator(YI_34B, hw, SimConfig(
+        mv = ServingSimulator(YI_34B, hw, ServeConfig.for_sim(
             policy="vllm", collective_reserve_frac=frac)).run(mk())
-        sim_l = ServingSimulator(YI_34B, hw, SimConfig(
+        sim_l = ServingSimulator(YI_34B, hw, ServeConfig.for_sim(
             policy="layerkv", collective_reserve_frac=frac))
         ml = sim_l.run(mk())
         us = (time.perf_counter() - t0) * 1e6

@@ -11,7 +11,8 @@ import time
 from benchmarks.common import emit
 from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
 from repro.serving.costmodel import L20
-from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.scheduler import ServeConfig
+from repro.serving.sim import ServingSimulator
 from repro.serving.workload import sharegpt_like
 
 RATES = [2.0, 4.0, 8.0, 12.0, 16.0]
@@ -22,11 +23,11 @@ def main(n_requests: int = 300, smoke: bool = False) -> None:
         t0 = time.perf_counter()
         mk = lambda: sharegpt_like(n_requests, rate=rate, seed=7)
         mv = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="vllm")).run(mk())
+                              ServeConfig.for_sim(policy="vllm")).run(mk())
         ml = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="layerkv")).run(mk())
+                              ServeConfig.for_sim(policy="layerkv")).run(mk())
         mc = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="layerkv",
+                              ServeConfig.for_sim(policy="layerkv",
                                         chunked=True)).run(mk())
         us = (time.perf_counter() - t0) * 1e6
         emit(f"fig6.rate{rate:g}", us,

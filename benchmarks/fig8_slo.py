@@ -10,7 +10,8 @@ import time
 from benchmarks.common import emit
 from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
 from repro.serving.costmodel import L20
-from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.scheduler import ServeConfig
+from repro.serving.sim import ServingSimulator
 from repro.serving.workload import sharegpt_like
 
 RATES = [6.0, 8.0, 10.0, 12.0, 14.0]
@@ -22,15 +23,15 @@ def main(n_requests: int = 300, smoke: bool = False) -> None:
         mk = lambda: sharegpt_like(n_requests, rate=rate, seed=13,
                                    tpot_slo=0.2, ttft_slo=3.0)
         mv = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="vllm")).run(mk())
+                              ServeConfig.for_sim(policy="vllm")).run(mk())
         ml = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="layerkv",
+                              ServeConfig.for_sim(policy="layerkv",
                                         slo_aware=True)).run(mk())
         mn = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="layerkv",
+                              ServeConfig.for_sim(policy="layerkv",
                                         slo_aware=False)).run(mk())
         mc = ServingSimulator(LLAMA2_7B, L20,
-                              SimConfig(policy="layerkv", slo_aware=True,
+                              ServeConfig.for_sim(policy="layerkv", slo_aware=True,
                                         chunked=True)).run(mk())
         us = (time.perf_counter() - t0) * 1e6
         emit(f"fig8.rate{rate:g}", us,

@@ -1,5 +1,6 @@
 """Prefix-cache benchmark: TTFT vs prefix-share ratio (this repo's
-extension beyond the paper — heavy shared-system-prompt traffic).
+extension beyond the paper — heavy shared-system-prompt traffic), plus
+the admission-ordering comparison under congestion.
 
 Three arms per share ratio, all Llama2-7B on L20 at a congested arrival
 rate:
@@ -8,6 +9,13 @@ rate:
   layerkv_chunked   the PR 1 arm: layer-wise + chunked prefill, no sharing
   layerkv_prefix    layerkv_chunked + ref-counted cross-request prefix
                     caching (content-addressed blocks, COW tails)
+
+A second sweep (``admission``) pits the two `AdmissionPolicy`
+implementations against each other on the layerkv_prefix arm, on a
+congested mixed workload (30% cache-cold traffic): `prefix_aware`
+admits cache-hitting requests first within a bounded aging window, so
+mean TTFT drops vs strict `fcfs` while every cache-miss request still
+gets served (max/mean miss TTFT reported — the no-starvation evidence).
 
 ``main(json_out=...)`` dumps the sweep to JSON; `BENCH_prefix_cache.json`
 in the repo root is that artifact, committed so future PRs can diff the
@@ -19,6 +27,7 @@ from __future__ import annotations
 
 import json
 import os
+import statistics
 import sys
 import time
 from typing import Optional
@@ -30,7 +39,8 @@ if __package__ in (None, ""):  # `python benchmarks/prefix_cache.py`
 from benchmarks.common import emit
 from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
 from repro.serving.costmodel import L20
-from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.scheduler import ServeConfig
+from repro.serving.sim import ServingSimulator
 from repro.serving.workload import shared_prefix
 
 SHARE_RATIOS = [0.0, 0.25, 0.5, 0.75, 0.9]
@@ -42,12 +52,37 @@ ARMS = {
                            prefix_cache=True),
 }
 
+# congested mixed workload for the admission-ordering comparison
+ADMISSION_RATE = 8.0
+ADMISSION_UNIQUE_FRAC = 0.3
+ADMISSION_AGE_FRAC = 2.0
+
 
 def _one(arm_kw: dict, n: int, ratio: float, scenario: str):
     reqs = shared_prefix(n, rate=2.0, scenario=scenario, share_ratio=ratio,
                          prompt_len=1024, output_len=256, seed=13)
-    m = ServingSimulator(LLAMA2_7B, L20, SimConfig(**arm_kw)).run(reqs)
+    m = ServingSimulator(LLAMA2_7B, L20, ServeConfig.for_sim(**arm_kw)).run(reqs)
     return m
+
+
+def _admission_arm(admission: str, n: int):
+    reqs = shared_prefix(n, rate=ADMISSION_RATE, scenario="system_prompt",
+                         share_ratio=0.5, prompt_len=1024, output_len=256,
+                         seed=13, unique_frac=ADMISSION_UNIQUE_FRAC)
+    sim = ServingSimulator(LLAMA2_7B, L20, ServeConfig.for_sim(
+        policy="layerkv", chunked=True, prefix_cache=True,
+        admission=admission, admission_age_frac=ADMISSION_AGE_FRAC))
+    m = sim.run(reqs)
+    miss = [r.ttft for r in sim.done if r.cached_prompt_len == 0]
+    return {
+        "mean_ttft_s": m.mean_ttft,
+        "p99_ttft_s": m.p99_ttft,
+        "prefix_hit_rate": m.prefix_hit_rate,
+        "n_finished": m.n_requests,
+        "n_miss": len(miss),
+        "miss_mean_ttft_s": statistics.mean(miss) if miss else 0.0,
+        "miss_max_ttft_s": max(miss) if miss else 0.0,
+    }
 
 
 def main(n_requests: int = 100, smoke: bool = False,
@@ -76,6 +111,21 @@ def main(n_requests: int = 100, smoke: bool = False,
                    "preemptions": m.preemptions}
             for name, m in ms.items()
         }
+
+    # ---- admission ordering under congestion (prefix_aware vs fcfs) ------
+    t0 = time.perf_counter()
+    adm = {name: _admission_arm(name, n_requests)
+           for name in ("fcfs", "prefix_aware")}
+    us = (time.perf_counter() - t0) * 1e6
+    f, p = adm["fcfs"], adm["prefix_aware"]
+    emit("prefix_cache.admission", us,
+         f"fcfs_ttft_s={f['mean_ttft_s']:.3f};"
+         f"prefix_aware_ttft_s={p['mean_ttft_s']:.3f};"
+         f"admission_speedup_x="
+         f"{f['mean_ttft_s'] / max(p['mean_ttft_s'], 1e-9):.2f};"
+         f"miss_max_ttft_s={p['miss_max_ttft_s']:.2f};"
+         f"served={p['n_finished']}")
+
     if json_out:
         doc = {
             "benchmark": "prefix_cache_share_sweep",
@@ -85,6 +135,16 @@ def main(n_requests: int = 100, smoke: bool = False,
             "n_requests": n_requests,
             "arms": list(ARMS),
             "by_share_ratio": rows,
+            "admission_under_congestion": {
+                "workload": {
+                    "scenario": "system_prompt", "share_ratio": 0.5,
+                    "rate": ADMISSION_RATE, "prompt_len": 1024,
+                    "output_len": 256,
+                    "unique_frac": ADMISSION_UNIQUE_FRAC,
+                    "admission_age_frac": ADMISSION_AGE_FRAC,
+                },
+                "arms": adm,
+            },
         }
         with open(json_out, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)

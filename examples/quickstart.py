@@ -1,5 +1,6 @@
-"""Quickstart: build a model, train a few steps, then serve it with the
-LayerKV engine — all on CPU in under a minute.
+"""Quickstart: build a model, train a few steps, then serve it through a
+live `ServingSession` (submit online, stream tokens per iteration) — all
+on CPU in under a minute.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,8 +10,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.serving.engine import EngineConfig, LayerKVEngine
+from repro.serving.engine import LayerKVEngine
 from repro.serving.request import Request
+from repro.serving.scheduler import ServeConfig
+from repro.serving.session import ServingSession
 from repro.training.data import DataConfig
 from repro.training.train_loop import train
 
@@ -27,19 +30,29 @@ def main():
                 log_every=20)
     print(f"loss: {res.losses[0]:.3f} -> {res.final_loss:.3f}")
 
-    # --- 2. serve a small batch of requests with LayerKV --------------------
+    # --- 2. serve requests through an online session ------------------------
     print("\n== serving 6 requests (layer-wise KV offloading) ==")
     rng = np.random.RandomState(0)
-    reqs = [Request(rid=f"r{i}", prompt_len=32, output_len=8,
-                    arrival=i * 0.01,
-                    prompt=[int(t) for t in
-                            rng.randint(0, cfg.vocab_size, 32)])
-            for i in range(6)]
     eng = LayerKVEngine(cfg, None,
-                        EngineConfig(policy="layerkv", num_device_blocks=24,
-                                     num_host_blocks=256, block_size=8),
+                        ServeConfig.for_engine(policy="layerkv",
+                                               num_device_blocks=24,
+                                               num_host_blocks=256,
+                                               block_size=8),
                         rng=jax.random.PRNGKey(0))
-    done = eng.run(reqs)
+    session = ServingSession(eng)
+    handles = [
+        session.submit(Request(rid=f"r{i}", prompt_len=32, output_len=8,
+                               prompt=[int(t) for t in
+                                       rng.randint(0, cfg.vocab_size, 32)]),
+                       arrival=i * 0.01)
+        for i in range(6)]
+
+    # stream the first request token-by-token (the rest decode alongside)
+    print("  streaming r0:", end="", flush=True)
+    for tok in session.stream(handles[0]):
+        print(f" {tok}", end="", flush=True)
+    print()
+    done = session.drain()                 # run the rest to completion
     for r in done:
         print(f"  {r.rid}: {len(r.generated)} tokens, "
               f"ttft={r.ttft*1e3:.1f}ms -> {r.generated[:6]}...")

@@ -1,5 +1,6 @@
 """End-to-end serving driver: LayerKV vs request-wise (vLLM-style) policy
-on the SAME model and workload, with real JAX execution + paged KV pools.
+on the SAME model and workload, with real JAX execution + paged KV pools,
+driven through `ServingSession` (online submit + drain).
 
 Demonstrates the paper's two headline properties at smoke scale:
   1. losslessness — identical generated tokens under forced offloading;
@@ -15,8 +16,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.serving.engine import EngineConfig, LayerKVEngine
+from repro.serving.engine import LayerKVEngine
 from repro.serving.request import Request
+from repro.serving.scheduler import ServeConfig
+from repro.serving.session import ServingSession
 
 
 def make_workload(cfg, n=10, seed=0):
@@ -34,10 +37,13 @@ def make_workload(cfg, n=10, seed=0):
 def run(cfg, policy, blocks, seed=0):
     eng = LayerKVEngine(
         cfg, None,
-        EngineConfig(policy=policy, num_device_blocks=blocks,
-                     num_host_blocks=512, block_size=8),
+        ServeConfig.for_engine(policy=policy, num_device_blocks=blocks,
+                               num_host_blocks=512, block_size=8),
         rng=jax.random.PRNGKey(7))
-    done = eng.run(make_workload(cfg, seed=seed))
+    session = ServingSession(eng)
+    for r in make_workload(cfg, seed=seed):
+        session.submit(r, arrival=r.arrival)
+    done = session.drain()
     return eng, {r.rid: r for r in done}
 
 

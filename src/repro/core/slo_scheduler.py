@@ -52,11 +52,16 @@ class SLOScheduler:
                      cached_len: Optional[Callable[[Request], int]] = None
                      ) -> int:
         """Maximum n such that the first n queued prefills fit in the
-        minimum TPOT slack (Eq. 2). FCFS order — no reordering, hence no
-        starvation (paper §1). `cached_len(q)` reports the prompt tokens a
-        prefix-cache hit would skip: the Eq.3 estimate must price only the
-        UNCACHED suffix, or admission over-throttles exactly the workloads
-        the cache accelerates (chunk_prefill_time(p, 0) == prefill_time(p),
+        minimum TPOT slack (Eq. 2). `queue` arrives in the caller's
+        admission order — FCFS by default (paper §1: no reordering, no
+        starvation), or an `AdmissionPolicy` ordering (e.g. prefix_aware,
+        whose bounded aging window carries the no-starvation guarantee
+        instead). Since hits price only their uncached suffix, a
+        hits-first order also fits MORE prefills into the same slack.
+        `cached_len(q)` reports the prompt tokens a prefix-cache hit
+        would skip: the Eq.3 estimate must price only the UNCACHED
+        suffix, or admission over-throttles exactly the workloads the
+        cache accelerates (chunk_prefill_time(p, 0) == prefill_time(p),
         so the uncached case telescopes to the original estimate)."""
         if not queue:
             return 0

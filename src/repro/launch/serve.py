@@ -1,10 +1,15 @@
-"""Serving driver CLI: run the LayerKV engine on a synthetic workload.
+"""Serving driver CLI: run the LayerKV engine on a synthetic workload
+through a live `ServingSession` — requests are submitted online and
+every generated token is printed as its iteration produces it.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
         --policy layerkv --requests 16 --device-blocks 64
 
-Real JAX execution with paged KV pools; prints per-request TTFT and the
-offload-ledger summary.
+All five scheduling axes are exposed: --policy, --no-slo-aware,
+--chunked, --fused, --prefix-cache (plus --chunk-size for the chunked
+per-iteration token budget) and the admission ordering (--admission
+fcfs|prefix_aware). Real JAX execution with paged KV pools; prints the
+per-token stream, per-request TTFT and the offload-ledger summary.
 """
 from __future__ import annotations
 
@@ -22,45 +27,93 @@ def main():
     ap.add_argument("--policy", default="layerkv",
                     choices=["layerkv", "vllm"])
     ap.add_argument("--no-slo-aware", action="store_true")
+    ap.add_argument("--chunked", action="store_true",
+                    help="chunked prefill + mixed batching")
+    ap.add_argument("--fused", action="store_true",
+                    help="ONE forward per iteration (implies --chunked)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="ref-counted cross-request prefix sharing")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="per-iteration prefill token budget (chunked)")
+    ap.add_argument("--admission", default="fcfs",
+                    choices=["fcfs", "prefix_aware"],
+                    help="waiting-queue admission ordering")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--shared-len", type=int, default=0,
+                    help="leading tokens shared by every prompt "
+                         "(exercises --prefix-cache)")
     ap.add_argument("--output-len", type=int, default=16)
     ap.add_argument("--rate", type=float, default=20.0)
     ap.add_argument("--device-blocks", type=int, default=64)
     ap.add_argument("--host-blocks", type=int, default=1024)
     ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the per-token stream printout")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
     from repro.configs import get_config, get_smoke_config
-    from repro.serving.engine import EngineConfig, LayerKVEngine
+    from repro.serving.engine import LayerKVEngine
     from repro.serving.request import Request
+    from repro.serving.scheduler import ServeConfig
+    from repro.serving.session import ServingSession
 
+    if not 0 <= args.shared_len < args.prompt_len:
+        ap.error(f"--shared-len {args.shared_len} must be in "
+                 f"[0, --prompt-len {args.prompt_len}): every prompt "
+                 "needs at least one unique token")
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = dataclasses.replace(cfg, dtype="float32")
     rng = np.random.RandomState(args.seed)
+    shared = [int(x) for x in
+              rng.randint(0, cfg.vocab_size, args.shared_len)]
     t = 0.0
     reqs = []
     for i in range(args.requests):
         t += rng.exponential(1.0 / args.rate)
+        sfx = args.prompt_len - len(shared)
         reqs.append(Request(
             rid=f"r{i}", prompt_len=args.prompt_len,
             output_len=args.output_len, arrival=t,
-            prompt=[int(x) for x in
-                    rng.randint(0, cfg.vocab_size, args.prompt_len)]))
+            prompt=shared + [int(x) for x in
+                             rng.randint(0, cfg.vocab_size, sfx)]))
 
     eng = LayerKVEngine(
         cfg, None,
-        EngineConfig(policy=args.policy,
-                     slo_aware=not args.no_slo_aware,
-                     num_device_blocks=args.device_blocks,
-                     num_host_blocks=args.host_blocks,
-                     block_size=args.block_size),
+        ServeConfig.for_engine(
+            policy=args.policy,
+            slo_aware=not args.no_slo_aware,
+            chunked=args.chunked or args.fused,
+            fused=args.fused,
+            prefix_cache=args.prefix_cache,
+            admission=args.admission,
+            max_prefill_tokens=args.chunk_size,
+            num_device_blocks=args.device_blocks,
+            num_host_blocks=args.host_blocks,
+            block_size=args.block_size),
         rng=jax.random.PRNGKey(args.seed))
-    done = eng.run(reqs)
+
+    # submit everything up front (arrivals land as the clock reaches
+    # them) and pump the scheduler one iteration at a time, printing the
+    # token stream live as each iteration produces it
+    session = ServingSession(eng)
+    handles = [session.submit(r, arrival=r.arrival) for r in reqs]
+    while session.step():
+        for h in handles:
+            new = h.take_new()
+            if new and not args.quiet:
+                star = "*" if h.request.cached_prompt_len else " "
+                print(f"[t={eng.clock() * 1e3:9.3f}ms] {h.rid:>4}{star} "
+                      f"+{len(new)} -> {new}")
+    done = session.drain()
+
     ttfts = [r.ttft for r in done]
-    print(f"policy={args.policy} requests={len(done)} "
+    print(f"policy={args.policy} chunked={args.chunked or args.fused} "
+          f"fused={args.fused} prefix_cache={args.prefix_cache} "
+          f"admission={args.admission}")
+    print(f"requests={len(done)} "
           f"mean_ttft={statistics.mean(ttfts)*1e3:.1f}ms "
           f"p99_ttft={sorted(ttfts)[-1]*1e3:.1f}ms")
     off = [x for x in eng.off.ledger.log if x.kind == "offload"]
@@ -69,6 +122,9 @@ def main():
           f"({sum(x.nbytes for x in off)/2**20:.2f} MiB), "
           f"{len(rel)} reloads "
           f"({sum(x.nbytes for x in rel)/2**20:.2f} MiB)")
+    if args.prefix_cache and eng.bm.cache is not None:
+        print(f"prefix cache: hit_rate={eng.bm.cache.hit_rate:.2f} "
+              f"({eng.bm.cache.n_hits}/{eng.bm.cache.n_lookups} lookups)")
     sample = done[0]
     print(f"sample output ({sample.rid}): {sample.generated[:8]}...")
 

@@ -9,199 +9,117 @@ scheduler, Eq.5 forecast) to the `PagedExecutor`. Two policies:
              buffer); offloaded layers live in the HOST pool and are
              streamed/promoted back for decode.
 
-Orthogonally, `EngineConfig.chunked` selects the engine-step semantics,
-completing a 3-axis scheduling matrix (policy x slo_aware x chunked):
+Orthogonally, `ServeConfig.chunked` selects the engine-step semantics
+(exclusive vLLM-0.5.5 prefill vs chunked prefill + mixed batching) and
+`ServeConfig.fused` (chunked only) collapses the iteration's two executor
+calls into ONE `PagedExecutor.mixed_step` — see ROADMAP "Scheduling
+matrix" for the full five-axis picture.
 
-  exclusive  (default) a prefill runs its whole prompt in one call,
-             stalling the decode batch — vLLM 0.5.5 semantics.
-  chunked    prompts prefill in scheduler-controlled chunks under a
-             per-iteration token budget (`chunk_size`, tightened by Eq.1
-             slack when slo_aware); chunk compute batches with the decode
-             step, the clock advancing by max(chunk, decode) per
-             iteration. Chunk KV appends into the paged pools at arbitrary
-             token offsets (`PagedExecutor.write_layer_slice`), with
-             causal masking against already-cached blocks, and each
-             chunk's offloaded-layer d2h traffic hits the link ledger as
-             it is produced.
+Everything decision-shaped — admission (policy-ordered, Alg.1 budgeted),
+the device-need gate, the Eq.4 layer-split allocation, chunk assembly,
+cache-copy ledger routing, cancellation — lives in the shared
+`SchedulerCore` (serving/scheduler.py), which the discrete-event
+simulator drives identically; this module keeps only the real execution:
+moving bytes through the paged pools and the JAX forwards.
 
-`EngineConfig.fused` (chunked mode only) collapses the iteration's two
-executor calls (chunk forward + decode forward) into ONE
-`PagedExecutor.mixed_step`: chunk and decode tokens share a single
-weight stream per layer, and chunks attend directly against the paged
-pools through the paged-prefill kernel instead of a gathered dense
-prefix buffer. Tokens are identical to the two-call path
-(tests/test_fused.py); the iteration is charged
-`CostModel.mixed_step_time(..., fused=True)` (one weight stream).
-
-The engine clock is virtual (driven by the cost model) so runs are exactly
-reproducible and policy behaviour — not CPU speed — determines metrics;
-generated TOKENS are real model outputs, which is what the losslessness
-tests assert — in chunked mode the tokens must match the exclusive-mode
-engine exactly (see tests/test_chunked.py).
+The engine is driven through a `ServingSession` (serving/session.py):
+`submit()` requests while it runs, `stream()` tokens per iteration,
+`cancel()` any live request. `run(requests)` remains as a thin batch
+wrapper over a session. The engine clock is virtual (driven by the cost
+model) so runs are exactly reproducible and policy behaviour — not CPU
+speed — determines metrics; generated TOKENS are real model outputs,
+which is what the losslessness tests assert (tests/test_chunked.py,
+tests/test_fused.py, tests/test_session.py).
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (
-    DEVICE, HOST, LayerwiseBlockManager, OffloadEngine, PoolExhausted,
-    SLOScheduler, interleave_offload_layers,
-)
+from repro.core import DEVICE, HOST, LayerwiseBlockManager, OffloadEngine, \
+    SLOScheduler
 from repro.core.predictor import HistogramPredictor, LengthPredictor
 from repro.serving.costmodel import CostModel, HWProfile, TPU_V5E
 from repro.serving.executor import MixedChunk, MixedDecode, PagedExecutor
 from repro.serving.request import Phase, Request
+from repro.serving.scheduler import CoreDelegateMixin, SchedulerCore, \
+    ServeConfig
+from repro.serving.session import ServingSession
 
 
-@dataclasses.dataclass
-class EngineConfig:
-    policy: str = "layerkv"
-    slo_aware: bool = True
-    num_device_blocks: int = 128
-    num_host_blocks: int = 1024
-    block_size: int = 16
-    max_batch_size: int = 64
-    max_tokens_per_request: int = 4096
-    chunked: bool = False           # chunked prefill + mixed batching
-    chunk_size: int = 32            # per-iteration prefill token budget
-    chunk_floor: int = 8            # min chunk tokens/iter (progress)
-    prefix_cache: bool = False      # ref-counted cross-request sharing
-    fused: bool = False             # ONE forward per iteration: chunks +
-    #                                 decode batch share a weight stream and
-    #                                 chunks attend straight against the
-    #                                 paged pools (requires chunked=True)
+def EngineConfig(*, chunk_size: Optional[int] = None, **kw) -> ServeConfig:
+    """Deprecated shim: builds a `ServeConfig` with the historical engine
+    defaults (128 device blocks, 32-token chunk budget). `chunk_size` is
+    the old name of `max_prefill_tokens`."""
+    if chunk_size is not None:
+        kw["max_prefill_tokens"] = chunk_size
+    return ServeConfig.for_engine(**kw)
 
 
-class LayerKVEngine:
+class LayerKVEngine(CoreDelegateMixin):
+    produces_token_ids = True    # Request.generated carries real tokens
+
     def __init__(self, cfg: ModelConfig, params=None,
-                 ec: Optional[EngineConfig] = None,
+                 ec: Optional[ServeConfig] = None,
                  hw: HWProfile = TPU_V5E,
                  predictor: Optional[LengthPredictor] = None, rng=None):
         self.cfg = cfg
-        self.ec = ec or EngineConfig()
-        if self.ec.fused and not self.ec.chunked:
-            raise ValueError("EngineConfig.fused requires chunked=True")
-        self.ex = PagedExecutor(cfg, params, self.ec.num_device_blocks,
+        self.ec = (ec or ServeConfig.for_engine()).validate()
+        ndb = self.ec.num_device_blocks or 128  # 0 = backend default
+        self.ex = PagedExecutor(cfg, params, ndb,
                                 self.ec.num_host_blocks, self.ec.block_size,
                                 rng=rng)
         self.L = cfg.n_layers
-        self.bm = LayerwiseBlockManager(self.ec.num_device_blocks,
-                                        self.ec.num_host_blocks,
+        self.bm = LayerwiseBlockManager(ndb, self.ec.num_host_blocks,
                                         self.ec.block_size, self.L,
                                         prefix_cache=self.ec.prefix_cache)
-        if self.ec.prefix_cache:
-            # cache-driven copies (COW, promote, demote) move REAL bytes
-            # through the executor and charge the transfer ledger
-            self.bm.on_copy = self._cache_copy
         self.cost = CostModel(cfg, hw)
         self.off = OffloadEngine(self.cost, self.L)
         self.predictor = predictor or HistogramPredictor(
             [16, 32, 64, 128, 256])
         self.sched = SLOScheduler(self.cost, self.predictor)
-        self.now = 0.0
-        self.waiting: deque[Request] = deque()
-        self.prefilling: List[Request] = []   # chunked mode: in-flight chunks
-        self.decoding: List[Request] = []
-        self.done: List[Request] = []
-        self.host_layers: Dict[str, int] = {}
-        self._chunk_bufs: Dict[str, tuple] = {}  # rid -> cached (kbuf, vbuf)
+        # cache-driven copies (COW, promote, demote) move REAL bytes
+        # through the executor; the core charges the transfer ledger
+        self.core = SchedulerCore(self.ec, self.cost, self.bm, self.off,
+                                  self.sched, self.L,
+                                  physical_copy=self._physical_copy)
+        self._chunk_bufs: Dict[str, tuple] = {}  # rid -> cached (k, v)
 
-    # ------------------------------------------------------------- helpers
-    def _blocks(self, tokens: int) -> int:
-        return self.bm.blocks_for_tokens(tokens)
+    # --------------------------------------------- shared-core delegation
+    # queues/host_layers/clock()/advance_to() come from CoreDelegateMixin
+    @property
+    def now(self) -> float:
+        return self.core.now
 
-    def _cache_copy(self, src_pool: str, src: int, dst_pool: str,
-                    dst: int) -> None:
+    @now.setter
+    def now(self, t: float) -> None:
+        self.core.now = t
+
+    def finish(self) -> None:
+        self.bm.check()
+        assert not self._chunk_bufs, \
+            "leaked chunk prefix buffers: " + ", ".join(self._chunk_bufs)
+
+    def _physical_copy(self, src_pool: str, src: int, dst_pool: str,
+                       dst: int) -> None:
         src_tier = "device" if src_pool == DEVICE else "host"
         dst_tier = "device" if dst_pool == DEVICE else "host"
         self.ex.copy_blocks(src_tier, dst_tier, [src], [dst])
-        nbytes = self.cost.kv_bytes(self.ec.block_size, 1)
-        if src_pool == HOST and dst_pool == DEVICE:
-            self.off.ledger.submit(self.now, nbytes, "reload")
-        elif src_pool == DEVICE and dst_pool == HOST:
-            self.off.ledger.submit(self.now, nbytes, "offload")
 
-    def _cached_hint(self, r: Request) -> int:
-        """Cached-prefix length for Eq.3 admission estimates (price the
-        uncached suffix only, or admission over-throttles)."""
-        if self.ec.prefix_cache and r.prompt:
-            return self.bm.match_prefix(r.prompt)
-        return 0
-
-    def _device_need(self, r: Request) -> int:
-        """Admission gate: min of the plain-policy need and the hit-path
-        need — a hit estimate larger than the plain path (short prefix,
-        all layers device-resident) must never wedge a request the
-        layer-wise fallback fits."""
-        if self.ec.policy == "vllm":
-            need = self._blocks(r.prompt_len) * self.L
-        else:
-            plan = self.off.plan_for_prompt(r.prompt_len)
-            send_buf = 1 if plan.offload_layers else 0
-            need = self._blocks(r.prompt_len) * (plan.x + send_buf)
-        if self.ec.prefix_cache and r.prompt:
-            c = self.bm.match_prefix(r.prompt)
-            if c > 0:
-                hit_need = (self._blocks(r.prompt_len)
-                            - c // self.ec.block_size) * self.L
-                need = min(need, hit_need)
-        return need
+    def cancel(self, r: Request) -> bool:
+        """Unwind a live request (see SchedulerCore.cancel); the engine
+        additionally drops its cached chunk prefix buffers."""
+        if not self.core.cancel(r, self.now):
+            return False
+        self._chunk_bufs.pop(r.rid, None)
+        return True
 
     # -------------------------------------------------------------- prefill
-    def _alloc_prefill(self, r: Request):
-        """Allocate r's prompt KV per the policy; returns (retain, off)
-        layer lists or None when the pools cannot fit it.
-
-        With the prefix cache on, a content hit maps the shared prefix
-        blocks (refcount +1 per layer, COW copy of the partial tail) and
-        extends each layer with the uncached suffix — all device-resident;
-        prefill compute then starts at prefill_done = cached_len. A hit
-        that cannot fit falls through to the plain policy path."""
-        if self.ec.prefix_cache and r.prompt:
-            acq = self.bm.acquire_prefix(r.rid, r.prompt)
-            if acq is not None:
-                try:
-                    suffix = r.prompt_len - acq.cached_len
-                    for l in range(self.L):
-                        self.bm.extend_layer(r.rid, l, suffix)
-                except PoolExhausted:
-                    self.bm.free_request(r.rid)
-                    r.prefill_done = 0
-                else:
-                    r.prefill_done = acq.cached_len
-                    r.cached_prompt_len = acq.cached_len
-                    self.bm.cache.count(r.prompt_len, acq.cached_len)
-                    return list(range(self.L)), []
-        per_layer = self._blocks(r.prompt_len)
-        if self.ec.policy == "vllm":
-            retain = list(range(self.L))
-            off = []
-        else:
-            plan = self.off.plan_for_prompt(r.prompt_len)
-            fit = max(self.bm.num_free(DEVICE) // max(per_layer, 1) - 1, 0)
-            retain_n = min(self.L, max(plan.x, fit))
-            off = interleave_offload_layers(self.L, retain_n)
-            retain = [l for l in range(self.L) if l not in set(off)]
-        try:
-            for l in retain:
-                self.bm.alloc_layer(r.rid, l, r.prompt_len, DEVICE)
-            for l in off:
-                self.bm.alloc_layer(r.rid, l, r.prompt_len, HOST)
-        except PoolExhausted:
-            self.bm.free_request(r.rid)
-            return None
-        if self.ec.prefix_cache and r.prompt:
-            self.bm.cache.count(r.prompt_len, 0)  # admitted as a miss
-        return retain, off
-
     def _do_prefill(self, r: Request) -> bool:
-        alloc = self._alloc_prefill(r)
+        alloc = self.core.alloc_prefill(r)
         if alloc is None:
             return False
         retain, off = alloc
@@ -214,7 +132,8 @@ class LayerKVEngine:
             self._run_chunk(r, c)
             self.now += self.cost.chunk_prefill_time(c, p)
         else:
-            pad = self._blocks(r.prompt_len) * self.ec.block_size
+            pad = self.bm.blocks_for_tokens(r.prompt_len) \
+                * self.ec.block_size
             next_tok, k, v = self.ex.prefill(r.prompt, pad)
             for l in retain:
                 a = self.bm.allocation(r.rid, l)
@@ -233,7 +152,6 @@ class LayerKVEngine:
             r.generated.append(next_tok)
             if self.ec.prefix_cache and r.prompt:
                 self.bm.register_prefix(r.rid, r.prompt)
-        self.host_layers[r.rid] = len(off)
         r.prefill_start = r.prefill_start if r.prefill_start >= 0 else self.now
         r.first_token_time = self.now
         r.tokens_out = 1
@@ -251,7 +169,9 @@ class LayerKVEngine:
         through its own chunks (evictions touch decoding requests), so
         re-gathering every chunk would be pure waste. Only the blocks
         holding the `prefill_done` live tokens are physically gathered
-        (zero for a fresh prompt, the cached prefix for a hit)."""
+        (zero for a fresh prompt, the cached prefix for a hit). Entries
+        are dropped on the final chunk AND on cancel (`cancel()`), so the
+        dict is empty whenever no request is mid-prefill."""
         if r.rid in self._chunk_bufs:
             return self._chunk_bufs[r.rid]
         ks, vs = [], []
@@ -459,55 +379,17 @@ class LayerKVEngine:
                 r.finish_time = self.now
                 r.phase = Phase.FINISHED
                 self.bm.free_request(r.rid)
-                self.host_layers.pop(r.rid, None)
+                self.core.release(r)
                 self.predictor.observe(r.output_len)
                 self.decoding.remove(r)
                 self.done.append(r)
 
     # ---------------------------------------------------------------- step
-    def _admit_waiting(self) -> int:
-        """Shared admission loop. Exclusive mode runs each admitted prefill
-        immediately (`_do_prefill`); chunked mode only allocates and queues
-        the request for chunk-by-chunk prefill."""
-        if not self.waiting:
-            return 0
-        if self.ec.policy == "layerkv" and self.ec.slo_aware:
-            budget_n = self.sched.max_prefills(
-                list(self.waiting), self.decoding, self.now,
-                cached_len=self._cached_hint)
-        else:
-            budget_n = len(self.waiting)
-        admitted = 0
-        while self.waiting and budget_n > 0 and \
-                len(self.decoding) + len(self.prefilling) \
-                < self.ec.max_batch_size:
-            r = self.waiting[0]
-            if self.bm.num_free(DEVICE) < self._device_need(r):
-                break
-            if self.ec.chunked:
-                alloc = self._alloc_prefill(r)
-                if alloc is None:
-                    break
-                self.waiting.popleft()
-                self.host_layers[r.rid] = len(alloc[1])
-                r.phase = Phase.PREFILL
-                r.prefill_start = self.now
-                self.prefilling.append(r)
-            else:
-                self.waiting.popleft()
-                r.prefill_start = self.now
-                if not self._do_prefill(r):
-                    self.waiting.appendleft(r)
-                    break
-            admitted += 1
-            budget_n -= 1
-        return admitted
-
     def step(self) -> bool:
         """One scheduler iteration. Returns False when fully idle."""
         if self.ec.chunked:
             return self._step_chunked()
-        if self._admit_waiting():
+        if self.core.admit_waiting(self.now, immediate=self._do_prefill):
             return True
         if not self.decoding:
             return False
@@ -517,11 +399,12 @@ class LayerKVEngine:
         return True
 
     def _step_chunked(self) -> bool:
-        """One chunked-mode iteration: admit into the chunk queue, run up to
-        `chunk_size` prompt-chunk tokens (FCFS, Eq.1-tightened when
-        slo_aware) plus one decode step, and advance the clock by
+        """One chunked-mode iteration: admit into the chunk queue, run up
+        to `max_prefill_tokens` prompt-chunk tokens (policy-ordered
+        admission, FCFS chunk assembly, Eq.1-tightened when slo_aware)
+        plus one decode step, and advance the clock by
         max(chunk compute, decode compute) — mixed batching."""
-        self._admit_waiting()
+        self.core.admit_waiting(self.now)
         if not (self.prefilling or self.decoding):
             return False
 
@@ -530,24 +413,7 @@ class LayerKVEngine:
         sel: List[Request] = []
         if self.decoding:
             sel = self._select_runnable(allow_empty=bool(self.prefilling))
-
-        # chunk assembly: FCFS under the per-iteration token budget
-        if self.ec.policy == "layerkv" and self.ec.slo_aware:
-            cap = self.sched.max_chunk_tokens(
-                self.decoding, self.now, self.ec.chunk_size,
-                floor=self.ec.chunk_floor)
-        else:
-            cap = self.ec.chunk_size
-        budget = cap - len(sel)
-        if self.prefilling and not sel:
-            budget = max(budget, self.ec.chunk_floor)
-        chunk_work: List[tuple] = []
-        for r in list(self.prefilling):
-            if budget <= 0:
-                break
-            c = min(budget, r.prefill_remaining)
-            chunk_work.append((r, c))
-            budget -= c
+        chunk_work = self.core.assemble_chunks(self.now, len(sel))
 
         chunk_time = 0.0
         for r, c in chunk_work:
@@ -580,14 +446,9 @@ class LayerKVEngine:
 
     # ----------------------------------------------------------------- run
     def run(self, requests: List[Request]) -> List[Request]:
-        pending = deque(sorted(requests, key=lambda r: r.arrival))
-        while pending or self.waiting or self.prefilling or self.decoding:
-            while pending and pending[0].arrival <= self.now:
-                self.waiting.append(pending.popleft())
-            if not self.step():
-                if pending:
-                    self.now = max(self.now, pending[0].arrival)
-                elif self.waiting:
-                    raise RuntimeError("wedged with waiting requests")
-        self.bm.check()
-        return self.done
+        """Batch convenience wrapper: one session, every request submitted
+        up front at its own arrival, drained to completion."""
+        session = ServingSession(self)
+        for r in sorted(requests, key=lambda q: q.arrival):
+            session.submit(r, arrival=r.arrival)
+        return session.drain()

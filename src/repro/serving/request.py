@@ -11,6 +11,7 @@ class Phase(enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     FINISHED = "finished"
+    CANCELLED = "cancelled"          # unwound by ServingSession.cancel
 
 
 @dataclasses.dataclass

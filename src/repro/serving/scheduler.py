@@ -1,0 +1,554 @@
+"""Shared scheduler core: the admission/queueing/residency logic that the
+real engine (`engine.py`) and the discrete-event simulator (`sim.py`) both
+drive.
+
+Before this module existed, the two serving frontends each carried private
+copies of the same decisions — cached-prefix probing, the device-block
+admission gate, the Eq.4 layer-split allocation, the Alg.1 admission loop,
+chunk assembly under the per-iteration token budget, and the ledger
+routing of cache-driven block copies — which is exactly how they drift.
+Everything decision-shaped now lives here, once; the backends keep only
+what genuinely differs (the engine moves real bytes through the
+`PagedExecutor`, the simulator prices steps with the cost model).
+
+Three public pieces:
+
+  ServeConfig      ONE config for both backends (EngineConfig/SimConfig
+                   are thin deprecation shims over it);
+  AdmissionPolicy  pluggable ordering of the waiting queue — `fcfs`
+                   (paper semantics) and `prefix_aware` (cache-hitting
+                   requests admit first under congestion, with an aging
+                   bound so misses never starve);
+  SchedulerCore    the shared state machine: waiting/prefilling/decoding
+                   queues, admission, allocation, chunk assembly, and the
+                   cancellation path that unwinds everything a request
+                   can leave in flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import (
+    DEVICE, HOST, LayerwiseBlockManager, OffloadEngine, PoolExhausted,
+    SLOScheduler, interleave_offload_layers,
+)
+from repro.serving.costmodel import CostModel
+from repro.serving.request import Phase, Request
+
+
+# --------------------------------------------------------------------------
+# Unified configuration
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeConfig:
+    """One config for the whole serving stack — accepted verbatim by BOTH
+    `LayerKVEngine` and `ServingSimulator` (a drift-guard test asserts
+    this stays true). Fields are grouped: the shared scheduling axes and
+    pool geometry first, then knobs only one backend reads (clearly
+    marked). `EngineConfig` / `SimConfig` remain as deprecation shims
+    that fill in each backend's historical defaults.
+    """
+    # ---- scheduling axes (shared) ----------------------------------------
+    policy: str = "layerkv"         # 'layerkv' | 'vllm'
+    slo_aware: bool = True          # Alg.1 admission (layerkv only)
+    chunked: bool = False           # chunked prefill + mixed batching
+    prefix_cache: bool = False      # ref-counted cross-request sharing
+    fused: bool = False             # ONE forward/iteration (chunked only)
+    admission: str = "fcfs"         # waiting-queue order: 'fcfs' |
+    #                                 'prefix_aware' (see AdmissionPolicy)
+    admission_age_frac: float = 0.5  # prefix_aware aging bound: a HIT is
+    #                                 ordered by a virtual arrival this
+    #                                 fraction of its TTFT SLO early, so
+    #                                 a miss is only ever overtaken by
+    #                                 hits arriving within that window
+    #                                 after it (bounded reordering, no
+    #                                 starvation)
+    # ---- pool geometry / batching (shared) -------------------------------
+    num_device_blocks: int = 0      # 0 = backend default (engine: 128,
+    #                                 sim: derive from HW memory)
+    num_host_blocks: int = 1024
+    block_size: int = 16
+    max_batch_size: int = 64
+    max_prefill_tokens: int = 8192  # per-iteration prefill token budget
+    #                                 (chunked mode chunk cap; exclusive
+    #                                 sim batched-prefill cap)
+    chunk_floor: int = 8            # min chunk tokens/iter (progress)
+    # ---- engine-only -----------------------------------------------------
+    max_tokens_per_request: int = 4096
+    # ---- sim-only --------------------------------------------------------
+    proactive: bool = True          # Eq.5 forecast eviction
+    collective_reserve_frac: float = 0.0  # §3.1.3 all-reduce reservation
+    forecast_horizon: int = 32
+    forecast_threshold_frac: float = 0.05
+    gpu_mem_util: float = 0.9       # vLLM gpu_memory_utilization
+    max_model_len: int = 16384      # drives activation reservation
+
+    def validate(self) -> "ServeConfig":
+        if self.fused and not self.chunked:
+            raise ValueError("ServeConfig.fused requires chunked=True")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"unknown admission policy {self.admission!r}; "
+                f"choose from {sorted(ADMISSION_POLICIES)}")
+        return self
+
+    # Historical per-backend defaults, preserved so the EngineConfig /
+    # SimConfig shims (and anything still importing them) behave exactly
+    # as before the unification.
+    @classmethod
+    def for_engine(cls, **kw) -> "ServeConfig":
+        kw.setdefault("num_device_blocks", 128)
+        kw.setdefault("max_prefill_tokens", 32)
+        return cls(**kw).validate()
+
+    @classmethod
+    def for_sim(cls, **kw) -> "ServeConfig":
+        kw.setdefault("num_host_blocks", 1 << 20)
+        kw.setdefault("max_batch_size", 256)
+        kw.setdefault("chunk_floor", 16)
+        return cls(**kw).validate()
+
+
+class AdmissionImpossible(RuntimeError):
+    """The head waiting request can never be admitted: nothing is in
+    flight to free blocks and the pools cannot fit it. Raised instead of
+    the old opaque "wedged with waiting requests" — a temporarily
+    unadmittable request simply waits (backpressure), only a permanently
+    unservable one raises."""
+
+
+# --------------------------------------------------------------------------
+# Admission ordering policies
+# --------------------------------------------------------------------------
+
+class AdmissionPolicy:
+    """Orders the waiting queue before each admission pass. Admission
+    itself stays head-of-line within the returned order (the first
+    request that does not fit blocks the rest), so a policy controls
+    priority, never fairness-by-accident."""
+
+    name = "?"
+
+    def order(self, waiting: List[Request], now: float,
+              core: "SchedulerCore") -> List[Request]:
+        raise NotImplementedError
+
+
+class FCFSAdmission(AdmissionPolicy):
+    """Paper semantics: first come, first served — no reordering, hence
+    no starvation (§1)."""
+
+    name = "fcfs"
+
+    def order(self, waiting, now, core):
+        return list(waiting)
+
+
+class PrefixAwareAdmission(AdmissionPolicy):
+    """Cache-hitting requests admit ahead of cold misses under
+    congestion. Two mechanisms compound:
+
+      * shortest-job-first on the Eq.3 prefill cost — a hit's prefill
+        prices only the uncached suffix, so serving hits first shrinks
+        the mean queueing everyone sees behind exclusive prefills and
+        the Alg.1 slack each admission consumes;
+      * head-of-line unblocking — a hit's device-block need is only its
+        suffix (the shared prefix is already resident), so a small hit
+        admits into a block gap that would stall a large miss at the
+        head, raising pool utilization and the effective hit rate (the
+        prefix is reused while it is still hot, before LRU churn).
+
+    Anti-starvation (aging bound): ordering is FCFS on a *virtual*
+    arrival in which a hit gets a head start of `age_frac` of its own
+    TTFT SLO. A miss can therefore only be overtaken by hits that
+    arrived within that bounded window after it — never by the whole
+    future hit stream — so the miss delay added over strict FCFS is
+    bounded (~ arrival_rate x window overtakes) and no request starves,
+    no matter how deep the queue grows. Under light load the order
+    degenerates to plain FCFS."""
+
+    name = "prefix_aware"
+
+    def __init__(self, age_frac: float = 0.5):
+        self.age_frac = age_frac
+
+    def order(self, waiting, now, core):
+        keyed: List[Tuple[float, int, Request]] = []
+        for i, r in enumerate(waiting):
+            head_start = self.age_frac * r.ttft_slo \
+                if core.cached_hint(r) > 0 else 0.0
+            keyed.append((r.arrival - head_start, i, r))
+        keyed.sort()
+        return [r for _, _, r in keyed]
+
+
+ADMISSION_POLICIES = {
+    FCFSAdmission.name: FCFSAdmission,
+    PrefixAwareAdmission.name: PrefixAwareAdmission,
+}
+
+
+def make_admission_policy(sc: ServeConfig) -> AdmissionPolicy:
+    if sc.admission == PrefixAwareAdmission.name:
+        return PrefixAwareAdmission(sc.admission_age_frac)
+    return ADMISSION_POLICIES[sc.admission]()
+
+
+# --------------------------------------------------------------------------
+# The shared core
+# --------------------------------------------------------------------------
+
+# backend hook: (src_pool, src_block, dst_pool, dst_block) -> None, moves
+# the REAL bytes (engine) — the core itself only charges the ledger
+PhysicalCopy = Callable[[str, int, str, int], None]
+
+
+class SchedulerCore:
+    """Queues + decisions shared by the engine and the simulator.
+
+    Owns the request lifecycle state (waiting/prefilling/decoding/done/
+    cancelled), per-request residency bookkeeping (`host_layers`, Eq.4
+    plan memo), admission (policy ordering, Alg.1 budget, the device-need
+    gate, the layer-split allocation), chunk assembly, the ledger routing
+    of cache-driven copies, and cancellation. The clock is the backend's:
+    backends assign `core.now` as their step progresses so ledger stamps
+    land at the right virtual time."""
+
+    def __init__(self, sc: ServeConfig, cost: CostModel,
+                 bm: LayerwiseBlockManager, off: OffloadEngine,
+                 slo: SLOScheduler, n_layers: int,
+                 physical_copy: Optional[PhysicalCopy] = None,
+                 reserve_blocks: int = 0):
+        self.sc = sc
+        self.cost = cost
+        self.bm = bm
+        self.off = off
+        self.slo = slo
+        self.L = n_layers
+        self.policy = make_admission_policy(sc)
+        self.physical_copy = physical_copy
+        # layerkv allocation headroom (sim: Eq.5 forecast reserve)
+        self.reserve_blocks = reserve_blocks
+        self.now = 0.0
+        # ---- request lifecycle --------------------------------------------
+        self.waiting: deque[Request] = deque()
+        self.prefilling: List[Request] = []   # chunked: in-flight chunks
+        self.decoding: List[Request] = []
+        self.done: List[Request] = []
+        self.cancelled: List[Request] = []
+        # ---- per-request bookkeeping --------------------------------------
+        self.host_layers: Dict[str, int] = {}  # layers resident on host
+        self.plans: Dict[str, object] = {}     # rid -> Eq.4 OffloadPlan
+        self.reload_bytes_migrated = 0
+        if sc.prefix_cache:
+            # cache-driven copies (COW, promote, demote) charge the
+            # transfer ledger here; the engine also moves the real bytes
+            bm.on_copy = self.cache_copy
+
+    # ------------------------------------------------------------- queries
+    def in_flight(self) -> int:
+        return len(self.prefilling) + len(self.decoding)
+
+    def idle(self) -> bool:
+        return not (self.prefilling or self.decoding)
+
+    def _blocks(self, tokens: int) -> int:
+        return self.bm.blocks_for_tokens(tokens)
+
+    def cached_hint(self, r: Request) -> int:
+        """Cached-prefix length for Eq.3 admission estimates (price the
+        uncached suffix only, or admission over-throttles)."""
+        if self.sc.prefix_cache and r.prompt:
+            return self.bm.match_prefix(r.prompt)
+        return 0
+
+    def device_need(self, r: Request) -> int:
+        """MINIMUM device blocks to start r's prefill. With the prefix
+        cache on, a hit needs only the uncached suffix (+ COW tail) but
+        all layers device-resident — which for short prefixes can EXCEED
+        the layer-wise plan; the gate takes the min of the two estimates
+        (a larger hit estimate must never wedge a request the plain path
+        fits)."""
+        if self.sc.policy == "vllm":
+            need = self._blocks(r.prompt_len) * self.L
+        else:
+            plan = self.plans.get(r.rid)
+            if plan is None:
+                plan = self.off.plan_for_prompt(r.prompt_len)
+                self.plans[r.rid] = plan
+            send_buf = 1 if plan.offload_layers else 0
+            need = self._blocks(r.prompt_len) * (plan.x + send_buf)
+        if self.sc.prefix_cache and r.prompt:
+            c = self.bm.match_prefix(r.prompt)
+            if c > 0:
+                hit_need = (self._blocks(r.prompt_len)
+                            - c // self.sc.block_size) * self.L
+                need = min(need, hit_need)
+        return need
+
+    # --------------------------------------------------------- cache copies
+    def cache_copy(self, src_pool: str, src: int, dst_pool: str,
+                   dst: int) -> None:
+        """Route one cache-driven block copy: the backend's hook moves
+        the real bytes (engine), the ledger charges the offload link for
+        cross-tier moves (d2d COW copies never touch the link)."""
+        if self.physical_copy is not None:
+            self.physical_copy(src_pool, src, dst_pool, dst)
+        nbytes = self.cost.kv_bytes(self.sc.block_size, 1)
+        if src_pool == HOST and dst_pool == DEVICE:
+            self.off.ledger.submit(self.now, nbytes, "reload")
+            self.reload_bytes_migrated += nbytes
+        elif src_pool == DEVICE and dst_pool == HOST:
+            self.off.ledger.submit(self.now, nbytes, "offload")
+
+    # ----------------------------------------------------------- allocation
+    def alloc_prefill(self, r: Request) -> Optional[Tuple[list, list]]:
+        """Allocate r's prompt KV per the policy; returns (retain, off)
+        layer lists or None when the pools cannot fit it. Sets
+        `host_layers[r.rid]` and, on a prefix hit, r.prefill_done /
+        r.cached_prompt_len (all layers device-resident; prefill compute
+        then starts at the cached length). A hit that cannot fit falls
+        through to the plain policy path. Never touches the transfer
+        ledger — callers account d2h traffic at the granularity their
+        step semantics require (whole-prompt vs per-chunk)."""
+        if self.sc.prefix_cache and r.prompt:
+            acq = self.bm.acquire_prefix(r.rid, r.prompt)
+            if acq is not None:
+                try:
+                    suffix = r.prompt_len - acq.cached_len
+                    for l in range(self.L):
+                        self.bm.extend_layer(r.rid, l, suffix)
+                except PoolExhausted:
+                    self.bm.free_request(r.rid)
+                    r.prefill_done = 0
+                else:
+                    r.prefill_done = acq.cached_len
+                    r.cached_prompt_len = acq.cached_len
+                    self.host_layers[r.rid] = 0
+                    self.bm.cache.count(r.prompt_len, acq.cached_len)
+                    return list(range(self.L)), []
+        per_layer = self._blocks(r.prompt_len)
+        try:
+            if self.sc.policy == "vllm":
+                retain, off = list(range(self.L)), []
+            else:
+                plan = self.plans.get(r.rid)
+                if plan is None:
+                    plan = self.off.plan_for_prompt(r.prompt_len)
+                    self.plans[r.rid] = plan
+                # retain as many layers as currently fit (free
+                # prefetching, §3.1.1), never fewer than Eq.4's x
+                fit = max((self.bm.num_free(DEVICE) - self.reserve_blocks)
+                          // max(per_layer, 1) - 1, 0)
+                retain_n = min(self.L, max(plan.x, fit))
+                off = interleave_offload_layers(self.L, retain_n)
+                retain = [l for l in range(self.L) if l not in set(off)]
+            for l in retain:
+                self.bm.alloc_layer(r.rid, l, r.prompt_len, DEVICE)
+            for l in off:
+                self.bm.alloc_layer(r.rid, l, r.prompt_len, HOST)
+        except PoolExhausted:
+            self.bm.free_request(r.rid)
+            return None
+        self.host_layers[r.rid] = len(off)
+        if self.sc.prefix_cache and r.prompt:
+            self.bm.cache.count(r.prompt_len, 0)  # admitted as a miss
+        return retain, off
+
+    # ------------------------------------------------------------ admission
+    def admission_budget(self, order: List[Request], now: float) -> int:
+        """Alg.1: how many of the ordered waiting prefills fit in the
+        decode batch's minimum TPOT slack."""
+        if self.sc.policy == "layerkv" and self.sc.slo_aware:
+            return self.slo.max_prefills(order, self.decoding, now,
+                                         cached_len=self.cached_hint)
+        return len(order)
+
+    def admit_waiting(self, now: float,
+                      immediate: Optional[Callable[[Request], bool]] = None,
+                      token_budget: Optional[int] = None) -> List[Request]:
+        """One admission pass over the policy-ordered waiting queue.
+        Head-of-line within the order: the first request that fails a
+        gate stops the pass. Three caller modes:
+
+          chunked (sc.chunked)   allocate KV and queue the request into
+                                 `prefilling` for chunk-by-chunk prefill;
+          immediate=<fn>         exclusive engine: run each admitted
+                                 prefill NOW (fn appends to `decoding`);
+          neither                exclusive sim: allocate only; the caller
+                                 runs the returned batch exclusively
+                                 (`token_budget` caps its prompt tokens).
+
+        Returns the requests admitted this pass."""
+        if not self.waiting:
+            return []
+        order = self.policy.order(list(self.waiting), now, self)
+        budget_n = self.admission_budget(order, now)
+        admitted: List[Request] = []
+        deferred = immediate is None and not self.sc.chunked
+        for r in order:
+            if budget_n <= 0:
+                break
+            in_flight = self.in_flight() + (len(admitted) if deferred
+                                            else 0)
+            if in_flight >= self.sc.max_batch_size:
+                break
+            if token_budget is not None and admitted \
+                    and r.prompt_len > token_budget:
+                break
+            if self.bm.num_free(DEVICE) < self.device_need(r):
+                break
+            if self.sc.chunked:
+                if self.alloc_prefill(r) is None:
+                    break
+                self.waiting.remove(r)
+                r.phase = Phase.PREFILL
+                r.prefill_start = now
+                self.prefilling.append(r)
+            elif immediate is not None:
+                self.waiting.remove(r)
+                # read the clock FRESH: an earlier immediate() in this
+                # pass ran a whole prefill and advanced it — stamping the
+                # pass-start `now` would under-report queueing and tie
+                # every prefill_start in the pass (breaking newest-first
+                # eviction ordering)
+                r.prefill_start = self.now
+                if not immediate(r):
+                    self.waiting.appendleft(r)
+                    break
+            else:
+                if self.alloc_prefill(r) is None:
+                    break
+                self.waiting.remove(r)
+            admitted.append(r)
+            budget_n -= 1
+            if token_budget is not None:
+                token_budget -= r.prompt_len
+        return admitted
+
+    # ------------------------------------------------------- chunk assembly
+    def chunk_token_cap(self, now: float) -> int:
+        """Per-iteration prefill token budget: Eq.1 slack converted to
+        tokens when slo_aware, else the static cap."""
+        if self.sc.policy == "layerkv" and self.sc.slo_aware:
+            return self.slo.max_chunk_tokens(
+                self.decoding, now, self.sc.max_prefill_tokens,
+                floor=self.sc.chunk_floor)
+        return self.sc.max_prefill_tokens
+
+    def assemble_chunks(self, now: float, decode_tokens: int
+                        ) -> List[Tuple[Request, int]]:
+        """FCFS chunk assembly under the token budget; this iteration's
+        decode tokens count against it. A floor guarantees prefill
+        progress when no decode batch runs."""
+        budget = self.chunk_token_cap(now) - decode_tokens
+        if self.prefilling and decode_tokens == 0:
+            budget = max(budget, self.sc.chunk_floor)
+        work: List[Tuple[Request, int]] = []
+        for r in sorted(self.prefilling, key=lambda q: q.prefill_start):
+            if budget <= 0:
+                break
+            c = min(budget, r.prefill_remaining)
+            work.append((r, c))
+            budget -= c
+        return work
+
+    # ------------------------------------------------------------- release
+    def release(self, r: Request) -> None:
+        """Drop the per-request bookkeeping (retire and cancel paths)."""
+        self.host_layers.pop(r.rid, None)
+        self.plans.pop(r.rid, None)
+
+    def cancel(self, r: Request, now: float) -> bool:
+        """Unwind everything `r` has in flight, whatever its phase:
+
+          * waiting      — just leaves the queue;
+          * prefilling   — mid-chunk KV (device AND host-resident
+                           offloaded layers) is freed; blocks it shares
+                           through the prefix cache are decref'd, never
+                           pulled from under another sharer, and FULL
+                           blocks it already registered stay behind as
+                           reclaimable cache (a cancelled request's
+                           computed prefix remains hittable);
+          * decoding     — same, plus it leaves the decode batch.
+
+        Transfers already submitted to the link ledger are sunk cost: the
+        bytes were queued on the link, the ledger is occupancy accounting
+        and stays monotone. Returns False when `r` is not live (already
+        finished or cancelled) — cancellation is idempotent."""
+        self.now = now
+        was_live = False
+        if r in self.waiting:
+            self.waiting.remove(r)
+            was_live = True
+        if r in self.prefilling:
+            self.prefilling.remove(r)
+            was_live = True
+        if r in self.decoding:
+            self.decoding.remove(r)
+            was_live = True
+        if not was_live:
+            return False
+        if r.rid in self.bm.tables:
+            self.bm.free_request(r.rid)
+        self.release(r)
+        r.phase = Phase.CANCELLED
+        r.finish_time = now
+        self.cancelled.append(r)
+        return True
+
+    def wedged_error(self) -> AdmissionImpossible:
+        """Names the request that actually blocked the admission pass:
+        the head of the POLICY order (admission is head-of-line within
+        it), which under prefix_aware need not be waiting[0]."""
+        order = self.policy.order(list(self.waiting), self.now, self)
+        r = order[0] if order else self.waiting[0]
+        return AdmissionImpossible(
+            f"request {r.rid} (prompt {r.prompt_len}) can never be "
+            f"admitted: needs {self.device_need(r)} device blocks, the "
+            f"pool has {self.bm.pools[DEVICE].num_blocks} and nothing is "
+            f"in flight to free any")
+
+
+class CoreDelegateMixin:
+    """Queue/clock delegation shared by every backend that drives a
+    `SchedulerCore` — the engine and the simulator inherit this instead
+    of each hand-mirroring the core's lifecycle state (which is exactly
+    the duplication the core exists to prevent). Subclasses set
+    `self.core` in __init__ and keep their own named clock property
+    (`engine.now`, `sim.t`) on top of `clock()`/`advance_to()`."""
+
+    core: SchedulerCore
+
+    @property
+    def waiting(self):
+        return self.core.waiting
+
+    @property
+    def prefilling(self):
+        return self.core.prefilling
+
+    @property
+    def decoding(self):
+        return self.core.decoding
+
+    @property
+    def done(self):
+        return self.core.done
+
+    @property
+    def cancelled(self):
+        return self.core.cancelled
+
+    @property
+    def host_layers(self):
+        return self.core.host_layers
+
+    def clock(self) -> float:
+        return self.core.now
+
+    def advance_to(self, t: float) -> None:
+        self.core.now = max(self.core.now, t)

@@ -6,7 +6,16 @@ model, reproducing the paper's 7B-70B figures on a CPU-only box. The only
 thing swapped vs. the real engine is the executor: step latencies come from
 `CostModel` instead of measured JAX step times.
 
-Engine-step semantics (SimConfig.chunked selects the second mode):
+Everything decision-shaped — admission (policy-ordered, Alg.1 budgeted),
+the device-need gate, the Eq.4 layer-split allocation, chunk assembly,
+cache-copy ledger routing, cancellation — lives in the shared
+`SchedulerCore` (serving/scheduler.py); the real engine drives the SAME
+core, so the two frontends cannot drift. The simulator keeps only what is
+simulation-specific: pricing iterations with the cost model, Eq.5
+proactive eviction, preemption-by-recompute, and the §3.1.3 collective
+reservation.
+
+Engine-step semantics (ServeConfig.chunked selects the second mode):
 
   exclusive  vLLM 0.5.5 (the paper's baseline): iteration-level batching;
              prefills run exclusively, stalling the decode batch; decode
@@ -17,17 +26,11 @@ Engine-step semantics (SimConfig.chunked selects the second mode):
              (max_prefill_tokens, tightened by Eq.1 slack when slo_aware);
              chunk tokens batch WITH the decode tokens, so an iteration
              costs max(chunk compute, decode compute) instead of their sum.
-             Chunk costs telescope exactly (CostModel.chunk_prefill_time),
-             and each chunk's offloaded-layer KV is submitted to the link
-             ledger as it is produced (chunk-granular d2h overlap).
-             `SimConfig.fused` additionally prices the iteration as the
-             fused single-forward executor (one weight stream: the decode
-             tokens ride the chunk's parameter pass — see
-             CostModel.mixed_step_time(fused=True)), mirroring
-             EngineConfig.fused in the real engine.
+             `ServeConfig.fused` additionally prices the iteration as the
+             fused single-forward executor (one weight stream), mirroring
+             the real engine's fused axis.
 
-Policies (orthogonal to the step semantics — a 3-axis matrix
-policy x slo_aware x chunked):
+Policies (orthogonal to the step semantics):
   'vllm'     request-wise allocation: a prefill is admitted only when KV
              blocks for ALL layers of the whole prompt are free on device.
   'layerkv'  layer-wise allocation (paper): device blocks for the x retained
@@ -35,53 +38,34 @@ policy x slo_aware x chunked):
              layers stream to host hidden under prefill compute; optional
              SLO-aware admission (Alg. 1) and Eq.5 proactive eviction.
 
-Reproduce the chunked-vs-exclusive TTFT comparison with
-`PYTHONPATH=src python benchmarks/fig4_context_sweep.py` (adds a
-layerkv+chunked arm next to the two exclusive-mode baselines) or the
-arrival-rate sweep in `benchmarks/fig6_fig7_arrival.py`.
+The simulator is driven through a `ServingSession` (serving/session.py):
+submit/stream/cancel online, or the batch `run(requests)` wrapper.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import statistics
-from collections import deque
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core import (
-    DEVICE, HOST, AvailabilityForecast, LayerwiseBlockManager, OffloadEngine,
-    OffloadPlan, PoolExhausted, SLOScheduler, interleave_offload_layers,
+    AvailabilityForecast, DEVICE, HOST, LayerwiseBlockManager, OffloadEngine,
+    PoolExhausted, SLOScheduler,
 )
 from repro.core.predictor import LengthPredictor, OraclePredictor
 from repro.serving.costmodel import CostModel, HWProfile
 from repro.serving.request import Phase, Request
+from repro.serving.scheduler import CoreDelegateMixin, SchedulerCore, \
+    ServeConfig
+from repro.serving.session import ServingSession
 
 
-@dataclasses.dataclass
-class SimConfig:
-    policy: str = "layerkv"             # 'layerkv' | 'vllm'
-    slo_aware: bool = True              # Alg.1 admission (layerkv only)
-    proactive: bool = True              # Eq.5 forecast eviction
-    chunked: bool = False               # chunked prefill + mixed batching
-    chunk_floor: int = 16               # min chunk tokens/iter (progress)
-    prefix_cache: bool = False          # ref-counted cross-request sharing
-    fused: bool = False                 # fused mixed step (chunked only):
-    #                                     one weight stream per iteration —
-    #                                     mirrors EngineConfig.fused via
-    #                                     CostModel.mixed_step_time(fused=)
-    # §3.1.3: fraction of each prefill iteration the TP all-reduce keeps
-    # the offload link reserved (PCIe testbeds; 0 = disjoint fabrics)
-    collective_reserve_frac: float = 0.0
-    num_device_blocks: int = 0          # 0 -> derive from HW memory
-    num_host_blocks: int = 1 << 20
-    block_size: int = 16
-    max_batch_size: int = 256           # vLLM max_num_seqs
-    max_prefill_tokens: int = 8192      # batched prefill token budget
-    forecast_horizon: int = 32
-    forecast_threshold_frac: float = 0.05
-    gpu_mem_util: float = 0.9           # vLLM gpu_memory_utilization
-    max_model_len: int = 16384          # drives activation reservation
+def SimConfig(**kw) -> ServeConfig:
+    """Deprecated shim: builds a `ServeConfig` with the historical
+    simulator defaults (derived device blocks, 2^20 host blocks, batch
+    256, chunk floor 16)."""
+    return ServeConfig.for_sim(**kw)
 
 
 @dataclasses.dataclass
@@ -102,6 +86,8 @@ class SimMetrics:
     # prefix-cache accounting (zero with the cache off)
     prefix_hit_tokens: int = 0           # prompt tokens served from cache
     prefix_lookup_tokens: int = 0        # prompt tokens looked up
+    n_cancelled: int = 0                 # session cancellations (excluded
+    #                                      from every latency series above)
 
     @property
     def mean_ttft(self):
@@ -147,7 +133,7 @@ class DeviceMemoryError(ValueError):
     """Params + activation reservation exceed the device memory budget."""
 
 
-def derive_device_blocks(cfg: ModelConfig, hw: HWProfile, sim: SimConfig
+def derive_device_blocks(cfg: ModelConfig, hw: HWProfile, sim: ServeConfig
                          ) -> int:
     """vLLM-style profiling: KV pool = gpu_mem_util * (mem - params -
     activations(max_model_len)); longer max context -> more activation
@@ -176,18 +162,16 @@ def derive_device_blocks(cfg: ModelConfig, hw: HWProfile, sim: SimConfig
     return blocks
 
 
-class ServingSimulator:
-    def __init__(self, cfg: ModelConfig, hw: HWProfile, sim: SimConfig,
+class ServingSimulator(CoreDelegateMixin):
+    produces_token_ids = False   # step latencies are modeled; the token
+    #                              stream carries ordinals, not real ids
+
+    def __init__(self, cfg: ModelConfig, hw: HWProfile, sim: ServeConfig,
                  predictor: Optional[LengthPredictor] = None,
                  alpha: float = 1.15, beta: float = 1.1):
         self.cfg = cfg
         self.hw = hw
-        self.sim = sim
-        if sim.fused and not sim.chunked:
-            # mirror the engine's guard: the exclusive-prefill path never
-            # reads `fused`, so accepting it would silently report
-            # two-call numbers labeled as the fused arm
-            raise ValueError("SimConfig.fused requires chunked=True")
+        self.sim = sim.validate()
         self.cost = CostModel(cfg, hw, alpha=alpha, beta=beta)
         self.L = max(cfg.n_attention_layers(), 1)
         ndb = sim.num_device_blocks or derive_device_blocks(cfg, hw, sim)
@@ -195,66 +179,44 @@ class ServingSimulator:
                                         sim.block_size, self.L,
                                         prefix_cache=sim.prefix_cache)
         self.off = OffloadEngine(self.cost, self.L)
-        # cache-driven physical copies (COW / promote / demote) charge the
-        # link ledger here; d2d copies never touch the offload link
-        self._now = 0.0
-        self.reload_bytes_migrated = 0
-        if sim.prefix_cache:
-            self.bm.on_copy = self._cache_copy
         self.predictor = predictor or OraclePredictor(
             [64, 128, 256, 512, 1024])
         self.sched = SLOScheduler(self.cost, self.predictor)
         self.fc = AvailabilityForecast(self.predictor, sim.block_size)
-        # per-request bookkeeping
-        self.host_layers: Dict[str, int] = {}   # layers resident on host
-        self.plans: Dict[str, object] = {}
+        # cache-driven physical copies (COW / promote / demote) charge the
+        # link ledger in the core; d2d copies never touch the offload link
+        self.core = SchedulerCore(
+            self.sim, self.cost, self.bm, self.off, self.sched, self.L,
+            reserve_blocks=int(sim.forecast_threshold_frac * ndb))
         self.preemptions = 0
         self._chunk_iters = 0
         self._max_iter_prefill_tokens = 0
 
+    # --------------------------------------------- shared-core delegation
+    # queues/host_layers/clock()/advance_to() come from CoreDelegateMixin
+    @property
+    def t(self) -> float:
+        return self.core.now
+
+    @t.setter
+    def t(self, v: float) -> None:
+        self.core.now = v
+
+    @property
+    def plans(self):
+        return self.core.plans
+
+    @property
+    def reload_bytes_migrated(self) -> int:
+        return self.core.reload_bytes_migrated
+
+    def finish(self) -> None:
+        self.bm.check()
+
+    def cancel(self, r: Request) -> bool:
+        return self.core.cancel(r, self.t)
+
     # ------------------------------------------------------------ helpers
-    def _blocks(self, tokens: int) -> int:
-        return self.bm.blocks_for_tokens(tokens)
-
-    def _cache_copy(self, src_pool: str, src: int, dst_pool: str,
-                    dst: int) -> None:
-        nbytes = self.cost.kv_bytes(self.sim.block_size, 1)
-        if src_pool == HOST and dst_pool == DEVICE:
-            self.off.ledger.submit(self._now, nbytes, "reload")
-            self.reload_bytes_migrated += nbytes
-        elif src_pool == DEVICE and dst_pool == HOST:
-            self.off.ledger.submit(self._now, nbytes, "offload")
-
-    def _cached_hint(self, r: Request) -> int:
-        """Cached-prefix length for Eq.3 prefill estimates (admission must
-        price the UNCACHED suffix or it over-throttles; stat-free probe)."""
-        if self.sim.prefix_cache and r.prompt:
-            return self.bm.match_prefix(r.prompt)
-        return 0
-
-    def _device_need(self, r: Request) -> int:
-        """MINIMUM device blocks to start r's prefill. With the prefix
-        cache on, a hit needs only the uncached suffix (+ COW tail), but
-        all layers device-resident — which for short prefixes can EXCEED
-        the layer-wise plan. _admit falls back to the plain path in that
-        case, so the gate takes the min of the two estimates (a larger
-        hit estimate must never deadlock a request the plain path fits)."""
-        if self.sim.policy == "vllm":
-            need = self._blocks(r.prompt_len) * self.L
-        else:
-            plan = self.off.plan_for_prompt(r.prompt_len)
-            self.plans[r.rid] = plan
-            # x retained layers + 1 layer of transient send buffer
-            send_buf = 1 if plan.offload_layers else 0
-            need = self._blocks(r.prompt_len) * (plan.x + send_buf)
-        if self.sim.prefix_cache and r.prompt:
-            c = self.bm.match_prefix(r.prompt)
-            if c > 0:
-                hit_need = (self._blocks(r.prompt_len)
-                            - c // self.bm.block_size) * self.L
-                need = min(need, hit_need)
-        return need
-
     def _prefill_cost(self, r: Request) -> float:
         """Eq.3 prefill compute for the UNCACHED part of r's prompt (the
         cached prefix, r.prefill_done at admission, skips compute)."""
@@ -266,72 +228,6 @@ class ServingSimulator:
         publish the prompt's full blocks into the prefix cache."""
         if self.sim.prefix_cache and r.prompt:
             self.bm.register_prefix(r.rid, r.prompt)
-
-    def _admit(self, r: Request, now: float, ledger: bool = True) -> bool:
-        """Try to allocate for r's prefill; True on success.
-
-        LayerKV retains *as many layers as currently fit* (free
-        prefetching, §3.1.1) but never fewer than Eq.4's x; only the
-        remainder is offloaded during prefill. With `ledger=False` the
-        d2h traffic is NOT submitted here — chunked mode accounts it
-        chunk-by-chunk as each chunk's KV is produced.
-
-        With the prefix cache on, a hit maps the shared blocks (refcount
-        +1 per layer) and allocates only the uncached suffix, all layers
-        device-resident; prefill compute then starts at prefill_done =
-        cached_len. A hit that cannot fit its suffix/promotions falls
-        back to the plain (policy) path below."""
-        self._now = now
-        if self.sim.prefix_cache and r.prompt:
-            acq = self.bm.acquire_prefix(r.rid, r.prompt)
-            if acq is not None:
-                try:
-                    suffix = r.prompt_len - acq.cached_len
-                    for l in range(self.L):
-                        self.bm.extend_layer(r.rid, l, suffix)
-                except PoolExhausted:
-                    self.bm.free_request(r.rid)
-                    r.prefill_done = 0
-                else:
-                    r.prefill_done = acq.cached_len
-                    r.cached_prompt_len = acq.cached_len
-                    self.host_layers[r.rid] = 0
-                    self.bm.cache.count(r.prompt_len, acq.cached_len)
-                    return True
-        try:
-            if self.sim.policy == "vllm":
-                for l in range(self.L):
-                    self.bm.alloc_layer(r.rid, l, r.prompt_len, DEVICE)
-                self.host_layers[r.rid] = 0
-            else:
-                plan = self.plans.get(r.rid)
-                if plan is None:  # hit-path probe skipped the Eq.4 plan
-                    plan = self.off.plan_for_prompt(r.prompt_len)
-                    self.plans[r.rid] = plan
-                per_layer = self._blocks(r.prompt_len)
-                reserve = int(self.sim.forecast_threshold_frac
-                              * self.bm.pools[DEVICE].num_blocks)
-                fit = max((self.bm.num_free(DEVICE) - reserve)
-                          // max(per_layer, 1) - 1, 0)
-                retain_n = min(self.L, max(plan.x, fit))
-                off = interleave_offload_layers(self.L,
-                                                retain_n)
-                retain = [l for l in range(self.L) if l not in set(off)]
-                for l in retain:
-                    self.bm.alloc_layer(r.rid, l, r.prompt_len, DEVICE)
-                for l in off:
-                    self.bm.alloc_layer(r.rid, l, r.prompt_len, HOST)
-                self.host_layers[r.rid] = len(off)
-                if off and ledger:
-                    self.off.prefill_offload_done(
-                        now, r.prompt_len,
-                        OffloadPlan(retain, off, len(retain)))
-            if self.sim.prefix_cache and r.prompt:
-                self.bm.cache.count(r.prompt_len, 0)  # admitted as a miss
-            return True
-        except PoolExhausted:
-            self.bm.free_request(r.rid)
-            return False
 
     def _promote(self, now: float, dt: float, decoding: List[Request]
                  ) -> None:
@@ -367,7 +263,7 @@ class ServingSimulator:
                     break
                 self.bm.move_layer(r.rid, l, DEVICE)
                 self.off.ledger.submit(now, per_layer_bytes, "reload")
-                self.reload_bytes_migrated += per_layer_bytes
+                self.core.reload_bytes_migrated += per_layer_bytes
                 budget -= per_layer_bytes
             self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
 
@@ -381,7 +277,7 @@ class ServingSimulator:
         except PoolExhausted:
             return False
 
-    def _preempt(self, r: Request, waiting: deque):
+    def _preempt(self, r: Request):
         """vLLM recompute-preemption: drop all KV, requeue at the FRONT."""
         self.bm.free_request(r.rid)
         self.host_layers.pop(r.rid, None)
@@ -391,7 +287,7 @@ class ServingSimulator:
         r.prefill_done = 0
         r.n_chunks = 0
         r.cached_prompt_len = 0
-        waiting.appendleft(r)
+        self.waiting.appendleft(r)
         self.preemptions += 1
 
     def _select_decode_batch(self, now: float, decoding: List[Request]
@@ -483,42 +379,32 @@ class ServingSimulator:
                 break
 
     # ------------------------------------------------------ shared pieces
-    def _decode_bookkeep(self, t: float, sel: List[Request],
-                         decoding: List[Request], waiting: deque,
-                         done: List[Request]) -> None:
+    def _decode_bookkeep(self, t: float, sel: List[Request]) -> None:
         """Post-step accounting for one decode batch: grow allocations,
         evict-or-preempt on exhaustion, retire finished requests."""
-        self._now = t
         finished: List[Request] = []
         for r in sel:
             ok = self._extend_for_token(r)
             if not ok and self.sim.policy == "layerkv":
                 # evict device layers (newest requests first) to host
                 # instead of preempting (paper §3.1.1)
-                self._evict_for_space(t, decoding)
+                self._evict_for_space(t, self.decoding)
                 ok = self._extend_for_token(r)
             if not ok:
-                self._preempt(r, waiting)
-                decoding.remove(r)
+                self._preempt(r)
+                self.decoding.remove(r)
                 continue
             r.tokens_out += 1
             if r.tokens_out >= r.output_len:
                 r.finish_time = t
                 r.phase = Phase.FINISHED
                 self.bm.free_request(r.rid)
-                self.host_layers.pop(r.rid, None)
+                self.core.release(r)
                 self.predictor.observe(r.output_len)
-                done.append(r)
+                self.done.append(r)
                 finished.append(r)
         for r in finished:
-            decoding.remove(r)
-
-    def _deadlock(self, r: Request) -> RuntimeError:
-        return RuntimeError(
-            f"deadlock: head request {r.rid} "
-            f"(prompt {r.prompt_len}) needs "
-            f"{self._device_need(r)} blocks, pool has "
-            f"{self.bm.pools[DEVICE].num_blocks}")
+            self.decoding.remove(r)
 
     def _metrics(self, done: List[Request]) -> SimMetrics:
         mk = max((r.finish_time for r in done), default=0.0)
@@ -539,274 +425,169 @@ class ServingSimulator:
             if self.bm.cache else 0,
             prefix_lookup_tokens=self.bm.cache.lookup_tokens
             if self.bm.cache else 0,
+            n_cancelled=len(self.core.cancelled),
         )
 
-    # ---------------------------------------------------------------- run
-    def run(self, requests: List[Request]) -> SimMetrics:
-        self._chunk_iters = 0
-        self._max_iter_prefill_tokens = 0
+    def metrics(self) -> SimMetrics:
+        """Metrics over everything finished so far (session use)."""
+        return self._metrics(self.done)
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One engine-step iteration at the current clock. Returns False
+        when fully idle (nothing admissible, nothing in flight)."""
         if self.sim.chunked:
-            return self._run_chunked(requests)
-        return self._run_exclusive(requests)
+            return self._step_chunked()
+        return self._step_exclusive()
 
-    def _run_exclusive(self, requests: List[Request]) -> SimMetrics:
-        """vLLM 0.5.5 engine-step loop: prefills stall the decode batch."""
-        pending = deque(sorted(requests, key=lambda r: r.arrival))
-        waiting: deque[Request] = deque()
-        decoding: List[Request] = []
-        done: List[Request] = []
-        t = 0.0
+    def _step_exclusive(self) -> bool:
+        """vLLM 0.5.5 engine-step: prefills stall the decode batch."""
+        t = self.t
+        admitted = self.core.admit_waiting(
+            t, token_budget=self.sim.max_prefill_tokens)
 
-        while pending or waiting or decoding:
-            self._now = t
-            while pending and pending[0].arrival <= t:
-                waiting.append(pending.popleft())
-
-            # ---- admission -------------------------------------------------
-            admitted: List[Request] = []
-            if waiting:
-                if self.sim.policy == "layerkv" and self.sim.slo_aware:
-                    budget_n = self.sched.max_prefills(
-                        list(waiting), decoding, t,
-                        cached_len=self._cached_hint)
-                else:
-                    budget_n = len(waiting)
-                tok_budget = self.sim.max_prefill_tokens
-                while waiting and budget_n > 0 and \
-                        len(decoding) + len(admitted) < self.sim.max_batch_size:
-                    r = waiting[0]
-                    if admitted and r.prompt_len > tok_budget:
-                        break
-                    if self.bm.num_free(DEVICE) < self._device_need(r):
-                        break
-                    # ledger=False: this batch's d2h traffic is submitted
-                    # below, after the collective reservation is placed
-                    if not self._admit(r, t, ledger=False):
-                        break
-                    waiting.popleft()
-                    admitted.append(r)
-                    budget_n -= 1
-                    tok_budget -= r.prompt_len
-
-            if admitted:
-                # prefills run exclusively (vLLM 0.5.5 semantics); cached
-                # prefixes skip their share of the Eq.3 compute. The TP
-                # all-reduce reserves the link FIRST (§3.1.3) so this
-                # batch's d2h offload traffic defers around it.
-                for r in admitted:
-                    r.phase = Phase.PREFILL
-                    r.prefill_start = t
-                dt = sum(self._prefill_cost(r) for r in admitted)
-                if self.sim.collective_reserve_frac > 0.0:
-                    self.off.ledger.reserve(
-                        t, self.sim.collective_reserve_frac * dt)
-                if self.sim.policy == "layerkv":
-                    for r in admitted:
-                        n_off = self.host_layers.get(r.rid, 0)
-                        if n_off:
-                            self.off.ledger.submit(
-                                t, self.cost.kv_bytes(r.prompt_len, n_off),
-                                "offload")
-                t += dt
-                for r in admitted:
-                    r.first_token_time = t
-                    r.tokens_out = 1
-                    r.prefill_done = r.prompt_len
-                    r.n_chunks += 1
-                    r.phase = Phase.DECODE
-                    self._finish_prefill(r)
-                    decoding.append(r)
-                continue
-
-            # ---- decode step ----------------------------------------------
-            if decoding:
-                if self.sim.policy == "layerkv" and self.sim.proactive:
-                    self._proactive_evict(t, decoding)
-                sel, host_bytes = self._select_decode_batch(t, decoding)
-                B = len(sel)
-                avg_ctx = sum(r.prompt_len + r.tokens_out for r in sel) / B
-                if self.sim.policy == "layerkv":
-                    # promote against an ESTIMATED step time, then price
-                    # the step from what is STILL host-resident: promoted
-                    # bytes are charged once (to the ledger, in _promote),
-                    # never again as per-step host streaming
-                    dt_est = self.cost.decode_step_time(
-                        B, int(avg_ctx), host_bytes)
-                    self._promote(t, dt_est, decoding)
-                    host_bytes = sum(
-                        self.cost.kv_bytes(r.prompt_len + r.tokens_out,
-                                           self.host_layers.get(r.rid, 0))
-                        for r in sel)
-                dt = self.cost.decode_step_time(B, int(avg_ctx), host_bytes)
-                t += dt
-                self._decode_bookkeep(t, sel, decoding, waiting, done)
-                continue
-
-            # ---- idle: jump to next arrival --------------------------------
-            if pending:
-                t = max(t, pending[0].arrival)
-            elif waiting:
-                # waiting but nothing admissible and nothing decoding:
-                # blocked forever would be a bug — force-admit the head and
-                # run its prefill exclusively
-                r = waiting[0]
-                if self.bm.num_free(DEVICE) >= self._device_need(r) \
-                        and self._admit(r, t):
-                    waiting.popleft()
-                    r.phase = Phase.PREFILL
-                    r.prefill_start = t
-                    t += self._prefill_cost(r)
-                    r.first_token_time = t
-                    r.tokens_out = 1
-                    r.prefill_done = r.prompt_len
-                    r.n_chunks += 1
-                    r.phase = Phase.DECODE
-                    self._finish_prefill(r)
-                    decoding.append(r)
-                    continue
-                raise self._deadlock(r)
-
-        self.bm.check()
-        return self._metrics(done)
-
-    def _run_chunked(self, requests: List[Request]) -> SimMetrics:
-        """Chunked-prefill engine-step loop: every iteration batches up to
-        `max_prefill_tokens` prompt-chunk tokens (FCFS across in-flight
-        prefills, Eq.1-tightened when slo_aware) WITH the decode tokens;
-        the iteration costs max(chunk compute, decode compute)."""
-        pending = deque(sorted(requests, key=lambda r: r.arrival))
-        waiting: deque[Request] = deque()
-        prefilling: List[Request] = []
-        decoding: List[Request] = []
-        done: List[Request] = []
-        t = 0.0
-
-        while pending or waiting or prefilling or decoding:
-            self._now = t
-            while pending and pending[0].arrival <= t:
-                waiting.append(pending.popleft())
-
-            # ---- admission: allocate KV, enter the chunk queue -------------
-            if waiting:
-                if self.sim.policy == "layerkv" and self.sim.slo_aware:
-                    budget_n = self.sched.max_prefills(
-                        list(waiting), decoding, t,
-                        cached_len=self._cached_hint)
-                else:
-                    budget_n = len(waiting)
-                while waiting and budget_n > 0 and \
-                        len(decoding) + len(prefilling) \
-                        < self.sim.max_batch_size:
-                    r = waiting[0]
-                    if self.bm.num_free(DEVICE) < self._device_need(r):
-                        break
-                    if not self._admit(r, t, ledger=False):
-                        break
-                    waiting.popleft()
-                    r.phase = Phase.PREFILL
-                    r.prefill_start = t
-                    prefilling.append(r)
-                    budget_n -= 1
-
-            if not (prefilling or decoding):
-                # ---- idle: jump to next arrival ----------------------------
-                if pending:
-                    t = max(t, pending[0].arrival)
-                    continue
-                if waiting:
-                    r = waiting[0]
-                    if self.bm.num_free(DEVICE) >= self._device_need(r) \
-                            and self._admit(r, t, ledger=False):
-                        waiting.popleft()
-                        r.phase = Phase.PREFILL
-                        r.prefill_start = t
-                        prefilling.append(r)
-                        continue
-                    raise self._deadlock(r)
-                continue
-
-            # ---- one mixed iteration ---------------------------------------
-            if self.sim.policy == "layerkv" and self.sim.proactive:
-                self._proactive_evict(t, decoding)
-            sel: List[Request] = []
-            host_bytes = 0.0
-            avg_ctx = 0
-            if decoding:
-                sel, host_bytes = self._select_decode_batch(t, decoding)
-                avg_ctx = int(sum(r.prompt_len + r.tokens_out for r in sel)
-                              / len(sel))
-
-            # chunk assembly: FCFS (no starvation) under the token budget;
-            # this iteration's decode tokens count against the budget
-            if self.sim.policy == "layerkv" and self.sim.slo_aware:
-                cap = self.sched.max_chunk_tokens(
-                    decoding, t, self.sim.max_prefill_tokens,
-                    floor=self.sim.chunk_floor)
-            else:
-                cap = self.sim.max_prefill_tokens
-            budget = cap - len(sel)
-            if prefilling and not sel:
-                budget = max(budget, self.sim.chunk_floor)
-            chunks: List[tuple] = []
-            for r in sorted(prefilling, key=lambda q: q.prefill_start):
-                if budget <= 0:
-                    break
-                c = min(budget, r.prefill_remaining)
-                chunks.append((r, c))
-                budget -= c
-            t_chunk = sum(self.cost.chunk_prefill_time(c, r.prefill_done)
-                          for r, c in chunks)
-            # §3.1.3: the TP all-reduce of the chunk compute reserves the
-            # link BEFORE this iteration's d2h traffic is submitted
-            if t_chunk > 0.0 and self.sim.collective_reserve_frac > 0.0:
+        if admitted:
+            # prefills run exclusively (vLLM 0.5.5 semantics); cached
+            # prefixes skip their share of the Eq.3 compute. The TP
+            # all-reduce reserves the link FIRST (§3.1.3) so this
+            # batch's d2h offload traffic defers around it.
+            for r in admitted:
+                r.phase = Phase.PREFILL
+                r.prefill_start = t
+            dt = sum(self._prefill_cost(r) for r in admitted)
+            if self.sim.collective_reserve_frac > 0.0:
                 self.off.ledger.reserve(
-                    t, self.sim.collective_reserve_frac * t_chunk)
-
-            # chunk-granular d2h: each chunk's offloaded-layer KV enters
-            # the link ledger as it is produced, overlapping chunk compute
+                    t, self.sim.collective_reserve_frac * dt)
             if self.sim.policy == "layerkv":
-                for r, c in chunks:
+                for r in admitted:
                     n_off = self.host_layers.get(r.rid, 0)
                     if n_off:
                         self.off.ledger.submit(
-                            t, self.cost.kv_bytes(c, n_off), "offload")
+                            t, self.cost.kv_bytes(r.prompt_len, n_off),
+                            "offload")
+            t += dt
+            self.t = t
+            for r in admitted:
+                r.first_token_time = t
+                r.tokens_out = 1
+                r.prefill_done = r.prompt_len
+                r.n_chunks += 1
+                r.phase = Phase.DECODE
+                self._finish_prefill(r)
+                self.decoding.append(r)
+            return True
 
-            if self.sim.policy == "layerkv" and decoding:
-                # promote against an estimate, then re-price host streaming
-                # from post-promotion residency (each byte charged once)
-                dt_est = self.cost.mixed_step_time(t_chunk, len(sel),
-                                                   avg_ctx, host_bytes,
-                                                   fused=self.sim.fused)
-                self._promote(t, dt_est, decoding)
+        if self.decoding:
+            if self.sim.policy == "layerkv" and self.sim.proactive:
+                self._proactive_evict(t, self.decoding)
+            sel, host_bytes = self._select_decode_batch(t, self.decoding)
+            B = len(sel)
+            avg_ctx = sum(r.prompt_len + r.tokens_out for r in sel) / B
+            if self.sim.policy == "layerkv":
+                # promote against an ESTIMATED step time, then price
+                # the step from what is STILL host-resident: promoted
+                # bytes are charged once (to the ledger, in _promote),
+                # never again as per-step host streaming
+                dt_est = self.cost.decode_step_time(
+                    B, int(avg_ctx), host_bytes)
+                self._promote(t, dt_est, self.decoding)
                 host_bytes = sum(
                     self.cost.kv_bytes(r.prompt_len + r.tokens_out,
                                        self.host_layers.get(r.rid, 0))
                     for r in sel)
-            dt = self.cost.mixed_step_time(t_chunk, len(sel), avg_ctx,
-                                           host_bytes, fused=self.sim.fused)
+            dt = self.cost.decode_step_time(B, int(avg_ctx), host_bytes)
             t += dt
+            self.t = t
+            self._decode_bookkeep(t, sel)
+            return True
 
-            if chunks:
-                self._chunk_iters += 1
-                self._max_iter_prefill_tokens = max(
-                    self._max_iter_prefill_tokens,
-                    sum(c for _, c in chunks))
+        return False
+
+    def _step_chunked(self) -> bool:
+        """One chunked-prefill iteration: admission into the chunk queue,
+        then up to `max_prefill_tokens` prompt-chunk tokens (FCFS across
+        in-flight prefills, Eq.1-tightened when slo_aware) batched WITH
+        the decode tokens; costs max(chunk compute, decode compute)."""
+        t = self.t
+        self.core.admit_waiting(t)
+        if not (self.prefilling or self.decoding):
+            return False
+
+        if self.sim.policy == "layerkv" and self.sim.proactive:
+            self._proactive_evict(t, self.decoding)
+        sel: List[Request] = []
+        host_bytes = 0.0
+        avg_ctx = 0
+        if self.decoding:
+            sel, host_bytes = self._select_decode_batch(t, self.decoding)
+            avg_ctx = int(sum(r.prompt_len + r.tokens_out for r in sel)
+                          / len(sel))
+
+        chunks = self.core.assemble_chunks(t, len(sel))
+        t_chunk = sum(self.cost.chunk_prefill_time(c, r.prefill_done)
+                      for r, c in chunks)
+        # §3.1.3: the TP all-reduce of the chunk compute reserves the
+        # link BEFORE this iteration's d2h traffic is submitted
+        if t_chunk > 0.0 and self.sim.collective_reserve_frac > 0.0:
+            self.off.ledger.reserve(
+                t, self.sim.collective_reserve_frac * t_chunk)
+
+        # chunk-granular d2h: each chunk's offloaded-layer KV enters
+        # the link ledger as it is produced, overlapping chunk compute
+        if self.sim.policy == "layerkv":
             for r, c in chunks:
-                r.prefill_done += c
-                r.n_chunks += 1
-                if self.sim.prefix_cache and r.prompt:
-                    # incremental publication, mirroring the engine: full
-                    # blocks written so far become hittable immediately
-                    self.bm.register_prefix(r.rid, r.prompt,
-                                            upto=r.prefill_done)
-                if r.prefill_complete:
-                    r.first_token_time = t
-                    r.tokens_out = 1
-                    r.phase = Phase.DECODE
-                    prefilling.remove(r)
-                    decoding.append(r)
+                n_off = self.host_layers.get(r.rid, 0)
+                if n_off:
+                    self.off.ledger.submit(
+                        t, self.cost.kv_bytes(c, n_off), "offload")
 
-            self._decode_bookkeep(t, sel, decoding, waiting, done)
+        if self.sim.policy == "layerkv" and self.decoding:
+            # promote against an estimate, then re-price host streaming
+            # from post-promotion residency (each byte charged once)
+            dt_est = self.cost.mixed_step_time(t_chunk, len(sel),
+                                               avg_ctx, host_bytes,
+                                               fused=self.sim.fused)
+            self._promote(t, dt_est, self.decoding)
+            host_bytes = sum(
+                self.cost.kv_bytes(r.prompt_len + r.tokens_out,
+                                   self.host_layers.get(r.rid, 0))
+                for r in sel)
+        dt = self.cost.mixed_step_time(t_chunk, len(sel), avg_ctx,
+                                       host_bytes, fused=self.sim.fused)
+        t += dt
+        self.t = t
 
-        self.bm.check()
-        return self._metrics(done)
+        if chunks:
+            self._chunk_iters += 1
+            self._max_iter_prefill_tokens = max(
+                self._max_iter_prefill_tokens,
+                sum(c for _, c in chunks))
+        for r, c in chunks:
+            r.prefill_done += c
+            r.n_chunks += 1
+            if self.sim.prefix_cache and r.prompt:
+                # incremental publication, mirroring the engine: full
+                # blocks written so far become hittable immediately
+                self.bm.register_prefix(r.rid, r.prompt,
+                                        upto=r.prefill_done)
+            if r.prefill_complete:
+                r.first_token_time = t
+                r.tokens_out = 1
+                r.phase = Phase.DECODE
+                self.prefilling.remove(r)
+                self.decoding.append(r)
+
+        self._decode_bookkeep(t, sel)
+        return True
+
+    # ---------------------------------------------------------------- run
+    def run(self, requests: List[Request]) -> SimMetrics:
+        """Batch convenience wrapper: one session, every request submitted
+        up front at its own arrival, drained to completion."""
+        self._chunk_iters = 0
+        self._max_iter_prefill_tokens = 0
+        session = ServingSession(self)
+        for r in sorted(requests, key=lambda q: q.arrival):
+            session.submit(r, arrival=r.arrival)
+        session.drain()
+        return self._metrics(self.done)

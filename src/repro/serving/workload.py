@@ -60,7 +60,8 @@ def shared_prefix(n: int, rate: float, scenario: str = "system_prompt",
                   output_len: int = 128, n_templates: int = 4,
                   turns_per_conv: int = 4, vocab_size: int = 32000,
                   seed: int = 0, tpot_slo: float = 0.2,
-                  ttft_slo: float = 3.0) -> List[Request]:
+                  ttft_slo: float = 3.0,
+                  unique_frac: float = 0.0) -> List[Request]:
     """Poisson arrivals whose prompts share leading tokens.
 
     scenario:
@@ -77,7 +78,12 @@ def shared_prefix(n: int, rate: float, scenario: str = "system_prompt",
                        first turn's length relative to prompt_len.
 
     All scenarios draw the unique suffix length ~ +-25% around its mean so
-    block-boundary effects (partial tails, COW) are exercised."""
+    block-boundary effects (partial tails, COW) are exercised.
+
+    `unique_frac` mixes in cache-cold traffic: that fraction of requests
+    (system_prompt / rag_template scenarios) get a fully unique prompt
+    with NO shared prefix — the workload class the prefix-aware admission
+    policy must serve without starving (its aging bound)."""
     rng = random.Random(seed)
     out: List[Request] = []
     t = 0.0
@@ -94,8 +100,13 @@ def shared_prefix(n: int, rate: float, scenario: str = "system_prompt",
         for i in range(n):
             sfx_mean = max(prompt_len - shared_len, 1)
             sfx = max(1, int(sfx_mean * rng.uniform(0.75, 1.25)))
-            prompt = prefixes[rng.randrange(k)] \
-                + _toks(rng, sfx, vocab_size)
+            # NB: no RNG draw when unique_frac is 0 — the default stream
+            # (and every committed benchmark artifact) stays bit-stable
+            if unique_frac > 0.0 and rng.random() < unique_frac:
+                prompt = _toks(rng, shared_len + sfx, vocab_size)
+            else:
+                prompt = prefixes[rng.randrange(k)] \
+                    + _toks(rng, sfx, vocab_size)
             out.append(Request(
                 rid=f"r{i}", prompt_len=len(prompt), output_len=output_len,
                 arrival=_arrive(), tpot_slo=tpot_slo, ttft_slo=ttft_slo,

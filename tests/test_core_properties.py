@@ -343,3 +343,61 @@ def test_forecast_eq5_conservation():
     assert all(b >= 100 - (i + 1) * (len(reqs) + 0)
                for i, b in enumerate(base))
     assert len(base) == 8 and len(never) == 8
+
+
+# ------------------------------------------- session cancel invariants -----
+
+@st.composite
+def cancel_schedule(draw):
+    """(victim index, step count before the cancel) pairs + an axes arm."""
+    n = draw(st.integers(6, 10))
+    cancels = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, 12)),
+        min_size=1, max_size=4, unique_by=lambda c: c[0]))
+    arm = draw(st.sampled_from(
+        ["excl", "chunked", "chunked_prefix", "chunked_prefix_fused"]))
+    return n, sorted(cancels, key=lambda c: c[1]), arm
+
+
+@given(cancel_schedule())
+@settings(max_examples=20, deadline=None)
+def test_session_cancel_accounting_property(schedule):
+    """ANY cancellation schedule, on any axes arm, leaves the pools at
+    baseline after drain: every surviving request finishes, no sharer's
+    prefix blocks are freed with a cancelled sharer, and every
+    block-manager invariant holds at each cancel point."""
+    from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+    from repro.serving.session import ServingSession
+    from repro.serving.sim import ServingSimulator, SimConfig
+    from repro.serving.workload import shared_prefix
+
+    n, cancels, arm = schedule
+    kw = {"excl": {},
+          "chunked": dict(chunked=True),
+          "chunked_prefix": dict(chunked=True, prefix_cache=True),
+          "chunked_prefix_fused": dict(chunked=True, prefix_cache=True,
+                                       fused=True)}[arm]
+    sim = ServingSimulator(LLAMA2_7B, L20, SimConfig(
+        policy="layerkv", num_device_blocks=2048,
+        num_host_blocks=1 << 14, **kw))
+    sess = ServingSession(sim)
+    reqs = shared_prefix(n, rate=50.0, scenario="rag_template",
+                         share_ratio=0.5, prompt_len=320, output_len=48,
+                         n_templates=2, seed=9)
+    hs = [sess.submit(r, arrival=r.arrival) for r in reqs]
+    steps = 0
+    for victim, at_step in cancels:
+        while steps < at_step and sess.step():
+            steps += 1
+        hs[victim].cancel()
+        sim.bm.check()       # invariants hold at EVERY cancel point
+    sess.drain()
+    n_cancelled = len(sim.core.cancelled)
+    assert n_cancelled >= 1
+    assert len(sim.done) == n - n_cancelled
+    assert all(h.finished or h.cancelled for h in hs)
+    sim.bm.drop_cache()      # release cache-retained blocks, then baseline
+    sim.bm.check()
+    assert sim.bm.num_free(DEVICE) == sim.bm.pools[DEVICE].num_blocks
+    assert sim.bm.num_free(HOST) == sim.bm.pools[HOST].num_blocks
+    assert not sim.bm.live_requests()

@@ -1,0 +1,508 @@
+"""Session-API redesign coverage.
+
+Five layers of guarantees:
+  * config unification — ONE `ServeConfig` accepted verbatim by both the
+    engine and the simulator (the drift guard), with the old
+    EngineConfig/SimConfig names as thin shims over it;
+  * online-vs-offline equivalence — the SAME arrivals driven through
+    live `submit()` calls produce exactly the metrics (sim) and exactly
+    the tokens (engine) of the old batch `run()`, across all five
+    scheduling axes;
+  * cancellation invariants — cancelling a request in ANY phase unwinds
+    everything it has in flight (refcounted/COW prefix blocks with
+    sharers kept intact, mid-prefill chunk state, host-resident
+    offloaded layers); pool accounting returns to baseline (hypothesis
+    properties + engine integration);
+  * admission policies — `prefix_aware` ordering (bounded-window aging,
+    hits first) and its congestion win over FCFS without miss
+    starvation;
+  * session mechanics — stream cursors, pending-arrival cancellation,
+    duplicate-rid rejection, backpressure (AdmissionImpossible only for
+    permanently unservable requests).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.core import DEVICE, HOST
+from repro.serving.costmodel import L20
+from repro.serving.engine import EngineConfig, LayerKVEngine
+from repro.serving.request import Phase, Request
+from repro.serving.scheduler import (
+    AdmissionImpossible, FCFSAdmission, PrefixAwareAdmission, ServeConfig,
+)
+from repro.serving.session import ServingSession
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import shared_prefix, sharegpt_like
+
+
+# ------------------------------------------------------ config unification --
+
+def test_config_drift_guard():
+    """THE drift guard: engine and simulator accept the IDENTICAL
+    ServeConfig field set — one config class, constructed once, drives
+    both backends. If either backend grows a knob the other cannot see,
+    this test is where it shows up."""
+    every_field = dict(
+        policy="layerkv", slo_aware=True, chunked=True, prefix_cache=True,
+        fused=True, admission="prefix_aware", admission_age_frac=0.7,
+        num_device_blocks=2048, num_host_blocks=4096, block_size=16,
+        max_batch_size=32, max_prefill_tokens=256, chunk_floor=8,
+        max_tokens_per_request=2048, proactive=True,
+        collective_reserve_frac=0.1, forecast_horizon=16,
+        forecast_threshold_frac=0.02, gpu_mem_util=0.8,
+        max_model_len=8192)
+    # every declared field is exercised above — extend this dict when
+    # ServeConfig grows
+    assert set(every_field) == \
+        {f.name for f in dataclasses.fields(ServeConfig)}
+    sc = ServeConfig(**every_field)
+    sim = ServingSimulator(LLAMA2_7B, L20, sc)
+    assert sim.sim is sc
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    eng = LayerKVEngine(cfg, None, dataclasses.replace(
+        sc, num_device_blocks=64, num_host_blocks=256, block_size=8))
+    assert isinstance(eng.ec, ServeConfig)
+    # both backends drive the SAME SchedulerCore machinery
+    assert type(eng.core) is type(sim.core)
+
+
+def test_config_shims_return_serve_config():
+    e = EngineConfig(chunk_size=24, num_device_blocks=40)
+    assert isinstance(e, ServeConfig)
+    assert e.max_prefill_tokens == 24 and e.num_device_blocks == 40
+    assert EngineConfig().num_device_blocks == 128      # old engine default
+    s = SimConfig(policy="vllm")
+    assert isinstance(s, ServeConfig)
+    assert s.max_batch_size == 256 and s.chunk_floor == 16  # old sim defaults
+    assert s.num_device_blocks == 0                     # 0 = derive
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="fused"):
+        ServeConfig(fused=True, chunked=False).validate()
+    with pytest.raises(ValueError, match="admission"):
+        ServeConfig(admission="mystery").validate()
+
+
+# --------------------------------------------- online-vs-offline (sim) -----
+
+SIM_AXES = {
+    "vllm_excl": dict(policy="vllm"),
+    "layerkv_excl_slo": dict(policy="layerkv", slo_aware=True),
+    "layerkv_chunked": dict(policy="layerkv", chunked=True),
+    "chunked_prefix": dict(policy="layerkv", chunked=True,
+                           prefix_cache=True),
+    "chunked_prefix_fused": dict(policy="layerkv", chunked=True,
+                                 prefix_cache=True, fused=True),
+}
+
+
+def _two_bursts(n=40, gap=1e6):
+    """Two arrival bursts separated by a huge idle gap: burst 2 can be
+    submitted online AFTER burst 1 drains, yet before the clock reaches
+    its arrivals — the online schedule is then exactly the offline one."""
+    a = shared_prefix(n // 2, rate=4.0, scenario="system_prompt",
+                      share_ratio=0.5, prompt_len=512, output_len=64,
+                      seed=3)
+    b = shared_prefix(n // 2, rate=4.0, scenario="rag_template",
+                      share_ratio=0.5, prompt_len=512, output_len=64,
+                      seed=4)
+    for i, r in enumerate(b):
+        r.rid = f"b{i}"
+        r.arrival += gap
+    return a, b
+
+
+def _key(m):
+    return (m.mean_ttft, m.p99_ttft, m.mean_tpot, m.makespan,
+            m.tokens_out, m.preemptions, m.prefix_hit_tokens)
+
+
+@pytest.mark.parametrize("axes", list(SIM_AXES), ids=list(SIM_AXES))
+def test_sim_online_equals_offline(axes):
+    """Same arrivals via live submit() == the old batch run(), exactly,
+    on every scheduling axis."""
+    kw = SIM_AXES[axes]
+    a, b = _two_bursts()
+    off = ServingSimulator(LLAMA2_7B, L20, SimConfig(**kw)).run(a + b)
+
+    a2, b2 = _two_bursts()
+    sim = ServingSimulator(LLAMA2_7B, L20, SimConfig(**kw))
+    sess = ServingSession(sim)
+    for r in a2:
+        sess.submit(r, arrival=r.arrival)
+    while sim.step():          # drain burst 1 interactively
+        pass
+    assert sim.clock() < b2[0].arrival
+    for r in b2:               # submitted online, mid-session
+        sess.submit(r, arrival=r.arrival)
+    sess.drain()
+    assert _key(sim.metrics()) == _key(off)
+
+
+def test_sim_run_is_a_session_wrapper():
+    """run() and an explicit submit-everything session are the same
+    code path with the same results."""
+    reqs = sharegpt_like(30, rate=3.0, seed=11)
+    m1 = ServingSimulator(LLAMA2_7B, L20,
+                          SimConfig(policy="layerkv", chunked=True)
+                          ).run(reqs)
+    sim = ServingSimulator(LLAMA2_7B, L20,
+                           SimConfig(policy="layerkv", chunked=True))
+    sess = ServingSession(sim)
+    for r in sharegpt_like(30, rate=3.0, seed=11):
+        sess.submit(r, arrival=r.arrival)
+    sess.drain()
+    assert _key(sim.metrics()) == _key(m1)
+
+
+# ------------------------------------------------------- session mechanics --
+
+def _sim(**kw):
+    return ServingSimulator(LLAMA2_7B, L20, SimConfig(**kw))
+
+
+def test_stream_yields_every_token_once():
+    sim = _sim(policy="layerkv")
+    sess = ServingSession(sim)
+    h = sess.submit(Request(rid="x", prompt_len=256, output_len=12))
+    toks = list(sess.stream(h))
+    assert toks == list(range(12))       # sim streams ordinals
+    assert h.take_new() == []            # cursor consumed everything
+    assert h.finished and not h.cancelled
+
+
+def test_duplicate_rid_rejected():
+    sess = ServingSession(_sim())
+    sess.submit(Request(rid="dup", prompt_len=64, output_len=4))
+    with pytest.raises(ValueError, match="dup"):
+        sess.submit(Request(rid="dup", prompt_len=64, output_len=4))
+
+
+def test_cancel_pending_arrival_never_runs():
+    sim = _sim()
+    sess = ServingSession(sim)
+    run = sess.submit(Request(rid="a", prompt_len=64, output_len=4))
+    parked = sess.submit(Request(rid="b", prompt_len=64, output_len=4),
+                         arrival=1e9)
+    assert sess.backlog == 2
+    assert parked.cancel()
+    done = sess.drain()
+    assert [r.rid for r in done] == ["a"]
+    assert parked.cancelled and parked.request.tokens_out == 0
+    assert run.finished
+
+
+def test_cancel_is_idempotent_and_false_after_finish():
+    sim = _sim()
+    sess = ServingSession(sim)
+    h = sess.submit(Request(rid="a", prompt_len=64, output_len=4))
+    assert h.cancel() is True
+    assert h.cancel() is False           # already cancelled
+    h2 = sess.submit(Request(rid="b", prompt_len=64, output_len=4))
+    sess.drain()
+    assert h2.finished
+    assert h2.cancel() is False          # finished requests stay finished
+    assert h2.request.phase is Phase.FINISHED
+
+
+def test_reap_releases_retained_state():
+    """Long-lived sessions: reaping a done handle drops every retained
+    reference (handles map + done/cancelled lists), so per-request state
+    does not accumulate for the life of the session; the rid becomes
+    reusable."""
+    sim = _sim()
+    sess = ServingSession(sim)
+    h = sess.submit(Request(rid="a", prompt_len=64, output_len=4))
+    assert sess.reap(h) is None          # not done yet: no-op
+    c = sess.submit(Request(rid="c", prompt_len=64, output_len=4))
+    c.cancel()
+    sess.drain()
+    assert sess.reap(h).rid == "a"
+    assert sess.reap(c).rid == "c"
+    assert not sess.handles and not sim.done and not sim.core.cancelled
+    # finish_time is stamped on every cancel path, heap-cancels included
+    parked = sess.submit(Request(rid="p", prompt_len=64, output_len=4),
+                         arrival=1e12)
+    parked.cancel()
+    assert parked.request.finish_time >= 0.0
+    # a reaped rid can be resubmitted on the same session
+    h2 = sess.submit(Request(rid="a", prompt_len=64, output_len=4))
+    sess.drain()
+    assert h2.finished
+
+
+def test_backpressure_waits_instead_of_wedging():
+    """A temporarily unadmittable request just waits for in-flight work;
+    only a PERMANENTLY unservable one raises AdmissionImpossible."""
+    sim = _sim(policy="vllm", num_device_blocks=LLAMA2_7B.n_layers * 8)
+    sess = ServingSession(sim)
+    # two requests that cannot fit together: the second waits (no
+    # RuntimeError), admits after the first finishes
+    h1 = sess.submit(Request(rid="a", prompt_len=100, output_len=4))
+    h2 = sess.submit(Request(rid="b", prompt_len=100, output_len=4))
+    done = sess.drain()
+    assert len(done) == 2 and h1.finished and h2.finished
+    # a request larger than the whole pool can NEVER be served
+    big = sess.submit(Request(rid="c", prompt_len=4096, output_len=4))
+    with pytest.raises(AdmissionImpossible, match="c"):
+        sess.drain()
+    assert not big.finished
+
+
+# ------------------------------------------------------ cancel invariants --
+
+def _baseline(sim):
+    bm = sim.bm
+    bm.check()
+    return (bm.num_free(DEVICE) == bm.pools[DEVICE].num_blocks
+            and bm.num_free(HOST) == bm.pools[HOST].num_blocks
+            and not bm.live_requests())
+
+
+def test_cancel_every_phase_restores_baseline():
+    """Cancel a request in each lifecycle phase (waiting / mid-prefill
+    chunk / decoding with host-resident layers); pool accounting returns
+    to baseline and the block manager invariants hold throughout."""
+    sim = _sim(policy="layerkv", chunked=True, prefix_cache=True,
+               num_device_blocks=2048, num_host_blocks=1 << 14,
+               max_prefill_tokens=128)
+    sess = ServingSession(sim)
+    reqs = shared_prefix(6, rate=100.0, scenario="system_prompt",
+                         share_ratio=0.5, prompt_len=640, output_len=64,
+                         seed=5)
+    hs = [sess.submit(r, arrival=r.arrival) for r in reqs]
+    sess.step()
+    phases = {h.phase for h in hs}
+    assert Phase.PREFILL in phases       # mid-prefill chunk state exists
+    assert hs[-1].cancel()               # waiting or just-started
+    for _ in range(30):
+        sess.step()
+    mid = [h for h in hs if h.phase is Phase.DECODE]
+    assert mid, "some request must be mid-decode by step 31"
+    assert mid[0].cancel()               # decoding, possibly host layers
+    sess.drain()
+    sim.bm.drop_cache()                  # release retained prefix blocks
+    assert _baseline(sim)
+    m = sim.metrics()
+    assert m.n_cancelled == 2 and m.n_requests == 4
+
+
+def test_cancel_sharer_keeps_other_sharers_blocks():
+    """Cancelling one sharer never frees or migrates the prefix blocks
+    another sharer still maps — the survivor decodes to completion."""
+    sim = _sim(policy="layerkv", chunked=True, prefix_cache=True,
+               num_device_blocks=4096)
+    sess = ServingSession(sim)
+    reqs = shared_prefix(2, rate=1000.0, scenario="system_prompt",
+                         share_ratio=0.8, prompt_len=512, output_len=32,
+                         seed=7)
+    ha = sess.submit(reqs[0], arrival=0.0)
+    sess.step()                          # a prefills and registers first
+    hb = sess.submit(reqs[1])            # b arrives online, hits a's prefix
+    while not (ha.phase is Phase.DECODE and hb.phase is Phase.DECODE):
+        assert sess.step()
+    assert hb.request.cached_prompt_len > 0, "b must share a's prefix"
+    shared_blocks = [(a.pool, b)
+                     for a in sim.bm.tables[hb.rid].values()
+                     for b in a.blocks]
+    assert ha.cancel()
+    sim.bm.check()                       # refcounts consistent post-cancel
+    # every block b maps is still pool-allocated (never freed with a)
+    for pool, blk in shared_blocks:
+        assert blk in sim.bm.pools[pool]._owner
+    sess.drain()
+    assert hb.finished and hb.request.tokens_out == 32
+
+
+# Hypothesis property versions of the cancel invariants (random victim /
+# timing / axes-arm schedules) live in tests/test_core_properties.py,
+# which degrades to a skip on minimal installs without hypothesis.
+
+
+# ----------------------------------------------------- admission policies --
+
+class _FakeCore:
+    def __init__(self, hits):
+        self._hits = hits
+
+    def cached_hint(self, r):
+        return self._hits.get(r.rid, 0)
+
+
+def _req(rid, arrival, slo=3.0):
+    return Request(rid=rid, prompt_len=64, output_len=8, arrival=arrival,
+                   ttft_slo=slo)
+
+
+def test_fcfs_order_is_identity():
+    rs = [_req("a", 0.0), _req("b", 1.0), _req("c", 0.5)]
+    assert FCFSAdmission().order(rs, 10.0, _FakeCore({})) == rs
+
+
+def test_prefix_aware_hits_overtake_within_window():
+    """A hit overtakes misses that arrived up to age_frac*ttft_slo before
+    it — and NOT misses older than the window (bounded reordering)."""
+    pol = PrefixAwareAdmission(age_frac=0.5)   # window = 1.5s at slo 3.0
+    old_miss = _req("old", 0.0)
+    miss = _req("m", 2.0)
+    hit = _req("h", 3.0)
+    core = _FakeCore({"h": 128})
+    # hit's virtual arrival = 1.5: after old (0.0), before m (2.0)
+    assert pol.order([old_miss, miss, hit], 4.0, core) \
+        == [old_miss, hit, miss]
+    # a miss more than the window ahead is never overtaken: a hit at 2.0
+    # (virtual 0.5) stays behind the miss at 0.0
+    core2 = _FakeCore({"h": 128})
+    assert pol.order([_req("old", 0.0), _req("h", 2.0)], 4.0, core2) \
+        == [_req("old", 0.0), _req("h", 2.0)]
+
+
+def test_prefix_aware_degenerates_to_fcfs_without_hits():
+    pol = PrefixAwareAdmission()
+    rs = [_req("a", 0.0), _req("b", 1.0), _req("c", 2.0)]
+    assert pol.order(rs, 5.0, _FakeCore({})) == rs
+
+
+def test_prefix_aware_beats_fcfs_under_congestion():
+    """The ROADMAP open item, closed: on a congested shared-prefix
+    workload with cache-cold traffic mixed in, prefix-aware admission
+    beats FCFS mean TTFT — and the aging bound keeps every cache-miss
+    request served (no starvation), with bounded extra miss latency."""
+    def run(admission):
+        reqs = shared_prefix(80, rate=8.0, scenario="system_prompt",
+                             share_ratio=0.5, prompt_len=1024,
+                             output_len=256, seed=13, unique_frac=0.3)
+        sim = _sim(policy="layerkv", chunked=True, prefix_cache=True,
+                   admission=admission, admission_age_frac=2.0)
+        m = sim.run(reqs)
+        miss = [r.ttft for r in sim.done if r.cached_prompt_len == 0]
+        return m, miss
+
+    fcfs, fcfs_miss = run("fcfs")
+    padm, padm_miss = run("prefix_aware")
+    assert fcfs.n_requests == padm.n_requests == 80   # nobody starves
+    assert len(padm_miss) == len(fcfs_miss) > 0
+    assert padm.mean_ttft < fcfs.mean_ttft            # the headline win
+    # bounded miss penalty: the worst miss is not starved into oblivion
+    assert max(padm_miss) < 2.0 * max(fcfs_miss)
+
+
+# ------------------------------------------------------------ real engine --
+
+def _engine(cfg, **kw):
+    kw.setdefault("policy", "layerkv")
+    kw.setdefault("slo_aware", False)
+    kw.setdefault("num_device_blocks", 40)
+    return LayerKVEngine(
+        cfg, None,
+        EngineConfig(num_host_blocks=512, block_size=8, **kw),
+        rng=jax.random.PRNGKey(42))
+
+
+def _workload(cfg, n=4, shared_len=24, seed=0):
+    r0 = np.random.RandomState(seed)
+    pre = [int(x) for x in r0.randint(0, cfg.vocab_size, shared_len)]
+    reqs = []
+    for i in range(n):
+        sfx = [int(x) for x in
+               r0.randint(0, cfg.vocab_size, int(r0.randint(8, 24)))]
+        reqs.append(Request(
+            rid=f"r{i}", prompt_len=shared_len + len(sfx),
+            output_len=int(r0.randint(6, 10)), arrival=float(i) * 1e-6,
+            prompt=pre + sfx))
+    return reqs
+
+
+ENGINE_AXES = {
+    "vllm_excl": dict(policy="vllm", num_device_blocks=1024),
+    "layerkv_excl_slo": dict(slo_aware=True, num_device_blocks=30),
+    "layerkv_chunked": dict(chunked=True, chunk_size=16),
+    "chunked_prefix": dict(chunked=True, chunk_size=16,
+                           prefix_cache=True),
+    "chunked_prefix_fused": dict(chunked=True, chunk_size=16,
+                                 prefix_cache=True, fused=True),
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("axes", list(ENGINE_AXES), ids=list(ENGINE_AXES))
+def test_engine_online_tokens_equal_offline(axes):
+    """THE online guarantee: the same requests submitted live —
+    mid-session, out of arrival order, interleaved with steps — generate
+    exactly the tokens of the old batch run(), on every axis arm."""
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    kw = ENGINE_AXES[axes]
+    offline = _engine(cfg, **kw).run(_workload(cfg))
+    out_off = {r.rid: r.generated for r in offline}
+
+    eng = _engine(cfg, **kw)
+    sess = ServingSession(eng)
+    reqs = _workload(cfg)
+    # half up front (reverse submission order), a few live iterations,
+    # then the rest arrives ONLINE while the first half is in flight
+    for r in sorted(reqs[:2], key=lambda q: -q.arrival):
+        sess.submit(r, arrival=r.arrival)
+    for _ in range(2):
+        sess.step()
+    for r in reqs[2:]:
+        sess.submit(r, arrival=r.arrival)
+    done = sess.drain()
+    assert {r.rid: r.generated for r in done} == out_off
+
+
+@pytest.mark.slow
+def test_engine_cancel_mid_prefill_chunk_bufs_and_sharers():
+    """Engine cancellation unwinds mid-prefill chunk state: the cached
+    chunk prefix buffers are dropped (the _chunk_bufs lifecycle audit),
+    the surviving sharer's tokens match a run where the cancelled
+    request never existed, and the pools return to baseline."""
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    r0 = np.random.RandomState(1)
+    pre = [int(x) for x in r0.randint(0, cfg.vocab_size, 24)]
+
+    def mk(rid, seed, out=8):
+        sfx = [int(x) for x in
+               np.random.RandomState(seed).randint(0, cfg.vocab_size, 14)]
+        return Request(rid=rid, prompt_len=38, output_len=out,
+                       prompt=pre + sfx)
+
+    kw = dict(chunked=True, chunk_size=16, prefix_cache=True)
+    solo = _engine(cfg, **kw).run([mk("b", 7)])[0].generated
+
+    eng = _engine(cfg, **kw)
+    sess = ServingSession(eng)
+    ha = sess.submit(mk("a", 3, out=12))
+    hb = sess.submit(mk("b", 7))
+    sess.step()
+    assert ha.phase is Phase.PREFILL     # a is mid-chunk
+    assert eng._chunk_bufs               # with live prefix buffers
+    assert ha.cancel()
+    assert not eng._chunk_bufs           # dropped on the cancel path
+    assert list(sess.stream(hb)) == solo
+    sess.drain()
+    assert eng._chunk_bufs == {}         # and empty after drain
+    eng.bm.check()
+    eng.bm.drop_cache()
+    assert eng.bm.num_free(DEVICE) == eng.bm.pools[DEVICE].num_blocks
+
+
+@pytest.mark.slow
+def test_engine_chunk_bufs_empty_after_plain_drain():
+    """Regression (lifecycle audit): a long-lived session that chunks
+    many prompts leaves NO entries in _chunk_bufs after drain — entries
+    drop on the final chunk of every request."""
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    eng = _engine(cfg, chunked=True, chunk_size=16)
+    done = eng.run(_workload(cfg, n=5, seed=2))
+    assert max(r.n_chunks for r in done) > 1, "workload must chunk"
+    assert eng._chunk_bufs == {}
