@@ -1,0 +1,152 @@
+"""Cluster routing benchmark: replica count x routing policy on the
+multi-tenant bursty workload (this repo's extension beyond the paper —
+the paper serves ONE instance; at fleet scale the router decides which
+queue a request joins, and with the PR 2 prefix cache being per-replica,
+whether it lands where its template is already cached).
+
+The sweep holds the AGGREGATE device pool fixed: a cluster of R replicas
+gives each replica total/R device blocks (plus R-fold compute — that is
+what buying R accelerators does), so `replicas=1` is the paper's single
+instance with the whole pool and every R >= 2 row is the same silicon
+budget split behind a router. Every arm serves identical
+`workload.multi_tenant` traces (per-tenant shared-prefix templates,
+Zipf-skewed popularity, bursty on-off arrivals), and each arm pools its
+raw latency series over three seeds via `SimMetrics.merge` — the
+committed numbers are not one lucky trace.
+
+What the committed artifact (`BENCH_cluster.json`) shows (n=300 x 3
+seeds, rate 80/s, 16 tenants, 90% share):
+
+  * >= 2 replicas beat 1 at matched aggregate pool size under
+    congestion (queueing delay, the paper's dominant TTFT term, is
+    compute-bound: R queues drain R x faster) — 2.6x mean TTFT at R=2,
+    6.7x at R=4;
+  * at fixed replica count, `prefix_affinity` beats `round_robin` mean
+    TTFT (1.27x at R=2, 1.28x at R=4; hit rate 0.69/0.57 vs 0.57/0.53):
+    rendezvous dispatch keeps each tenant's template hot on ONE replica
+    (suffix-only prefills, no cross-replica cache duplication) while
+    its economics-priced spillover keeps the hot tenants from
+    hotspotting;
+  * `least_loaded` is load-aware but cache-oblivious (scatters every
+    template across every replica's cache) and trails round_robin here;
+    `slo_aware` sits at affinity's level at R=2 — its admission-ETA
+    signal already prices cached work through `cached_hint`.
+
+    PYTHONPATH=src python benchmarks/cluster.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Optional
+
+if __package__ in (None, ""):  # `python benchmarks/cluster.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.serving.cluster import ClusterSession
+from repro.serving.costmodel import L20
+from repro.serving.scheduler import ServeConfig
+from repro.serving.sim import ServingSimulator, SimMetrics
+from repro.serving.workload import multi_tenant
+
+REPLICAS = [1, 2, 4]
+ROUTERS = ["round_robin", "least_loaded", "prefix_affinity", "slo_aware"]
+TOTAL_DEVICE_BLOCKS = 65536        # aggregate pool, split across replicas
+WORKLOAD = dict(rate=80.0, n_tenants=16, share_ratio=0.9,
+                prompt_len=1024, output_len=128, zipf_s=1.0,
+                burst_on=3.0, burst_off=6.0, burst_cv=2.0)
+SEEDS = (3, 7, 13)                # pooled per arm (SimMetrics.merge)
+
+
+def _cluster(n_replicas: int, router: str) -> ClusterSession:
+    sc = ServeConfig.for_sim(
+        policy="layerkv", chunked=True, prefix_cache=True,
+        num_device_blocks=TOTAL_DEVICE_BLOCKS // n_replicas)
+    return ClusterSession(
+        [ServingSimulator(LLAMA2_7B, L20, sc) for _ in range(n_replicas)],
+        router=router)
+
+
+def _one(n_replicas: int, router: str, n: int, seeds=SEEDS) -> dict:
+    # one fresh cluster per seed; raw latency series are POOLED across
+    # seeds (SimMetrics.merge) before means/percentiles, so the
+    # committed numbers are not one lucky trace
+    parts, per_seed, dispatched = [], {}, [0] * n_replicas
+    peak = [0.0] * n_replicas
+    for seed in seeds:
+        cl = _cluster(n_replicas, router)
+        cl.run(multi_tenant(n, seed=seed, **WORKLOAD))
+        m = cl.metrics()
+        parts.append(m)
+        per_seed[seed] = round(m.mean_ttft, 4)
+        for i, st in enumerate(cl.stats):
+            dispatched[i] += st.dispatched
+            peak[i] = max(peak[i], st.peak_occupancy)
+    m = SimMetrics.merge(parts)
+    return {
+        "mean_ttft_s": m.mean_ttft,
+        "p99_ttft_s": m.p99_ttft,
+        "mean_tpot_ms": m.mean_tpot * 1e3,
+        "prefix_hit_rate": m.prefix_hit_rate,
+        "n_finished": m.n_requests,
+        "preemptions": m.preemptions,
+        "mean_ttft_s_by_seed": per_seed,
+        "dispatched_per_replica": dispatched,
+        "peak_occupancy_per_replica": [round(p, 3) for p in peak],
+    }
+
+
+def main(n_requests: int = 100, smoke: bool = False,
+         json_out: Optional[str] = None) -> None:
+    replicas = [1, 2] if smoke else REPLICAS
+    routers = ["round_robin", "prefix_affinity"] if smoke else ROUTERS
+    seeds = SEEDS[:1] if smoke else SEEDS
+    rows = {}
+    for n_rep in replicas:
+        t0 = time.perf_counter()
+        arms = {router: _one(n_rep, router, n_requests, seeds=seeds)
+                for router in (routers if n_rep > 1 else ["round_robin"])}
+        us = (time.perf_counter() - t0) * 1e6
+        rows[n_rep] = arms
+        if n_rep == 1:
+            emit("cluster.r1.single", us,
+                 f"ttft_s={arms['round_robin']['mean_ttft_s']:.3f};"
+                 f"p99_s={arms['round_robin']['p99_ttft_s']:.3f};"
+                 f"hit_rate={arms['round_robin']['prefix_hit_rate']:.2f}")
+        else:
+            rr, pa = arms["round_robin"], arms["prefix_affinity"]
+            emit(f"cluster.r{n_rep}", us,
+                 f"rr_ttft_s={rr['mean_ttft_s']:.3f};"
+                 f"affinity_ttft_s={pa['mean_ttft_s']:.3f};"
+                 f"affinity_speedup_x="
+                 f"{rr['mean_ttft_s'] / max(pa['mean_ttft_s'], 1e-9):.2f};"
+                 f"rr_hit={rr['prefix_hit_rate']:.2f};"
+                 f"affinity_hit={pa['prefix_hit_rate']:.2f};"
+                 f"scaleup_vs_r1_x="
+                 f"{rows[replicas[0]]['round_robin']['mean_ttft_s'] / max(pa['mean_ttft_s'], 1e-9):.2f}")
+
+    if json_out:
+        doc = {
+            "benchmark": "cluster_routing_sweep",
+            "model": LLAMA2_7B.arch_id,
+            "hw": L20.name,
+            "n_requests": n_requests,
+            "total_device_blocks": TOTAL_DEVICE_BLOCKS,
+            "pool_split": "total/replicas per replica (matched aggregate)",
+            "workload": WORKLOAD,
+            "seeds": list(SEEDS),
+            "routers": ROUTERS,
+            "by_replicas": rows,
+        }
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main(n_requests=300, json_out="BENCH_cluster.json")

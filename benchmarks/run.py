@@ -24,7 +24,7 @@ def main() -> None:
                     help="toy scale: CI guard that every script still runs")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig4,fig5,fig6,fig8,prefix,"
-                         "fused,kernels")
+                         "fused,kernels,cluster")
     args = ap.parse_args()
     n = 40 if args.quick else 100
     if args.smoke:
@@ -32,7 +32,7 @@ def main() -> None:
     smoke = args.smoke
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (fig1_motivation, fig4_context_sweep,
+    from benchmarks import (cluster, fig1_motivation, fig4_context_sweep,
                             fig5_parallelism, fig6_fig7_arrival, fig8_slo,
                             fused_step, kernels_micro, prefix_cache)
 
@@ -54,6 +54,9 @@ def main() -> None:
         prefix_cache.main(n_requests=n, smoke=smoke)
     if not only or "fused" in only:
         fused_step.main(smoke=smoke)
+    if not only or "cluster" in only:
+        cluster.main(n_requests=n + 100 if not (args.quick or smoke) else n,
+                     smoke=smoke)
     if not only or "kernels" in only:
         kernels_micro.main(smoke=smoke)
 

@@ -1,6 +1,6 @@
 """Serving driver CLI: run the LayerKV engine on a synthetic workload
-through a live `ServingSession` — requests are submitted online and
-every generated token is printed as its iteration produces it.
+through a live session — requests are submitted online and every
+generated token is printed as its iteration produces it.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
         --policy layerkv --requests 16 --device-blocks 64
@@ -8,8 +8,12 @@ every generated token is printed as its iteration produces it.
 All five scheduling axes are exposed: --policy, --no-slo-aware,
 --chunked, --fused, --prefix-cache (plus --chunk-size for the chunked
 per-iteration token budget) and the admission ordering (--admission
-fcfs|prefix_aware). Real JAX execution with paged KV pools; prints the
-per-token stream, per-request TTFT and the offload-ledger summary.
+fcfs|prefix_aware). `--replicas N` serves through a `ClusterSession`
+over N identical engines with a pluggable dispatch policy (--router
+round_robin|least_loaded|prefix_affinity|slo_aware); a cluster of 1 is
+bit-identical to a bare session. Real JAX execution with paged KV
+pools; prints the per-token stream, per-request TTFT, a per-replica
+occupancy/hit-rate line at drain, and the offload-ledger summary.
 """
 from __future__ import annotations
 
@@ -38,6 +42,12 @@ def main():
     ap.add_argument("--admission", default="fcfs",
                     choices=["fcfs", "prefix_aware"],
                     help="waiting-queue admission ordering")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the cluster router")
+    ap.add_argument("--router", default="round_robin",
+                    choices=["round_robin", "least_loaded",
+                             "prefix_affinity", "slo_aware"],
+                    help="cluster dispatch policy (--replicas > 1)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--shared-len", type=int, default=0,
@@ -55,15 +65,17 @@ def main():
 
     import jax
     from repro.configs import get_config, get_smoke_config
+    from repro.serving.cluster import ClusterSession
     from repro.serving.engine import LayerKVEngine
     from repro.serving.request import Request
     from repro.serving.scheduler import ServeConfig
-    from repro.serving.session import ServingSession
 
     if not 0 <= args.shared_len < args.prompt_len:
         ap.error(f"--shared-len {args.shared_len} must be in "
                  f"[0, --prompt-len {args.prompt_len}): every prompt "
                  "needs at least one unique token")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = dataclasses.replace(cfg, dtype="float32")
     rng = np.random.RandomState(args.seed)
@@ -80,51 +92,60 @@ def main():
             prompt=shared + [int(x) for x in
                              rng.randint(0, cfg.vocab_size, sfx)]))
 
-    eng = LayerKVEngine(
-        cfg, None,
-        ServeConfig.for_engine(
-            policy=args.policy,
-            slo_aware=not args.no_slo_aware,
-            chunked=args.chunked or args.fused,
-            fused=args.fused,
-            prefix_cache=args.prefix_cache,
-            admission=args.admission,
-            max_prefill_tokens=args.chunk_size,
-            num_device_blocks=args.device_blocks,
-            num_host_blocks=args.host_blocks,
-            block_size=args.block_size),
-        rng=jax.random.PRNGKey(args.seed))
+    sc = ServeConfig.for_engine(
+        policy=args.policy,
+        slo_aware=not args.no_slo_aware,
+        chunked=args.chunked or args.fused,
+        fused=args.fused,
+        prefix_cache=args.prefix_cache,
+        admission=args.admission,
+        max_prefill_tokens=args.chunk_size,
+        num_device_blocks=args.device_blocks,
+        num_host_blocks=args.host_blocks,
+        block_size=args.block_size)
+    # every replica loads the SAME weights (one PRNG seed): a cluster is
+    # N copies of one model behind a router, not N different models
+    engines = [LayerKVEngine(cfg, None, sc, rng=jax.random.PRNGKey(args.seed))
+               for _ in range(args.replicas)]
 
-    # submit everything up front (arrivals land as the clock reaches
-    # them) and pump the scheduler one iteration at a time, printing the
-    # token stream live as each iteration produces it
-    session = ServingSession(eng)
+    # submit everything up front (arrivals dispatch as the shared clock
+    # reaches them) and pump the cluster one event at a time, printing
+    # the token stream live as each iteration produces it
+    session = ClusterSession(engines, router=args.router)
     handles = [session.submit(r, arrival=r.arrival) for r in reqs]
     while session.step():
         for h in handles:
             new = h.take_new()
             if new and not args.quiet:
                 star = "*" if h.request.cached_prompt_len else " "
-                print(f"[t={eng.clock() * 1e3:9.3f}ms] {h.rid:>4}{star} "
-                      f"+{len(new)} -> {new}")
+                print(f"[t={session.clock() * 1e3:9.3f}ms] {h.rid:>4}{star}"
+                      f"@{h.replica} +{len(new)} -> {new}")
     done = session.drain()
 
     ttfts = [r.ttft for r in done]
     print(f"policy={args.policy} chunked={args.chunked or args.fused} "
           f"fused={args.fused} prefix_cache={args.prefix_cache} "
-          f"admission={args.admission}")
+          f"admission={args.admission} replicas={args.replicas} "
+          f"router={args.router}")
     print(f"requests={len(done)} "
           f"mean_ttft={statistics.mean(ttfts)*1e3:.1f}ms "
           f"p99_ttft={sorted(ttfts)[-1]*1e3:.1f}ms")
-    off = [x for x in eng.off.ledger.log if x.kind == "offload"]
-    rel = [x for x in eng.off.ledger.log if x.kind == "reload"]
+    for i, (eng, st) in enumerate(zip(engines, session.stats)):
+        served = len(eng.core.done)
+        hit = f"{eng.bm.cache.hit_rate:.2f}" \
+            if eng.bm.cache is not None else "-"
+        print(f"replica {i}: dispatched={st.dispatched} served={served} "
+              f"iterations={st.steps} "
+              f"peak_occupancy={st.peak_occupancy:.2f} "
+              f"prefix_hit_rate={hit}")
+    off = [x for eng in engines for x in eng.off.ledger.log
+           if x.kind == "offload"]
+    rel = [x for eng in engines for x in eng.off.ledger.log
+           if x.kind == "reload"]
     print(f"layer-wise transfers: {len(off)} offloads "
           f"({sum(x.nbytes for x in off)/2**20:.2f} MiB), "
           f"{len(rel)} reloads "
           f"({sum(x.nbytes for x in rel)/2**20:.2f} MiB)")
-    if args.prefix_cache and eng.bm.cache is not None:
-        print(f"prefix cache: hit_rate={eng.bm.cache.hit_rate:.2f} "
-              f"({eng.bm.cache.n_hits}/{eng.bm.cache.n_lookups} lookups)")
     sample = done[0]
     print(f"sample output ({sample.rid}): {sample.generated[:8]}...")
 

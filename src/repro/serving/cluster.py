@@ -1,0 +1,304 @@
+"""Cluster serving: one router, N replica backends, one session API.
+
+A `ClusterSession` owns N replicas — each a `ServingSession` over any
+`ServingBackend` (the real `LayerKVEngine` or the discrete-event
+`ServingSimulator`; heterogeneous pool geometry is allowed) — and
+exposes the exact submit/stream/cancel/drain/reap surface of a single
+session. The one new decision is DISPATCH: which replica's queue a
+request joins, made by a pluggable `RoutingPolicy` (serving/router.py)
+at the request's arrival time on the shared virtual clock.
+
+Time. Each replica backend keeps its own virtual clock (cost-model
+driven on both backends), so the cluster is a discrete-event system of
+N servers plus one arrival stream. `step()` always advances the replica
+whose next event is EARLIEST on the shared virtual clock, and a parked
+arrival is dispatched exactly when it becomes the earliest event — so
+routing observes each replica's state as of the arrival, never the
+future. Replica clocks advance in lockstep order of events, exactly
+like a multi-server event queue.
+
+Identity. A cluster of 1 is bit-identical to a bare `ServingSession`
+over the same backend: every arrival dispatches to replica 0 before the
+same step it would have fed in a bare session, and the routing policies
+only *read* scheduler state — `tests/test_cluster.py` pins tokens on
+the engine and exact metrics on the simulator across all five
+scheduling axes and all four policies.
+
+Cancellation routes to the owning replica and reuses the PR 4 unwind;
+a request cancelled before its arrival dispatches is unwound entirely
+inside the cluster (nothing is in flight anywhere). `metrics()` merges
+the replicas' `SimMetrics` by POOLING raw latency series
+(`SimMetrics.merge`) — per-replica percentiles are never averaged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Iterator, List, Optional, Sequence, Union
+
+from repro.core import DEVICE
+from repro.serving.request import Phase, Request
+from repro.serving.router import RoutingPolicy, make_routing_policy
+from repro.serving.scheduler import AdmissionImpossible
+from repro.serving.session import RequestHandle, ServingBackend, \
+    ServingSession, cancel_parked
+from repro.serving.sim import SimMetrics
+
+
+@dataclasses.dataclass
+class ReplicaStats:
+    """Per-replica dispatch accounting for the drain report."""
+    dispatched: int = 0
+    steps: int = 0
+    peak_occupancy: float = 0.0   # max device-pool occupancy observed
+
+
+@dataclasses.dataclass
+class ClusterHandle:
+    """A submitted request, as seen by the cluster caller. Before its
+    arrival dispatches, the request lives only in the cluster's pending
+    heap (no replica knows it); afterwards the handle delegates to the
+    owning replica's `RequestHandle`."""
+
+    request: Request
+    cluster: "ClusterSession"
+    replica: Optional[int] = None           # set at dispatch
+    _inner: Optional[RequestHandle] = None  # set at dispatch
+
+    @property
+    def rid(self) -> str:
+        return self.request.rid
+
+    @property
+    def phase(self) -> Phase:
+        return self.request.phase
+
+    @property
+    def finished(self) -> bool:
+        return self.request.phase is Phase.FINISHED
+
+    @property
+    def cancelled(self) -> bool:
+        return self.request.phase is Phase.CANCELLED
+
+    @property
+    def done(self) -> bool:
+        return self.finished or self.cancelled
+
+    def take_new(self) -> List[int]:
+        """Tokens produced since the last call (non-blocking); [] until
+        the request has dispatched to a replica."""
+        return self._inner.take_new() if self._inner is not None else []
+
+    def cancel(self) -> bool:
+        return self.cluster.cancel(self)
+
+
+class ClusterSession:
+    """Multi-replica serving frontend: same API as `ServingSession`,
+    plus a routing policy and per-replica introspection."""
+
+    def __init__(self, backends: Sequence[ServingBackend],
+                 router: Union[str, RoutingPolicy] = "round_robin"):
+        if not backends:
+            raise ValueError("a cluster needs at least one backend")
+        self.sessions = [ServingSession(b) for b in backends]
+        self.router = make_routing_policy(router)
+        self._pending: list = []           # (arrival, seq, Request) heap
+        self._seq = itertools.count()
+        self.handles: dict = {}            # rid -> ClusterHandle
+        self.cancelled: List[Request] = []  # cancelled before dispatch
+        self.stats = [ReplicaStats() for _ in backends]
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.sessions)
+
+    @property
+    def cores(self):
+        return [s.core for s in self.sessions]
+
+    def clock(self) -> float:
+        """The shared virtual clock: the furthest any replica has
+        simulated. Arrivals stamped "now" are dispatched once every
+        earlier replica event has run (virtual-time event order)."""
+        return max(s.backend.clock() for s in self.sessions)
+
+    # ------------------------------------------------------------ submit
+    def submit(self, request: Request,
+               arrival: Optional[float] = None) -> ClusterHandle:
+        """Enqueue a request. An arrival at or before the shared clock
+        routes NOW (it has already arrived — exactly the bare session's
+        direct-to-waiting path, in submit order); a future arrival parks
+        in the cluster heap and routes when the shared clock reaches it,
+        so load-aware policies observe arrival-time load, never
+        submission-time load. `arrival=None` stamps the current shared
+        clock. rids are unique cluster-wide."""
+        if request.rid in self.handles:
+            raise ValueError(f"duplicate rid {request.rid!r}")
+        now = self.clock()
+        request.arrival = now if arrival is None else arrival
+        h = ClusterHandle(request, self)
+        self.handles[request.rid] = h
+        if request.arrival <= now:
+            self._route(request)
+        else:
+            heapq.heappush(self._pending,
+                           (request.arrival, next(self._seq), request))
+        return h
+
+    def _route(self, r: Request) -> int:
+        """Pick r's replica and hand it to that replica's session (which
+        parks still-future arrivals in its own heap — a replica clock can
+        lag the shared clock). Returns the chosen replica index.
+
+        Feasibility backstop (heterogeneous geometry): a policy may pick
+        a replica whose pool can NEVER fit the request — the same
+        `device_need` test `wedged_error` reports on. When another
+        replica could serve it, the request is re-routed to the feasible
+        replica with the least KV-block demand instead of wedging a
+        queue forever; when NO replica fits (including a cluster of 1),
+        the choice stands and drain raises AdmissionImpossible exactly
+        like a bare session."""
+        i = self.router.choose(r, self.cores, r.arrival)
+        if not 0 <= i < self.n_replicas:
+            raise ValueError(
+                f"router {self.router.name!r} chose replica {i} "
+                f"of {self.n_replicas}")
+        cores = self.cores
+
+        def _fits(j: int) -> bool:
+            # memoize=False: replicas that don't win the request must
+            # not retain a plan memo nothing will ever release
+            return cores[j].device_need(r, memoize=False) <= \
+                cores[j].bm.pools[DEVICE].num_blocks
+
+        if not _fits(i):
+            feasible = [j for j in range(self.n_replicas) if _fits(j)]
+            if feasible:
+                i = min(feasible,
+                        key=lambda j: (cores[j].load_stats().kv_demand, j))
+        h = self.handles[r.rid]
+        h.replica = i
+        h._inner = self.sessions[i].submit(r, arrival=r.arrival)
+        self.stats[i].dispatched += 1
+        return i
+
+    def _dispatch(self) -> int:
+        return self._route(heapq.heappop(self._pending)[2])
+
+    # -------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One cluster event: dispatch the next arrival if it precedes
+        every live replica's next event, else step the replica whose
+        next event is earliest. A replica that cannot progress (wedged
+        on backpressure) is dropped from the event comparison — its
+        frozen clock must stall neither the other replicas NOR the
+        dispatch of parked arrivals they could serve; a dispatch that
+        lands on a stalled replica revives it. Returns False only when
+        nothing can progress anywhere."""
+        stalled: set = set()
+        while True:
+            nxt = [(s.next_event_time(), i)
+                   for i, s in enumerate(self.sessions)]
+            busy = sorted((t, i) for t, i in nxt
+                          if t is not None and i not in stalled)
+            if self._pending and \
+                    (not busy or self._pending[0][0] <= busy[0][0]):
+                stalled.discard(self._dispatch())
+                continue
+            if not busy:
+                return False
+            _, i = busy[0]
+            if self.sessions[i].step():
+                st = self.stats[i]
+                st.steps += 1
+                st.peak_occupancy = max(st.peak_occupancy,
+                                        self.sessions[i].core.occupancy())
+                return True
+            stalled.add(i)
+
+    @property
+    def backlog(self) -> int:
+        """Requests accepted but not yet prefilling, cluster-wide."""
+        return len(self._pending) + sum(s.backlog for s in self.sessions)
+
+    # ------------------------------------------------------------ stream
+    def stream(self, handle: ClusterHandle) -> Iterator[int]:
+        """Per-token iterator for one request; every replica advances
+        normally while streaming."""
+        while True:
+            yield from handle.take_new()
+            if handle.done:
+                return
+            if not self.step():
+                raise self._wedged()
+
+    # ------------------------------------------------------------ cancel
+    def cancel(self, handle: ClusterHandle) -> bool:
+        """Cancel a live request. Dispatched requests route to the
+        owning replica session (live unwind or replica-heap removal —
+        the PR 4 path); an undispatched request is unwound entirely here
+        (no replica ever saw it). Idempotent; False once done."""
+        if handle._inner is not None:
+            return handle._inner.cancel()
+        return cancel_parked(self._pending, handle.request, self.clock(),
+                             self.cancelled)
+
+    # -------------------------------------------------------------- reap
+    def reap(self, handle: ClusterHandle) -> Optional[Request]:
+        """Release a done request's retained state, cluster-wide: the
+        cluster handle plus the owning replica session's handle and
+        done/cancelled entry."""
+        if not handle.done:
+            return None
+        r = handle.request
+        self.handles.pop(r.rid, None)
+        if handle._inner is not None:
+            return self.sessions[handle.replica].reap(handle._inner)
+        if r in self.cancelled:
+            self.cancelled.remove(r)
+        return r
+
+    # ------------------------------------------------------------- drain
+    def _wedged(self) -> AdmissionImpossible:
+        for s in self.sessions:
+            if s.core.waiting:
+                return s.core.wedged_error()
+        return AdmissionImpossible(
+            "cluster wedged with no waiting request (bug)")
+
+    def drain(self) -> List[Request]:
+        """Run every replica empty; returns the finished requests in
+        finish-time order (a cluster of 1 returns exactly the bare
+        session's list — replica done-lists are already time-ordered
+        and the sort is stable)."""
+        while self._pending or \
+                any(s.next_event_time() is not None for s in self.sessions):
+            if not self.step():
+                raise self._wedged()
+        for s in self.sessions:
+            s.backend.finish()
+        out = [r for s in self.sessions for r in s.core.done]
+        out.sort(key=lambda r: r.finish_time)
+        return out
+
+    # ----------------------------------------------------------- metrics
+    def metrics(self) -> SimMetrics:
+        """Pooled metrics across replicas (simulator backends): raw
+        latency series are concatenated BEFORE means/percentiles —
+        averaging per-replica p99s would understate the tail whenever
+        replicas are imbalanced, which is exactly what routing policies
+        differ on. Requests cancelled before dispatch are counted here
+        (no replica ever saw them)."""
+        m = SimMetrics.merge([s.backend.metrics() for s in self.sessions])
+        m.n_cancelled += len(self.cancelled)
+        return m
+
+    # --------------------------------------------------------------- run
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Batch convenience wrapper, mirroring the backends' run()."""
+        for r in sorted(requests, key=lambda q: q.arrival):
+            self.submit(r, arrival=r.arrival)
+        return self.drain()

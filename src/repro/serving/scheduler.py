@@ -112,6 +112,32 @@ class ServeConfig:
         return cls(**kw).validate()
 
 
+@dataclasses.dataclass(frozen=True)
+class LoadStats:
+    """One replica's load, as a cluster router sees it (read-only
+    snapshot of `SchedulerCore` state — computing it never changes a
+    scheduling decision). `kv_demand` is the join-shortest-queue key:
+    device blocks already held by in-flight requests plus the minimum
+    blocks every waiting request still needs, i.e. the outstanding
+    KV-block demand this replica's device pool has committed to."""
+
+    n_waiting: int        # requests queued, not yet prefilling
+    n_inflight: int       # prefilling + decoding
+    queued_blocks: int    # min device blocks the waiting queue still needs
+    active_blocks: int    # device blocks held by live allocations
+    free_blocks: int      # allocatable now (incl. reclaimable cache)
+    total_blocks: int     # device pool size
+
+    @property
+    def kv_demand(self) -> int:
+        return self.queued_blocks + self.active_blocks
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - self.free_blocks / self.total_blocks \
+            if self.total_blocks else 0.0
+
+
 class AdmissionImpossible(RuntimeError):
     """The head waiting request can never be admitted: nothing is in
     flight to free blocks and the pools cannot fit it. Raised instead of
@@ -265,20 +291,24 @@ class SchedulerCore:
             return self.bm.match_prefix(r.prompt)
         return 0
 
-    def device_need(self, r: Request) -> int:
+    def device_need(self, r: Request, memoize: bool = True) -> int:
         """MINIMUM device blocks to start r's prefill. With the prefix
         cache on, a hit needs only the uncached suffix (+ COW tail) but
         all layers device-resident — which for short prefixes can EXCEED
         the layer-wise plan; the gate takes the min of the two estimates
         (a larger hit estimate must never wedge a request the plain path
-        fits)."""
+        fits). `memoize=False` keeps the Eq.4 plan out of the per-request
+        memo — for probes about requests this core may never own (the
+        cluster feasibility backstop), whose memo entry `release()` would
+        otherwise never drop."""
         if self.sc.policy == "vllm":
             need = self._blocks(r.prompt_len) * self.L
         else:
             plan = self.plans.get(r.rid)
             if plan is None:
                 plan = self.off.plan_for_prompt(r.prompt_len)
-                self.plans[r.rid] = plan
+                if memoize:
+                    self.plans[r.rid] = plan
             send_buf = 1 if plan.offload_layers else 0
             need = self._blocks(r.prompt_len) * (plan.x + send_buf)
         if self.sc.prefix_cache and r.prompt:
@@ -288,6 +318,49 @@ class SchedulerCore:
                             - c // self.sc.block_size) * self.L
                 need = min(need, hit_need)
         return need
+
+    # --------------------------------------------------- load introspection
+    def occupancy(self) -> float:
+        """Fraction of the device pool held by live allocations (cheap —
+        suitable for per-step sampling)."""
+        total = self.bm.pools[DEVICE].num_blocks
+        return 1.0 - self.bm.num_free(DEVICE) / total if total else 0.0
+
+    def load_stats(self) -> LoadStats:
+        """Snapshot this replica's outstanding KV-block demand for a
+        cluster router. Pure read: `device_need` only fills the same
+        Eq.4 plan memo admission would, so probing never perturbs the
+        schedule (the cluster-of-1 identity tests pin this)."""
+        total = self.bm.pools[DEVICE].num_blocks
+        free = self.bm.num_free(DEVICE)
+        queued = sum(self.device_need(r) for r in self.waiting)
+        return LoadStats(n_waiting=len(self.waiting),
+                         n_inflight=self.in_flight(),
+                         queued_blocks=queued,
+                         active_blocks=total - free,
+                         free_blocks=free, total_blocks=total)
+
+    def admit_eta(self, r: Request, now: float) -> float:
+        """Estimated delay before this replica's Alg.1 slack admits `r`
+        behind its current waiting queue: the Eq.3 prefill work already
+        queued ahead of it, plus however much of r's own prefill does not
+        fit in the decode batch's remaining Eq.1 slack. Prefix-cache hits
+        price only their uncached suffix, exactly as admission does. With
+        slo_aware off (or the vllm policy) the queue term alone orders
+        replicas."""
+        t = max(now, self.now)
+
+        def _cost(q: Request) -> float:
+            c = self.cached_hint(q)
+            return self.cost.chunk_prefill_time(q.prompt_len - c, c)
+
+        queued = sum(_cost(q) for q in self.waiting)
+        if not (self.sc.policy == "layerkv" and self.sc.slo_aware):
+            return queued
+        budget = self.slo.allow_prefill_budget(self.decoding, t)
+        if budget == float("inf"):
+            return queued
+        return queued + max(_cost(r) - max(budget - queued, 0.0), 0.0)
 
     # --------------------------------------------------------- cache copies
     def cache_copy(self, src_pool: str, src: int, dst_pool: str,

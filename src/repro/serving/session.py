@@ -96,6 +96,25 @@ class RequestHandle:
         return self.session.cancel(self)
 
 
+def cancel_parked(pending: list, r: Request, now: float,
+                  cancelled: List[Request]) -> bool:
+    """Cancel a not-yet-arrived request parked in an (arrival, seq,
+    Request) heap: nothing is in flight to unwind, only the lifecycle
+    stamps the core's cancel path would set. Shared by `ServingSession`
+    (replica-level heap) and `ClusterSession` (pre-dispatch heap) so the
+    two parked-cancel semantics cannot drift. Returns False when `r` is
+    not in the heap."""
+    for i, (_, _, q) in enumerate(pending):
+        if q is r:
+            pending.pop(i)
+            heapq.heapify(pending)
+            r.phase = Phase.CANCELLED
+            r.finish_time = now
+            cancelled.append(r)
+            return True
+    return False
+
+
 class ServingSession:
     """Open-loop serving frontend over one backend."""
 
@@ -155,6 +174,18 @@ class ServingSession:
         """Requests accepted but not yet prefilling (queue pressure)."""
         return len(self.core.waiting) + len(self._pending)
 
+    def next_event_time(self) -> Optional[float]:
+        """Virtual time of this session's next event, or None when fully
+        idle: the backend clock while any work is queued or in flight,
+        else the earliest parked arrival. A cluster uses this to advance
+        its replicas in lockstep — always stepping the session whose next
+        event is earliest on the shared virtual clock."""
+        if self.core.waiting or not self.core.idle():
+            return self.backend.clock()
+        if self._pending:
+            return self._pending[0][0]
+        return None
+
     # ------------------------------------------------------------ stream
     def stream(self, handle: RequestHandle) -> Iterator[int]:
         """Per-token iterator for one request: pumps the scheduler until
@@ -177,16 +208,9 @@ class ServingSession:
         are cancelled from the heap. Idempotent; False when the request
         already finished."""
         r = handle.request
-        for i, (_, _, q) in enumerate(self._pending):
-            if q is r:
-                # not yet arrived: nothing is in flight to unwind, only
-                # the lifecycle stamps the core's cancel path would set
-                self._pending.pop(i)
-                heapq.heapify(self._pending)
-                r.phase = Phase.CANCELLED
-                r.finish_time = self.backend.clock()
-                self.core.cancelled.append(r)
-                return True
+        if cancel_parked(self._pending, r, self.backend.clock(),
+                         self.core.cancelled):
+            return True
         return self.backend.cancel(r)
 
     # -------------------------------------------------------------- reap

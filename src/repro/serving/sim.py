@@ -89,6 +89,35 @@ class SimMetrics:
     n_cancelled: int = 0                 # session cancellations (excluded
     #                                      from every latency series above)
 
+    @classmethod
+    def merge(cls, parts: List["SimMetrics"]) -> "SimMetrics":
+        """Pool per-replica metrics into cluster-level metrics. Raw
+        latency SERIES are concatenated and the derived statistics
+        (means, p99, throughput) recomputed over the pooled data —
+        averaging per-replica percentiles is statistically wrong and
+        understates the tail exactly when replicas are imbalanced,
+        which is what routing policies differ on. Counters sum;
+        makespan / max_iter_prefill_tokens take the max."""
+        return cls(
+            ttft=[t for m in parts for t in m.ttft],
+            queuing=[t for m in parts for t in m.queuing],
+            prefill_lat=[t for m in parts for t in m.prefill_lat],
+            tpot=[t for m in parts for t in m.tpot],
+            finish_times=[t for m in parts for t in m.finish_times],
+            tokens_out=sum(m.tokens_out for m in parts),
+            makespan=max((m.makespan for m in parts), default=0.0),
+            slo_violations=sum(m.slo_violations for m in parts),
+            n_requests=sum(m.n_requests for m in parts),
+            preemptions=sum(m.preemptions for m in parts),
+            chunk_iters=sum(m.chunk_iters for m in parts),
+            max_iter_prefill_tokens=max(
+                (m.max_iter_prefill_tokens for m in parts), default=0),
+            prefix_hit_tokens=sum(m.prefix_hit_tokens for m in parts),
+            prefix_lookup_tokens=sum(
+                m.prefix_lookup_tokens for m in parts),
+            n_cancelled=sum(m.n_cancelled for m in parts),
+        )
+
     @property
     def mean_ttft(self):
         return statistics.mean(self.ttft) if self.ttft else 0.0

@@ -10,6 +10,12 @@ requests whose prompts share leading tokens (system prompts, multi-turn
 chat, RAG templates). These requests carry REAL token-id lists in
 `Request.prompt` — the content-addressed cache hashes them, in both the
 simulator and the real engine.
+
+`multi_tenant` generates the traffic class the cluster ROUTER targets:
+per-tenant shared-prefix templates with bursty on-off arrivals and a
+skewed (Zipf) tenant popularity, so prefix-affinity dispatch (keep a
+tenant's template on one replica's cache) versus load-aware dispatch
+(spread the burst) is a real trade-off rather than a tie.
 """
 from __future__ import annotations
 
@@ -135,3 +141,89 @@ def shared_prefix(n: int, rate: float, scenario: str = "system_prompt",
         return out
 
     raise ValueError(f"unknown shared-prefix scenario: {scenario!r}")
+
+
+def multi_tenant(n: int, rate: float, n_tenants: int = 4,
+                 share_ratio: float = 0.5, prompt_len: int = 1024,
+                 output_len: int = 128, zipf_s: float = 1.0,
+                 burst_on: float = 4.0, burst_off: float = 8.0,
+                 burst_cv: float = 2.0, vocab_size: int = 32000,
+                 seed: int = 0, tpot_slo: float = 0.2,
+                 ttft_slo: float = 3.0) -> List[Request]:
+    """Per-tenant shared-prefix templates under bursty on-off arrivals.
+
+    Each of `n_tenants` tenants owns one template prefix of
+    ~share_ratio * prompt_len tokens; a tenant's request = its template
+    + a unique suffix (+-25% length jitter, as in `shared_prefix`, so
+    partial tails and COW are exercised). Tenant popularity is Zipf:
+    tenant k gets weight (k+1)^-zipf_s of the aggregate `rate`, so a
+    couple of templates are HOT — the traffic that makes
+    `prefix_affinity` concentrate (and need its spillover) while
+    `least_loaded` scatters the hot template across every replica's
+    cache.
+
+    Arrivals are an independent on-off (interrupted-Poisson) process
+    per tenant: exponential ON periods of mean `burst_on` seconds at
+    `burst_cv / duty` x the tenant's average rate, separated by
+    exponential OFF gaps with no arrivals. The OFF mean is stretched to
+    `burst_cv * (burst_on + burst_off) - burst_on`, which exactly
+    cancels the burst_cv intensity boost — the long-run average stays
+    at the tenant's share of `rate` while burst_cv only sharpens the
+    peak-to-mean ratio. Bursts from different tenants overlap at
+    random, so instantaneous cluster load swings well above and below
+    its mean — queueing behaviour a load-oblivious router cannot see.
+    `burst_cv=1` with `burst_off=0` degenerates to plain Poisson per
+    tenant.
+
+    Tenant quotas are apportioned by largest remainder so exactly `n`
+    requests are returned, in arrival order, rids `t{tenant}r{i}` so
+    tests and benchmarks can group by tenant."""
+    if n_tenants < 1:
+        raise ValueError("multi_tenant needs at least one tenant")
+    rng = random.Random(seed)
+    shared_len = max(int(prompt_len * share_ratio), 1)
+    templates = [_toks(rng, shared_len, vocab_size)
+                 for _ in range(n_tenants)]
+    weights = [(k + 1) ** -zipf_s for k in range(n_tenants)]
+    wsum = sum(weights)
+    # largest-remainder apportionment: sum(quota) == n exactly
+    quota = [n * w / wsum for w in weights]
+    n_per = [int(q) for q in quota]
+    for k in sorted(range(n_tenants), key=lambda k: quota[k] - n_per[k],
+                    reverse=True)[: n - sum(n_per)]:
+        n_per[k] += 1
+    cv = max(burst_cv, 1.0)
+    off_mean = cv * (burst_on + burst_off) - burst_on \
+        if burst_on + burst_off > 0 else 0.0
+    out: List[Request] = []
+    for k in range(n_tenants):
+        tenant_rate = rate * weights[k] / wsum
+        # arrivals only flow during ON windows, at burst_cv/duty x the
+        # tenant's average rate; the stretched OFF mean above restores
+        # the long-run average to exactly tenant_rate
+        duty = burst_on / (burst_on + burst_off) \
+            if burst_on + burst_off > 0 else 1.0
+        on_rate = tenant_rate * cv / max(duty, 1e-9)
+        n_k = n_per[k]
+        t = rng.expovariate(1.0 / max(off_mean, 1e-9)) \
+            if off_mean > 0 else 0.0
+        i = 0
+        while i < n_k:
+            burst_end = t + rng.expovariate(1.0 / max(burst_on, 1e-9))
+            while i < n_k:
+                t += rng.expovariate(on_rate)
+                if t >= burst_end:
+                    t = burst_end
+                    break
+                sfx_mean = max(prompt_len - shared_len, 1)
+                sfx = max(1, int(sfx_mean * rng.uniform(0.75, 1.25)))
+                prompt = templates[k] + _toks(rng, sfx, vocab_size)
+                out.append(Request(
+                    rid=f"t{k}r{i}", prompt_len=len(prompt),
+                    output_len=output_len, arrival=t,
+                    tpot_slo=tpot_slo, ttft_slo=ttft_slo, prompt=prompt))
+                i += 1
+            t += rng.expovariate(1.0 / max(off_mean, 1e-9)) \
+                if off_mean > 0 else 0.0
+    out.sort(key=lambda r: (r.arrival, r.rid))
+    return out

@@ -1,0 +1,531 @@
+"""Cluster serving subsystem coverage.
+
+Five layers of guarantees:
+  * cluster-of-1 identity — a `ClusterSession` over ONE backend is
+    bit-identical to a bare `ServingSession`: exact metrics on the
+    simulator (all five scheduling axes x all four routing policies)
+    and exact tokens on the real engine (all five axes; router varied
+    across arms). Routing policies are read-only observers of the
+    scheduler cores, and this is the test that pins it;
+  * losslessness — no request is lost or duplicated under ANY routing
+    policy with cancellation mixed in (seeded random routing+cancel
+    schedules here; the hypothesis property lives in
+    tests/test_core_properties.py, which degrades to a skip on minimal
+    installs);
+  * prefix_affinity mechanics — template rendezvous, load-based
+    spillover under a hot template, promptless fallback;
+  * cross-replica cancellation — cancel routes to the owning replica,
+    unwinds through the PR 4 path, and pre-dispatch cancels never touch
+    a replica;
+  * metrics pooling — `SimMetrics.merge` concatenates raw series and
+    recomputes percentiles over the pool (hand-computed ranks; never
+    the average of per-replica p99s).
+"""
+import dataclasses
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.core import DEVICE, HOST
+from repro.serving.cluster import ClusterSession
+from repro.serving.costmodel import L20
+from repro.serving.engine import EngineConfig, LayerKVEngine
+from repro.serving.request import Request
+from repro.serving.router import (
+    ROUTING_POLICIES, PrefixAffinityRouting, RoundRobinRouting,
+    make_routing_policy,
+)
+from repro.serving.scheduler import AdmissionImpossible
+from repro.serving.session import ServingSession
+from repro.serving.sim import ServingSimulator, SimConfig, SimMetrics
+from repro.serving.workload import multi_tenant, shared_prefix
+
+ALL_ROUTERS = sorted(ROUTING_POLICIES)
+
+
+def _sim(**kw):
+    return ServingSimulator(LLAMA2_7B, L20, SimConfig(**kw))
+
+
+# ------------------------------------------------------------ router seam --
+
+def test_make_routing_policy():
+    assert make_routing_policy("round_robin").name == "round_robin"
+    # instances are fresh (round_robin's cursor is stateful)
+    assert make_routing_policy("round_robin") is not \
+        make_routing_policy("round_robin")
+    pol = PrefixAffinityRouting(spill_frac=0.1)
+    assert make_routing_policy(pol) is pol
+    with pytest.raises(ValueError, match="mystery"):
+        make_routing_policy("mystery")
+
+
+def test_round_robin_stripes():
+    pol = RoundRobinRouting()
+    cores = [None, None, None]
+    r = Request(rid="r", prompt_len=8, output_len=1)
+    assert [pol.choose(r, cores, 0.0) for _ in range(6)] \
+        == [0, 1, 2, 0, 1, 2]
+
+
+def test_load_stats_counts_demand():
+    sim = _sim(policy="vllm", num_device_blocks=LLAMA2_7B.n_layers * 64)
+    sess = ServingSession(sim)
+    ls0 = sim.core.load_stats()
+    assert ls0.kv_demand == 0 and ls0.occupancy == 0.0
+    sess.submit(Request(rid="a", prompt_len=64, output_len=4))
+    ls1 = sim.core.load_stats()
+    # vllm policy: the queued request needs blocks for ALL layers
+    assert ls1.n_waiting == 1
+    assert ls1.queued_blocks == \
+        sim.bm.blocks_for_tokens(64) * LLAMA2_7B.n_layers
+    sess.step()          # prefill admitted: demand moves queued -> active
+    ls2 = sim.core.load_stats()
+    assert ls2.n_waiting == 0 and ls2.n_inflight == 1
+    assert ls2.active_blocks > 0 and ls2.occupancy > 0.0
+    sess.drain()
+    assert sim.core.load_stats().kv_demand == 0
+
+
+def test_admit_eta_orders_by_backlog():
+    """A replica with queued prefill work reports a later admission ETA
+    than an empty one — the slo_aware router's ranking key."""
+    idle, busy = _sim(), _sim()
+    ServingSession(idle)
+    bsess = ServingSession(busy)
+    for i in range(4):
+        bsess.submit(Request(rid=f"q{i}", prompt_len=2048, output_len=64))
+    r = Request(rid="new", prompt_len=512, output_len=32)
+    assert busy.core.admit_eta(r, 0.0) > idle.core.admit_eta(r, 0.0) >= 0.0
+
+
+# --------------------------------------------- cluster-of-1 identity (sim) --
+
+SIM_AXES = {
+    "vllm_excl": dict(policy="vllm"),
+    "layerkv_excl_slo": dict(policy="layerkv", slo_aware=True),
+    "layerkv_chunked": dict(policy="layerkv", chunked=True),
+    "chunked_prefix": dict(policy="layerkv", chunked=True,
+                           prefix_cache=True),
+    "chunked_prefix_fused": dict(policy="layerkv", chunked=True,
+                                 prefix_cache=True, fused=True),
+}
+
+
+def _mixed_burst(n=30):
+    return shared_prefix(n, rate=4.0, scenario="rag_template",
+                         share_ratio=0.5, prompt_len=512, output_len=64,
+                         seed=3)
+
+
+@pytest.mark.parametrize("axes", list(SIM_AXES), ids=list(SIM_AXES))
+def test_cluster_of_one_identity_sim(axes):
+    """THE identity guarantee, metrics side: a 1-replica cluster
+    reproduces the bare session's SimMetrics exactly (full dataclass
+    equality — every raw series, counter and stamp) on every scheduling
+    axis, under every routing policy. Pins that policies never perturb
+    the schedule they observe."""
+    kw = SIM_AXES[axes]
+    bare = _sim(**kw)
+    bare.run(_mixed_burst())
+    base = bare.metrics()
+    for router in ALL_ROUTERS:
+        cl = ClusterSession([_sim(**kw)], router=router)
+        done = cl.run(_mixed_burst())
+        assert cl.metrics() == base, f"router={router}"
+        assert [r.rid for r in done] == [r.rid for r in bare.done]
+
+
+@pytest.mark.parametrize("axes", list(SIM_AXES), ids=list(SIM_AXES))
+def test_cluster_of_one_identity_online_submission(axes):
+    """Identity also holds for live mid-session submission (the online
+    path: some arrivals submitted after the cluster has advanced)."""
+    kw = SIM_AXES[axes]
+    reqs = _mixed_burst()
+    bare = _sim(**kw)
+    bare.run([dataclasses.replace(r) for r in reqs])
+
+    cl = ClusterSession([_sim(**kw)], router="least_loaded")
+    for r in reqs[: len(reqs) // 2]:
+        cl.submit(r, arrival=r.arrival)
+    for _ in range(5):
+        cl.step()
+    for r in reqs[len(reqs) // 2:]:
+        cl.submit(r, arrival=r.arrival)
+    cl.drain()
+    assert cl.metrics() == bare.metrics()
+
+
+# ------------------------------------------------------------ losslessness --
+
+@pytest.mark.parametrize("router", ALL_ROUTERS)
+def test_no_request_lost_or_duplicated(router):
+    """Seeded random schedules (the hypothesis property in
+    test_core_properties.py fuzzes further): under every routing policy,
+    with cancels landing in every phase, each submitted request ends up
+    EXACTLY once across replica done/cancelled lists + the cluster's
+    pre-dispatch cancel list, and every replica pool returns to
+    baseline."""
+    for seed in range(3):
+        rng = random.Random(seed)
+        n_rep = rng.choice([2, 3])
+        cl = ClusterSession(
+            [_sim(policy="layerkv", chunked=True, prefix_cache=True,
+                  num_device_blocks=2048, num_host_blocks=1 << 14)
+             for _ in range(n_rep)],
+            router=router)
+        reqs = multi_tenant(14, rate=40.0, n_tenants=3, prompt_len=320,
+                            output_len=32, seed=seed)
+        hs = [cl.submit(r, arrival=r.arrival) for r in reqs]
+        victims = rng.sample(hs, 4)
+        for v in victims:
+            for _ in range(rng.randrange(12)):
+                cl.step()
+            v.cancel()
+        cl.drain()
+        done = [r for s in cl.sessions for r in s.core.done]
+        cncl = [r for s in cl.sessions for r in s.core.cancelled] \
+            + cl.cancelled
+        seen = sorted(r.rid for r in done) + sorted(r.rid for r in cncl)
+        assert sorted(seen) == sorted(r.rid for r in reqs), \
+            f"lost/duplicated under {router} seed {seed}"
+        assert all(h.done for h in hs)
+        assert cl.metrics().n_cancelled == len(cncl)
+        for s in cl.sessions:
+            bm = s.backend.bm
+            bm.drop_cache()
+            bm.check()
+            assert bm.num_free(DEVICE) == bm.pools[DEVICE].num_blocks
+            assert bm.num_free(HOST) == bm.pools[HOST].num_blocks
+            assert not bm.live_requests()
+
+
+# -------------------------------------------------- prefix affinity --------
+
+def _hot_template(n=24, rate=60.0):
+    """One tenant only: every prompt shares the same hot template."""
+    return multi_tenant(n, rate=rate, n_tenants=1, prompt_len=512,
+                        output_len=64, seed=11)
+
+
+def test_prefix_affinity_rendezvous_concentrates():
+    """Without load pressure (huge spill threshold) every request of a
+    template rendezvouses on ONE replica — including the very first
+    requests, before anything is registered (hash-chain fallback)."""
+    cl = ClusterSession(
+        [_sim(policy="layerkv", chunked=True, prefix_cache=True)
+         for _ in range(3)],
+        router=PrefixAffinityRouting(spill_frac=float("inf")))
+    cl.run(_hot_template())
+    assert sorted(s.dispatched for s in cl.stats) == [0, 0, 24]
+
+
+def test_prefix_affinity_spillover_under_hot_template():
+    """The spillover threshold: when the affinity replica's KV-block
+    backlog exceeds spill_frac of its pool, the hot template spills to
+    the least-loaded replica instead of hotspotting — and total service
+    is still lossless."""
+    def run(spill_frac):
+        cl = ClusterSession(
+            [_sim(policy="layerkv", chunked=True, prefix_cache=True,
+                  num_device_blocks=4096)
+             for _ in range(3)],
+            router=PrefixAffinityRouting(spill_frac=spill_frac))
+        done = cl.run(_hot_template())
+        assert len(done) == 24
+        return [s.dispatched for s in cl.stats], cl.metrics()
+
+    sticky, m_sticky = run(float("inf"))
+    spill, m_spill = run(0.02)
+    assert sum(1 for d in sticky if d > 0) == 1
+    assert sum(1 for d in spill if d > 0) >= 2, \
+        "a congested hot template must spill off its home replica"
+    # spilling relieves the hotspot's queueing delay
+    assert m_spill.mean_ttft < m_sticky.mean_ttft
+
+
+def test_prefix_affinity_promptless_falls_back_to_least_loaded():
+    """Requests without token ids (length-only sim workloads) cannot
+    rendezvous; they route by load instead of crashing or defaulting to
+    replica 0 forever."""
+    cl = ClusterSession([_sim() for _ in range(2)],
+                        router="prefix_affinity")
+    for i in range(6):
+        cl.submit(Request(rid=f"r{i}", prompt_len=256, output_len=8))
+    done = cl.drain()
+    assert len(done) == 6
+    assert all(s.dispatched > 0 for s in cl.stats)
+
+
+# ------------------------------------------------------- cancellation ------
+
+def test_cross_replica_cancel_unwind():
+    """Cancellation routes to the owning replica: cancelling a request
+    mid-flight on replica A never disturbs replica B's in-flight work,
+    and A's pools return to baseline while B's survivor finishes."""
+    cl = ClusterSession(
+        [_sim(policy="layerkv", chunked=True, prefix_cache=True,
+              num_device_blocks=2048, num_host_blocks=1 << 14)
+         for _ in range(2)],
+        router="round_robin")
+    reqs = shared_prefix(4, rate=100.0, scenario="system_prompt",
+                         share_ratio=0.5, prompt_len=640, output_len=64,
+                         seed=5)
+    hs = [cl.submit(r, arrival=r.arrival) for r in reqs]
+    while not all(h._inner is not None for h in hs):
+        assert cl.step()
+    for _ in range(8):
+        cl.step()
+    assert {h.replica for h in hs} == {0, 1}  # round_robin spread them
+    victim = next(h for h in hs if h.replica == 0)
+    assert victim.cancel()
+    assert victim.cancelled
+    assert victim.request in cl.sessions[0].core.cancelled
+    assert not cl.sessions[1].core.cancelled  # B untouched
+    done = cl.drain()
+    assert sorted(r.rid for r in done) == \
+        sorted(h.rid for h in hs if h is not victim)
+    for s in cl.sessions:
+        s.backend.bm.drop_cache()
+        s.backend.bm.check()
+        assert s.backend.bm.num_free(DEVICE) == \
+            s.backend.bm.pools[DEVICE].num_blocks
+
+
+def test_cancel_before_dispatch_never_touches_a_replica():
+    """A future-arrival request cancelled before the shared clock
+    reaches it is unwound inside the cluster: no replica session ever
+    sees it, and metrics still count the cancellation."""
+    cl = ClusterSession([_sim() for _ in range(2)], router="round_robin")
+    run = cl.submit(Request(rid="a", prompt_len=64, output_len=4))
+    parked = cl.submit(Request(rid="b", prompt_len=64, output_len=4),
+                       arrival=1e9)
+    assert parked._inner is None
+    assert parked.cancel()
+    assert parked.cancel() is False          # idempotent
+    assert parked.request.finish_time >= 0.0
+    done = cl.drain()
+    assert [r.rid for r in done] == ["a"] and run.finished
+    assert all(not s.core.cancelled for s in cl.sessions)
+    assert cl.metrics().n_cancelled == 1
+    assert cl.reap(parked).rid == "b"
+    assert cl.reap(run).rid == "a"
+    assert not cl.handles and not cl.cancelled
+
+
+# --------------------------------------------------- session mechanics -----
+
+def test_duplicate_rid_rejected_cluster_wide():
+    cl = ClusterSession([_sim(), _sim()], router="round_robin")
+    cl.submit(Request(rid="dup", prompt_len=64, output_len=4))
+    with pytest.raises(ValueError, match="dup"):
+        # round_robin would have sent it to the OTHER replica; the rid
+        # namespace is still cluster-global
+        cl.submit(Request(rid="dup", prompt_len=64, output_len=4))
+
+
+def test_cluster_stream_yields_every_token_once():
+    cl = ClusterSession([_sim(), _sim()], router="least_loaded")
+    other = cl.submit(Request(rid="x", prompt_len=256, output_len=8))
+    h = cl.submit(Request(rid="y", prompt_len=256, output_len=12))
+    toks = list(cl.stream(h))
+    assert toks == list(range(12))       # sim streams ordinals
+    assert h.take_new() == []
+    cl.drain()
+    assert other.finished
+
+
+def test_cluster_backpressure_and_wedge():
+    """A request no replica can EVER fit raises AdmissionImpossible from
+    the owning replica at drain; other replicas drain first."""
+    cl = ClusterSession(
+        [_sim(policy="vllm", num_device_blocks=LLAMA2_7B.n_layers * 8)
+         for _ in range(2)],
+        router="least_loaded")
+    ok = [cl.submit(Request(rid=f"r{i}", prompt_len=100, output_len=4))
+          for i in range(4)]
+    big = cl.submit(Request(rid="huge", prompt_len=4096, output_len=4))
+    with pytest.raises(AdmissionImpossible, match="huge"):
+        cl.drain()
+    assert all(h.finished for h in ok)   # the wedge stalls nobody else
+    assert not big.finished
+
+
+def test_wedged_replica_does_not_freeze_future_dispatch():
+    """Liveness: a wedged replica's frozen clock must not gate the
+    dispatch of parked FUTURE arrivals — they dispatch when they become
+    the earliest LIVE event, land on the healthy replica (least_loaded
+    sees the wedged queue's block demand), and the wedge itself still
+    surfaces at drain."""
+    cl = ClusterSession(
+        [_sim(policy="vllm", num_device_blocks=LLAMA2_7B.n_layers * 8)
+         for _ in range(2)],
+        router="least_loaded")
+    big = cl.submit(Request(rid="huge", prompt_len=4096, output_len=4))
+    ok = [cl.submit(Request(rid=f"r{i}", prompt_len=100, output_len=4),
+                    arrival=0.5 + 0.01 * i)
+          for i in range(3)]
+    with pytest.raises(AdmissionImpossible, match="huge"):
+        cl.drain()
+    assert all(h.finished for h in ok), \
+        "future arrivals starved behind the wedged replica's clock"
+    assert not big.finished
+
+
+def test_heterogeneous_pool_geometry():
+    """Replicas need not be identical: a cluster over one big and one
+    tiny replica serves a mixed workload, with the big prompts landing
+    where they fit (least_loaded counts blocks, not requests)."""
+    big = _sim(policy="vllm", num_device_blocks=LLAMA2_7B.n_layers * 64)
+    tiny = _sim(policy="vllm", num_device_blocks=LLAMA2_7B.n_layers * 8)
+    cl = ClusterSession([tiny, big], router="least_loaded")
+    done = cl.run([Request(rid=f"r{i}", prompt_len=800, output_len=4,
+                           arrival=0.01 * i) for i in range(3)])
+    assert len(done) == 3
+    # 800 tokens never fits tiny's 8-blocks-per-layer pool
+    assert cl.stats[0].dispatched == 0 and cl.stats[1].dispatched == 3
+
+
+# ------------------------------------------------------- metrics pooling ---
+
+def _metrics(ttft, **kw):
+    base = dict(ttft=ttft, queuing=[0.0] * len(ttft),
+                prefill_lat=[0.1] * len(ttft), tpot=[0.05] * len(ttft),
+                finish_times=list(ttft), tokens_out=10 * len(ttft),
+                makespan=max(ttft, default=0.0), slo_violations=0,
+                n_requests=len(ttft), preemptions=0)
+    base.update(kw)
+    return SimMetrics(**base)
+
+
+def test_merge_pools_raw_series_hand_computed():
+    """Hand-computed pooled ranks: replica A has 49 fast requests, B has
+    one disastrous straggler. Pooled nearest-rank p99 over the 50-sample
+    pool is the ceil(0.99*50) = 50th smallest — the straggler itself —
+    while the average of per-replica p99s ((0.49 + 50)/2 = 25.245) hides
+    half of it. merge() must produce the pooled rank."""
+    a = _metrics([0.010 * (i + 1) for i in range(49)])
+    b = _metrics([50.0], makespan=50.0)
+    assert a.p99_ttft == pytest.approx(0.49)  # ceil(0.99*49)=49th of A
+    m = SimMetrics.merge([a, b])
+    assert m.n_requests == 50
+    assert m.p99_ttft == 50.0                 # pooled rank: the straggler
+    assert (a.p99_ttft + b.p99_ttft) / 2 == pytest.approx(25.245)
+    # pooled mean = (sum_a + 50) / 50, computed by hand:
+    # sum_a = 0.01 * 49*50/2 = 12.25
+    assert m.mean_ttft == pytest.approx((12.25 + 50.0) / 50)
+    assert m.makespan == 50.0 and m.tokens_out == 500
+
+
+def test_merge_counters_and_empty():
+    a = _metrics([1.0], preemptions=2, slo_violations=1,
+                 prefix_hit_tokens=10, prefix_lookup_tokens=20,
+                 chunk_iters=3, max_iter_prefill_tokens=64, n_cancelled=1)
+    b = _metrics([2.0], preemptions=1, prefix_hit_tokens=5,
+                 prefix_lookup_tokens=5, chunk_iters=4,
+                 max_iter_prefill_tokens=32, n_cancelled=2)
+    m = SimMetrics.merge([a, b])
+    assert m.preemptions == 3 and m.slo_violations == 1
+    assert m.prefix_hit_tokens == 15 and m.prefix_lookup_tokens == 25
+    assert m.chunk_iters == 7 and m.max_iter_prefill_tokens == 64
+    assert m.n_cancelled == 3
+    empty = SimMetrics.merge([])
+    assert empty.n_requests == 0 and empty.makespan == 0.0
+    assert empty.mean_ttft == 0.0 and empty.p99_ttft == 0.0
+    # single-part merge is the identity (the cluster-of-1 guarantee
+    # leans on this)
+    assert SimMetrics.merge([a]) == a
+
+
+# ------------------------------------------------------------ real engine --
+
+def _engine(cfg, **kw):
+    kw.setdefault("policy", "layerkv")
+    kw.setdefault("slo_aware", False)
+    kw.setdefault("num_device_blocks", 40)
+    return LayerKVEngine(
+        cfg, None,
+        EngineConfig(num_host_blocks=512, block_size=8, **kw),
+        rng=jax.random.PRNGKey(42))
+
+
+def _workload(cfg, n=4, shared_len=24, seed=0):
+    r0 = np.random.RandomState(seed)
+    pre = [int(x) for x in r0.randint(0, cfg.vocab_size, shared_len)]
+    reqs = []
+    for i in range(n):
+        sfx = [int(x) for x in
+               r0.randint(0, cfg.vocab_size, int(r0.randint(8, 24)))]
+        reqs.append(Request(
+            rid=f"r{i}", prompt_len=shared_len + len(sfx),
+            output_len=int(r0.randint(6, 10)), arrival=float(i) * 1e-6,
+            prompt=pre + sfx))
+    return reqs
+
+
+# each axes arm exercises a different router, so the engine identity
+# sweep covers all four policies without quadrupling its (slow) runtime
+ENGINE_AXES = {
+    "vllm_excl": (dict(policy="vllm", num_device_blocks=1024),
+                  "round_robin"),
+    "layerkv_excl_slo": (dict(slo_aware=True, num_device_blocks=30),
+                         "least_loaded"),
+    "layerkv_chunked": (dict(chunked=True, chunk_size=16), "slo_aware"),
+    "chunked_prefix": (dict(chunked=True, chunk_size=16,
+                            prefix_cache=True), "prefix_affinity"),
+    "chunked_prefix_fused": (dict(chunked=True, chunk_size=16,
+                                  prefix_cache=True, fused=True),
+                             "prefix_affinity"),
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("axes", list(ENGINE_AXES), ids=list(ENGINE_AXES))
+def test_cluster_of_one_engine_tokens_identical(axes):
+    """THE identity guarantee, token side: a 1-replica cluster generates
+    exactly the bare engine's tokens on every scheduling axis."""
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    kw, router = ENGINE_AXES[axes]
+    bare = _engine(cfg, **kw).run(_workload(cfg))
+    out = {r.rid: r.generated for r in bare}
+    cl = ClusterSession([_engine(cfg, **kw)], router=router)
+    done = cl.run(_workload(cfg))
+    assert {r.rid: r.generated for r in done} == out
+
+
+@pytest.mark.slow
+def test_two_engine_replicas_cancel_and_tokens():
+    """Two real-engine replicas with identical weights: every surviving
+    request's tokens match a solo run of the same prompt (dispatch
+    never changes what a replica computes), a cross-replica cancel
+    unwinds cleanly, and both pools drain to baseline."""
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    kw = dict(chunked=True, chunk_size=16, prefix_cache=True)
+    solo = {}
+    for r in _workload(cfg, n=5, seed=2):
+        solo[r.rid] = _engine(cfg, **kw).run([r])[0].generated
+
+    cl = ClusterSession([_engine(cfg, **kw), _engine(cfg, **kw)],
+                        router="round_robin")
+    hs = [cl.submit(r, arrival=r.arrival)
+          for r in _workload(cfg, n=5, seed=2)]
+    for _ in range(3):
+        cl.step()
+    victim = hs[-1]
+    assert victim.cancel()
+    done = cl.drain()
+    assert len(done) == 4
+    assert {h.replica for h in hs if h is not victim} == {0, 1}
+    for r in done:
+        assert r.generated == solo[r.rid]
+    for s in cl.sessions:
+        s.backend.bm.drop_cache()
+        s.backend.bm.check()
+        assert s.backend.bm.num_free(DEVICE) == \
+            s.backend.bm.pools[DEVICE].num_blocks

@@ -401,3 +401,64 @@ def test_session_cancel_accounting_property(schedule):
     assert sim.bm.num_free(DEVICE) == sim.bm.pools[DEVICE].num_blocks
     assert sim.bm.num_free(HOST) == sim.bm.pools[HOST].num_blocks
     assert not sim.bm.live_requests()
+
+
+# ------------------------------------------- cluster routing invariants ----
+
+@st.composite
+def routing_schedule(draw):
+    """Replica count, routing policy, and a random cancel schedule."""
+    n = draw(st.integers(8, 14))
+    n_rep = draw(st.integers(1, 4))
+    router = draw(st.sampled_from(
+        ["round_robin", "least_loaded", "prefix_affinity", "slo_aware"]))
+    cancels = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, 20)),
+        min_size=0, max_size=4, unique_by=lambda c: c[0]))
+    return n, n_rep, router, sorted(cancels, key=lambda c: c[1])
+
+
+@given(routing_schedule())
+@settings(max_examples=20, deadline=None)
+def test_cluster_no_request_lost_or_duplicated_property(schedule):
+    """ANY routing policy x replica count x cancel schedule: every
+    submitted request lands on exactly ONE replica (or the cluster's
+    pre-dispatch cancel list), none is lost or served twice, and every
+    replica's pools return to baseline after drain."""
+    from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+    from repro.serving.cluster import ClusterSession
+    from repro.serving.sim import ServingSimulator, SimConfig
+    from repro.serving.workload import multi_tenant
+
+    n, n_rep, router, cancels = schedule
+    cl = ClusterSession(
+        [ServingSimulator(LLAMA2_7B, L20, SimConfig(
+            policy="layerkv", chunked=True, prefix_cache=True,
+            num_device_blocks=2048, num_host_blocks=1 << 14))
+         for _ in range(n_rep)],
+        router=router)
+    reqs = multi_tenant(n, rate=40.0, n_tenants=3, prompt_len=320,
+                        output_len=32, seed=17)
+    hs = [cl.submit(r, arrival=r.arrival) for r in reqs]
+    steps = 0
+    for victim, at_step in cancels:
+        while steps < at_step and cl.step():
+            steps += 1
+        hs[victim].cancel()
+        for s in cl.sessions:
+            s.backend.bm.check()   # invariants hold at every cancel point
+    cl.drain()
+    done = [r for s in cl.sessions for r in s.core.done]
+    cncl = [r for s in cl.sessions for r in s.core.cancelled] \
+        + cl.cancelled
+    seen = sorted(r.rid for r in done + cncl)
+    assert seen == sorted(r.rid for r in reqs)
+    assert len(done) == len(hs) - len(cncl)
+    assert all(h.finished or h.cancelled for h in hs)
+    for s in cl.sessions:
+        bm = s.backend.bm
+        bm.drop_cache()
+        bm.check()
+        assert bm.num_free(DEVICE) == bm.pools[DEVICE].num_blocks
+        assert bm.num_free(HOST) == bm.pools[HOST].num_blocks
+        assert not bm.live_requests()
