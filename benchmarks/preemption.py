@@ -1,0 +1,181 @@
+"""Deadline-aware KV competition benchmark: interactive-vs-batch mix
+under device-pool overload, three scheduler arms per load level.
+
+The workload is the KV-competition shape of arXiv 2503.13773 distilled
+to its mechanism: WAVES of long-output batch requests (lax SLOs) arrive
+near-simultaneously and park their growing KV on the small device pool,
+while a Poisson stream of short interactive requests (tight first-token
+deadlines, priority 1) lands mid-wave and must compete for blocks. Load
+is swept as the batch wave size — past ~6 concurrent batch decoders the
+pool is saturated when the interactive request arrives.
+
+Arms (same traces, three schedulers):
+
+  off       FCFS admission, no preemption — the pre-PR scheduler;
+  deadline  `deadline` admission only: EDF with bounded priority aging
+            reorders the waiting queue but never touches running work;
+  preempt   deadline admission + lossless preemption: the controller
+            pauses batch KV to HOST (layer-wise, zero recompute) and
+            resumes it when the interactive burst passes.
+
+What the committed artifact (`BENCH_preemption.json`, 24 batch + 12
+interactive x 3 seeds, llama2-7b @ L20, 160-block pool) shows:
+
+  * at overload (wave 6/8) the interactive deadline-violation rate
+    falls 0.67/0.72 (off) -> 0.19 (deadline ordering) -> 0.00
+    (preemption), p99 interactive TTFT from ~13s to <1s;
+  * batch goodput pays < 1% for it (129.5 vs 130.4 tok/s at wave 6):
+    paused KV resumes losslessly, so the only batch cost is the PCIe
+    round trip, priced against victims' own deadline slack;
+  * preemptions > 0 only in the `preempt` arm, and every request in
+    every arm still finishes its full output (losslessness is asserted
+    here, not just in the test suite).
+
+    PYTHONPATH=src python benchmarks/preemption.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import sys
+import time
+from typing import List, Optional
+
+if __package__ in (None, ""):  # `python benchmarks/preemption.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.serving.costmodel import L20
+from repro.serving.request import Request
+from repro.serving.scheduler import ServeConfig
+from repro.serving.sim import ServingSimulator, SimMetrics
+
+NUM_DEVICE_BLOCKS = 160        # saturated by ~6 concurrent batch decoders
+WAVE_SIZES = [4, 6, 8]         # load sweep: batch requests per wave
+SEEDS = (3, 7, 13)             # pooled per arm (SimMetrics.merge)
+ARMS = {
+    "off": dict(admission="fcfs", preemption=False),
+    "deadline": dict(admission="deadline", preemption=False),
+    "preempt": dict(admission="deadline", preemption=True),
+}
+
+
+def kv_competition(n_batch: int, n_interactive: int, wave_size: int,
+                   seed: int, wave_every: float = 6.0) -> List[Request]:
+    """Batch waves + a tight-deadline interactive Poisson stream.
+
+    Batch: `wave_size` requests arrive within 0.3s of each wave start
+    (prompt ~400 tokens +-25%, 300 output tokens, lax 60s/10s SLOs) —
+    long decodes whose KV occupies the pool. Interactive: Poisson at
+    1 req/s from t=2 (prompt ~300 +-25%, 40 output tokens, 1s
+    first-token deadline, priority 1) — landing while a wave holds the
+    blocks. Arrival jitter and prompt lengths re-draw per seed."""
+    rng = random.Random(seed)
+    reqs: List[Request] = []
+    i = wave = 0
+    while i < n_batch:
+        base = wave * wave_every
+        for _ in range(min(wave_size, n_batch - i)):
+            reqs.append(Request(
+                rid=f"b{i}", prompt_len=int(400 * rng.uniform(0.75, 1.25)),
+                output_len=300, arrival=base + rng.uniform(0.0, 0.3),
+                priority=0, ttft_slo=60.0, tpot_slo=10.0))
+            i += 1
+        wave += 1
+    t = 2.0
+    for j in range(n_interactive):
+        t += rng.expovariate(1.0)
+        reqs.append(Request(
+            rid=f"i{j}", prompt_len=int(300 * rng.uniform(0.75, 1.25)),
+            output_len=40, arrival=t, priority=1,
+            ttft_slo=1.0, tpot_slo=0.5))
+    reqs.sort(key=lambda r: (r.arrival, r.rid))
+    return reqs
+
+
+def _one(arm_kw: dict, wave_size: int, n_batch: int, n_interactive: int,
+         seeds=SEEDS) -> dict:
+    parts, n_preempted, n_resumed = [], 0, 0
+    for seed in seeds:
+        sc = ServeConfig.for_sim(policy="layerkv", chunked=True,
+                                 num_device_blocks=NUM_DEVICE_BLOCKS,
+                                 block_size=16, **arm_kw)
+        sim = ServingSimulator(LLAMA2_7B, L20, sc)
+        m = sim.run(kv_competition(n_batch, n_interactive, wave_size, seed))
+        # losslessness is part of the benchmark's claim, not just CI's
+        assert all(r.tokens_out == r.output_len for r in sim.done)
+        sim.finish()
+        parts.append(m)
+        n_preempted += sim.core.n_preempted
+        n_resumed += sim.core.n_resumed
+    m = SimMetrics.merge(parts)
+    rep = m.class_report()
+    return {
+        "preemptions": n_preempted,
+        "resumes": n_resumed,
+        # SimMetrics.preemptions pools recompute + lossless events; the
+        # lossless ones are counted separately above
+        "recompute_preemptions": m.preemptions - n_preempted,
+        "n_finished": m.n_requests,
+        "goodput_tok_s": m.goodput,
+        "by_class": {
+            {0: "batch", 1: "interactive"}[k]: {
+                "n": v["n"],
+                "mean_ttft_s": v["mean_ttft"],
+                "p99_ttft_s": v["p99_ttft"],
+                "p99_tbt_s": v["p99_tbt"],
+                "deadline_violation_rate": v["deadline_violation_rate"],
+                "goodput_tok_s": v["goodput"],
+            } for k, v in rep.items()},
+    }
+
+
+def main(n_requests: int = 100, smoke: bool = False,
+         json_out: Optional[str] = None) -> None:
+    waves = [6] if smoke else WAVE_SIZES
+    seeds = SEEDS[:1] if smoke else SEEDS
+    n_batch = min(max(n_requests * 2 // 3, 6), 24)
+    n_int = min(max(n_requests - n_batch, 3), 12)
+    rows: dict = {}
+    for wave in waves:
+        t0 = time.perf_counter()
+        arms = {name: _one(kw, wave, n_batch, n_int, seeds=seeds)
+                for name, kw in ARMS.items()}
+        us = (time.perf_counter() - t0) * 1e6
+        rows[wave] = arms
+        off = arms["off"]["by_class"].get("interactive", {})
+        pre = arms["preempt"]["by_class"].get("interactive", {})
+        bat0 = arms["off"]["by_class"].get("batch", {})
+        bat2 = arms["preempt"]["by_class"].get("batch", {})
+        emit(f"preemption.wave{wave}", us,
+             f"off_int_viol={off.get('deadline_violation_rate', 0):.2f};"
+             f"preempt_int_viol={pre.get('deadline_violation_rate', 0):.2f};"
+             f"off_int_p99ttft_s={off.get('p99_ttft_s', 0):.2f};"
+             f"preempt_int_p99ttft_s={pre.get('p99_ttft_s', 0):.2f};"
+             f"preemptions={arms['preempt']['preemptions']};"
+             f"batch_goodput_ratio="
+             f"{bat2.get('goodput_tok_s', 0) / max(bat0.get('goodput_tok_s', 0), 1e-9):.3f}")
+
+    if json_out:
+        doc = {
+            "benchmark": "preemption_kv_competition",
+            "model": LLAMA2_7B.arch_id,
+            "hw": L20.name,
+            "num_device_blocks": NUM_DEVICE_BLOCKS,
+            "n_batch": n_batch,
+            "n_interactive": n_int,
+            "workload": "kv_competition waves (see benchmarks/preemption.py)",
+            "seeds": list(seeds),
+            "arms": {k: dict(v) for k, v in ARMS.items()},
+            "by_wave_size": rows,
+        }
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    main(n_requests=36, json_out="BENCH_preemption.json")

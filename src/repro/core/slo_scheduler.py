@@ -78,6 +78,32 @@ class SLOScheduler:
                 break
         return n
 
+    # ------------------------------------------------- preemption pricing
+    def preempt_slack(self, r: Request, now: float) -> float:
+        """Deadline slack of one request, for victim selection:
+
+          * not yet decoding — first-token headroom, its effective
+            deadline minus `now` (a prefill-phase victim loses TTFT);
+          * decoding — its own Eq.1 T_allow (a decode-phase victim loses
+            inter-token time against its TPOT SLO).
+
+        Negative slack means the request is already past its budget."""
+        if r.first_token_time < 0:
+            return r.effective_deadline - now
+        return self.allow_prefill_budget([r], now)
+
+    def victim_affordable(self, r: Request, now: float,
+                          resume_bytes: float, offload_bw: float) -> bool:
+        """Can `r` absorb being preempted without blowing its own SLO?
+        The price of pausing r is the h2d promotion it must later pay to
+        resume (its whole KV crossing the offload link back); affordable
+        means that reload time fits inside r's current deadline slack.
+        The preemption controller prefers affordable victims and touches
+        unaffordable ones only for a preemptor that is itself already
+        past its deadline."""
+        return self.preempt_slack(r, now) \
+            >= resume_bytes / max(offload_bw, 1e-9)
+
     # ------------------------------------------------- chunked prefill budget
     def max_chunk_tokens(self, decoding: Sequence[Request], now: float,
                          cap: int, floor: int = 16) -> int:

@@ -5,10 +5,12 @@ generated token is printed as its iteration produces it.
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
         --policy layerkv --requests 16 --device-blocks 64
 
-All five scheduling axes are exposed: --policy, --no-slo-aware,
---chunked, --fused, --prefix-cache (plus --chunk-size for the chunked
-per-iteration token budget) and the admission ordering (--admission
-fcfs|prefix_aware). `--replicas N` serves through a `ClusterSession`
+All six scheduling axes are exposed: --policy, --no-slo-aware,
+--chunked, --fused, --prefix-cache, --preemption (plus --chunk-size for
+the chunked per-iteration token budget), the admission ordering
+(--admission fcfs|prefix_aware|deadline), and --interactive-every to
+tag every k-th request as a priority-1 interactive request with a tight
+deadline. `--replicas N` serves through a `ClusterSession`
 over N identical engines with a pluggable dispatch policy (--router
 round_robin|least_loaded|prefix_affinity|slo_aware); a cluster of 1 is
 bit-identical to a bare session. Real JAX execution with paged KV
@@ -40,8 +42,16 @@ def main():
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="per-iteration prefill token budget (chunked)")
     ap.add_argument("--admission", default="fcfs",
-                    choices=["fcfs", "prefix_aware"],
+                    choices=["fcfs", "prefix_aware", "deadline"],
                     help="waiting-queue admission ordering")
+    ap.add_argument("--preemption", action="store_true",
+                    help="lossless priority preemption: pause "
+                         "lower-priority KV to HOST, resume later "
+                         "(pairs with --admission deadline)")
+    ap.add_argument("--interactive-every", type=int, default=0,
+                    help="every k-th request is interactive: priority 1, "
+                         "TTFT SLO (and deadline) tightened 4x (0 = all "
+                         "batch)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind the cluster router")
     ap.add_argument("--router", default="round_robin",
@@ -86,9 +96,13 @@ def main():
     for i in range(args.requests):
         t += rng.exponential(1.0 / args.rate)
         sfx = args.prompt_len - len(shared)
+        interactive = args.interactive_every > 0 \
+            and i % args.interactive_every == 0
         reqs.append(Request(
             rid=f"r{i}", prompt_len=args.prompt_len,
             output_len=args.output_len, arrival=t,
+            priority=1 if interactive else 0,
+            ttft_slo=3.0 / 4 if interactive else 3.0,
             prompt=shared + [int(x) for x in
                              rng.randint(0, cfg.vocab_size, sfx)]))
 
@@ -98,6 +112,7 @@ def main():
         chunked=args.chunked or args.fused,
         fused=args.fused,
         prefix_cache=args.prefix_cache,
+        preemption=args.preemption,
         admission=args.admission,
         max_prefill_tokens=args.chunk_size,
         num_device_blocks=args.device_blocks,
@@ -125,8 +140,11 @@ def main():
     ttfts = [r.ttft for r in done]
     print(f"policy={args.policy} chunked={args.chunked or args.fused} "
           f"fused={args.fused} prefix_cache={args.prefix_cache} "
-          f"admission={args.admission} replicas={args.replicas} "
-          f"router={args.router}")
+          f"preemption={args.preemption} admission={args.admission} "
+          f"replicas={args.replicas} router={args.router}")
+    if args.preemption:
+        print(f"preemptions={sum(e.core.n_preempted for e in engines)} "
+              f"resumes={sum(e.core.n_resumed for e in engines)}")
     print(f"requests={len(done)} "
           f"mean_ttft={statistics.mean(ttfts)*1e3:.1f}ms "
           f"p99_ttft={sorted(ttfts)[-1]*1e3:.1f}ms")

@@ -13,6 +13,9 @@ from repro.configs.base import ModelConfig
 
 @dataclasses.dataclass(frozen=True)
 class HWProfile:
+    """Accelerator price sheet the cost model reads (units per chip;
+    bandwidths in bytes/s). Instances below (L20, A100, TPU_V5E, ...)
+    are the `hw` argument of both serving backends."""
     name: str
     flops_per_s: float          # dense (bf16/fp16) peak per chip
     hbm_bw: float               # bytes/s per chip
@@ -45,6 +48,10 @@ PROFILES = {"L20": L20, "TPUv5e": TPU_V5E}
 
 @dataclasses.dataclass
 class CostModel:
+    """Analytic latency/size model (paper Eq.3 / Eq.4): prices prefill
+    and decode steps from model shape + `HWProfile`, derated by
+    achievable MFU/MBU. The simulator uses it to advance the clock; the
+    scheduler uses it for admission budgets and preemption pricing."""
     cfg: ModelConfig
     hw: HWProfile
     alpha: float = 1.15         # Eq.3 empirical correction (profiling fudge)

@@ -60,6 +60,12 @@ def EngineConfig(*, chunk_size: Optional[int] = None, **kw) -> ServeConfig:
 
 
 class LayerKVEngine(CoreDelegateMixin):
+    """The real serving backend: drives the shared `SchedulerCore`
+    against actual JAX forwards (`PagedExecutor`) and physical
+    device<->host block movement. Accepts the same `ServeConfig` as the
+    simulator; wall-clock is measured, not modeled. Token streams are
+    deterministic for a fixed (params, prompts, config)."""
+
     produces_token_ids = True    # Request.generated carries real tokens
 
     def __init__(self, cfg: ModelConfig, params=None,
@@ -155,6 +161,7 @@ class LayerKVEngine(CoreDelegateMixin):
         r.prefill_start = r.prefill_start if r.prefill_start >= 0 else self.now
         r.first_token_time = self.now
         r.tokens_out = 1
+        r.note_token(self.now)
         r.phase = Phase.DECODE
         self.decoding.append(r)
         return True
@@ -395,6 +402,8 @@ class LayerKVEngine(CoreDelegateMixin):
             return False
         sel = self._select_runnable()
         self.now += self._run_decode(sel)
+        for r in sel:
+            r.note_token(self.now)
         self._retire_finished()
         return True
 
@@ -433,11 +442,14 @@ class LayerKVEngine(CoreDelegateMixin):
             dec_time = self._run_decode(sel) if sel else 0.0
             self.now += max(chunk_time, dec_time)
 
+        for r in sel:
+            r.note_token(self.now)
         # requests whose final chunk just ran get their first token now
         for r, _ in chunk_work:
             if r.prefill_complete and r.phase is Phase.PREFILL:
                 r.first_token_time = self.now
                 r.tokens_out = 1
+                r.note_token(self.now)
                 r.phase = Phase.DECODE
                 self.prefilling.remove(r)
                 self.decoding.append(r)

@@ -77,6 +77,12 @@ class MixedDecode:
 
 
 class PagedExecutor:
+    """Owns the physical KV pools (device + host buffers, paged in
+    `block_size`-token blocks) and runs model forwards against them:
+    batched prefill, paged decode, chunked prefill, and the fused
+    `mixed_step`. Pure mechanism — which blocks a request may touch is
+    decided upstream by `SchedulerCore`/`LayerwiseBlockManager`."""
+
     def __init__(self, cfg: ModelConfig, params, num_device_blocks: int,
                  num_host_blocks: int, block_size: int, rng=None):
         assert cfg.family in ("dense", "moe"), cfg.family

@@ -7,15 +7,21 @@ from typing import List, Optional
 
 
 class Phase(enum.Enum):
+    """Request lifecycle states, shared by both backends."""
     QUEUED = "queued"
     PREFILL = "prefill"
     DECODE = "decode"
+    PAUSED = "paused"                # preempted: KV parked on HOST, will
+    #                                  resume losslessly (no recompute)
     FINISHED = "finished"
     CANCELLED = "cancelled"          # unwound by ServingSession.cancel
 
 
 @dataclasses.dataclass
 class Request:
+    """One serving request plus its live scheduling state. SLO fields
+    are in seconds; `priority`/`deadline` feed the `deadline` admission
+    policy and the preemption controller (units in field comments)."""
     rid: str
     prompt_len: int
     output_len: int                  # target generation length (EOS position)
@@ -23,6 +29,14 @@ class Request:
     tpot_slo: float = 0.2            # seconds/token (paper Fig.8: 200 ms)
     ttft_slo: float = 3.0            # seconds (paper Fig.8: 3000 ms)
     prompt: Optional[list] = None    # token ids (real engine)
+    priority: int = 0                # class rank; HIGHER preempts lower
+    #                                  (0 = batch, 1 = interactive by
+    #                                  convention). Only the 'deadline'
+    #                                  admission policy and the preemption
+    #                                  controller read it.
+    deadline: float = -1.0           # absolute first-token deadline
+    #                                  (seconds on the virtual clock);
+    #                                  < 0 derives arrival + ttft_slo
 
     phase: Phase = Phase.QUEUED
     prefill_start: float = -1.0
@@ -31,6 +45,9 @@ class Request:
     tokens_out: int = 0
     decode_start: float = -1.0
     generated: List[int] = dataclasses.field(default_factory=list)
+    n_preempted: int = 0             # times this request was paused
+    last_token_time: float = -1.0    # stamp of the newest emitted token
+    max_tbt: float = 0.0             # widest gap between adjacent tokens
 
     # --- chunked-prefill progress (scheduler-owned) --------------------------
     prefill_done: int = 0            # prompt tokens whose KV is cached
@@ -46,6 +63,26 @@ class Request:
     @property
     def prefill_complete(self) -> bool:
         return self.prefill_done >= self.prompt_len
+
+    # --- deadline / preemption ----------------------------------------------
+    @property
+    def effective_deadline(self) -> float:
+        """Absolute time the first token is due: the explicit `deadline`
+        when set, else `arrival + ttft_slo` (so every request has one and
+        the deadline policy degrades gracefully to TTFT-SLO ordering)."""
+        return self.deadline if self.deadline >= 0.0 \
+            else self.arrival + self.ttft_slo
+
+    def deadline_met(self) -> bool:
+        return self.first_token_time >= 0 \
+            and self.first_token_time <= self.effective_deadline
+
+    def note_token(self, now: float) -> None:
+        """Stamp a token emission at `now`; maintains the max inter-token
+        gap (TBT) — the tail metric preemption trades against."""
+        if self.last_token_time >= 0.0:
+            self.max_tbt = max(self.max_tbt, now - self.last_token_time)
+        self.last_token_time = now
 
     # --- derived metrics -----------------------------------------------------
     @property

@@ -26,7 +26,11 @@ replica index per request at its ARRIVAL time. Four built-ins:
   slo_aware        route to the replica whose Alg.1 slack admits the
                    request soonest (`SchedulerCore.admit_eta`: queued
                    Eq.3 prefill work plus the part of the request's own
-                   prefill the Eq.1 decode slack cannot absorb).
+                   prefill the Eq.1 decode slack cannot absorb). With
+                   deadline admission the ETA is preemption-adjusted:
+                   only same-or-higher-priority queued work counts,
+                   since lower-priority work orders behind the request
+                   (and with preemption on can even be paused for it).
 
 Every policy breaks ties toward the lowest replica index, so routing is
 deterministic — the cluster benchmarks and the cluster-of-1 identity
@@ -147,8 +151,11 @@ class SLOAwareRouting(RoutingPolicy):
     """Route to the replica whose Alg.1 slack admits the request
     soonest. `admit_eta` prices the Eq.3 prefill work queued ahead of
     the request plus whatever part of its own prefill the decode batch's
-    Eq.1 slack cannot absorb; KV-block demand breaks ETA ties (two
-    empty replicas -> the emptier pool)."""
+    Eq.1 slack cannot absorb — under deadline admission only
+    same-or-higher-priority queued work counts (lower-priority work
+    orders behind the request, and with preemption on can be paused for
+    it); KV-block demand breaks ETA ties (two empty replicas -> the
+    emptier pool)."""
 
     name = "slo_aware"
 

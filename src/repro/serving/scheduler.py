@@ -16,11 +16,15 @@ Three public pieces:
   ServeConfig      ONE config for both backends (EngineConfig/SimConfig
                    are thin deprecation shims over it);
   AdmissionPolicy  pluggable ordering of the waiting queue — `fcfs`
-                   (paper semantics) and `prefix_aware` (cache-hitting
+                   (paper semantics), `prefix_aware` (cache-hitting
                    requests admit first under congestion, with an aging
-                   bound so misses never starve);
-  SchedulerCore    the shared state machine: waiting/prefilling/decoding
-                   queues, admission, allocation, chunk assembly, and the
+                   bound so misses never starve), and `deadline`
+                   (earliest-virtual-deadline-first across priority
+                   classes, the order the preemption controller serves);
+  SchedulerCore    the shared state machine: waiting/prefilling/decoding/
+                   paused queues, admission, allocation, chunk assembly,
+                   lossless preemption (pause = demote KV layer-wise to
+                   HOST, resume = promote back, zero recompute), and the
                    cancellation path that unwinds everything a request
                    can leave in flight.
 """
@@ -57,27 +61,42 @@ class ServeConfig:
     chunked: bool = False           # chunked prefill + mixed batching
     prefix_cache: bool = False      # ref-counted cross-request sharing
     fused: bool = False             # ONE forward/iteration (chunked only)
+    preemption: bool = False        # lossless priority preemption: when a
+    #                                 higher-priority request cannot pass
+    #                                 the device-block gate, demote victim
+    #                                 KV layer-wise to HOST and resume it
+    #                                 later with NO recompute. Off (the
+    #                                 default) is bit-identical to the
+    #                                 pre-preemption scheduler. Pairs
+    #                                 naturally with admission='deadline'.
     admission: str = "fcfs"         # waiting-queue order: 'fcfs' |
-    #                                 'prefix_aware' (see AdmissionPolicy)
-    admission_age_frac: float = 0.5  # prefix_aware aging bound: a HIT is
-    #                                 ordered by a virtual arrival this
-    #                                 fraction of its TTFT SLO early, so
-    #                                 a miss is only ever overtaken by
-    #                                 hits arriving within that window
-    #                                 after it (bounded reordering, no
-    #                                 starvation)
+    #                                 'prefix_aware' | 'deadline'
+    #                                 (see AdmissionPolicy)
+    admission_age_frac: float = 0.5  # aging bound, unit: fraction of the
+    #                                 request's own TTFT SLO.
+    #                                 prefix_aware: a HIT is ordered by a
+    #                                 virtual arrival this fraction of its
+    #                                 TTFT SLO early, so a miss is only
+    #                                 ever overtaken by hits arriving
+    #                                 within that window after it (bounded
+    #                                 reordering, no starvation).
+    #                                 deadline: each priority level above
+    #                                 0 moves the virtual deadline this
+    #                                 fraction of the request's TTFT SLO
+    #                                 earlier (same bounded-overtaking
+    #                                 argument, per class)
     # ---- pool geometry / batching (shared) -------------------------------
     num_device_blocks: int = 0      # 0 = backend default (engine: 128,
     #                                 sim: derive from HW memory)
-    num_host_blocks: int = 1024
-    block_size: int = 16
-    max_batch_size: int = 64
+    num_host_blocks: int = 1024     # host (offload) KV pool size, blocks
+    block_size: int = 16            # tokens per paged-KV block
+    max_batch_size: int = 64        # in-flight (prefill+decode) requests
     max_prefill_tokens: int = 8192  # per-iteration prefill token budget
     #                                 (chunked mode chunk cap; exclusive
     #                                 sim batched-prefill cap)
     chunk_floor: int = 8            # min chunk tokens/iter (progress)
     # ---- engine-only -----------------------------------------------------
-    max_tokens_per_request: int = 4096
+    max_tokens_per_request: int = 4096  # generation cap per request, tokens
     # ---- sim-only --------------------------------------------------------
     proactive: bool = True          # Eq.5 forecast eviction
     collective_reserve_frac: float = 0.0  # §3.1.3 all-reduce reservation
@@ -123,10 +142,13 @@ class LoadStats:
 
     n_waiting: int        # requests queued, not yet prefilling
     n_inflight: int       # prefilling + decoding
-    queued_blocks: int    # min device blocks the waiting queue still needs
+    queued_blocks: int    # min device blocks the waiting queue still
+    #                       needs, plus the device blocks paused
+    #                       (preempted) requests need to resume
     active_blocks: int    # device blocks held by live allocations
     free_blocks: int      # allocatable now (incl. reclaimable cache)
     total_blocks: int     # device pool size
+    n_paused: int = 0     # preempted requests parked on HOST
 
     @property
     def kv_demand(self) -> int:
@@ -211,15 +233,59 @@ class PrefixAwareAdmission(AdmissionPolicy):
         return [r for _, _, r in keyed]
 
 
+class DeadlineAdmission(AdmissionPolicy):
+    """Earliest-virtual-deadline-first across priority classes (the
+    SLO-attainment ordering of "Mitigating KV Cache Competition",
+    arXiv 2503.13773). Each request is keyed by
+
+        vdl = deadline_for_ordering - priority * age_frac * ttft_slo
+
+    so a higher class's deadline is treated as `age_frac` of its own
+    TTFT SLO earlier per priority level. The deadline used for ordering
+    is the request's effective first-token deadline, except for PAUSED
+    requests that already emitted tokens — their first-token deadline is
+    history, so their *next-token* due time (last token + TPOT SLO)
+    keys the resume instead.
+
+    Anti-starvation (bounded aging): a batch request (priority 0) is
+    only ever overtaken by higher-class requests whose boosted virtual
+    deadline still precedes its own — i.e. requests arriving within a
+    bounded window after it. Past that window every new arrival orders
+    BEHIND the batch request, whose real deadline keeps aging, so under
+    any finite load it reaches the head and (admission being
+    head-of-line for waiting requests) admits as soon as in-flight work
+    frees blocks — no request starves forever."""
+
+    name = "deadline"
+
+    def __init__(self, age_frac: float = 0.5):
+        self.age_frac = age_frac
+
+    def order(self, waiting, now, core):
+        keyed: List[Tuple[float, float, int, Request]] = []
+        for i, r in enumerate(waiting):
+            if r.phase is Phase.PAUSED and r.last_token_time >= 0.0:
+                dl = r.last_token_time + r.tpot_slo
+            else:
+                dl = r.effective_deadline
+            vdl = dl - r.priority * self.age_frac * r.ttft_slo
+            keyed.append((vdl, r.arrival, i, r))
+        keyed.sort(key=lambda k: k[:3])
+        return [r for _, _, _, r in keyed]
+
+
 ADMISSION_POLICIES = {
     FCFSAdmission.name: FCFSAdmission,
     PrefixAwareAdmission.name: PrefixAwareAdmission,
+    DeadlineAdmission.name: DeadlineAdmission,
 }
 
 
 def make_admission_policy(sc: ServeConfig) -> AdmissionPolicy:
     if sc.admission == PrefixAwareAdmission.name:
         return PrefixAwareAdmission(sc.admission_age_frac)
+    if sc.admission == DeadlineAdmission.name:
+        return DeadlineAdmission(sc.admission_age_frac)
     return ADMISSION_POLICIES[sc.admission]()
 
 
@@ -263,8 +329,11 @@ class SchedulerCore:
         self.waiting: deque[Request] = deque()
         self.prefilling: List[Request] = []   # chunked: in-flight chunks
         self.decoding: List[Request] = []
+        self.paused: List[Request] = []       # preempted, KV parked on HOST
         self.done: List[Request] = []
         self.cancelled: List[Request] = []
+        self.n_preempted = 0                  # lossless preemption events
+        self.n_resumed = 0
         # ---- per-request bookkeeping --------------------------------------
         self.host_layers: Dict[str, int] = {}  # layers resident on host
         self.plans: Dict[str, object] = {}     # rid -> Eq.4 OffloadPlan
@@ -279,7 +348,7 @@ class SchedulerCore:
         return len(self.prefilling) + len(self.decoding)
 
     def idle(self) -> bool:
-        return not (self.prefilling or self.decoding)
+        return not (self.prefilling or self.decoding or self.paused)
 
     def _blocks(self, tokens: int) -> int:
         return self.bm.blocks_for_tokens(tokens)
@@ -333,12 +402,14 @@ class SchedulerCore:
         schedule (the cluster-of-1 identity tests pin this)."""
         total = self.bm.pools[DEVICE].num_blocks
         free = self.bm.num_free(DEVICE)
-        queued = sum(self.device_need(r) for r in self.waiting)
+        queued = sum(self.device_need(r) for r in self.waiting) \
+            + sum(self.resume_need(r) for r in self.paused)
         return LoadStats(n_waiting=len(self.waiting),
                          n_inflight=self.in_flight(),
                          queued_blocks=queued,
                          active_blocks=total - free,
-                         free_blocks=free, total_blocks=total)
+                         free_blocks=free, total_blocks=total,
+                         n_paused=len(self.paused))
 
     def admit_eta(self, r: Request, now: float) -> float:
         """Estimated delay before this replica's Alg.1 slack admits `r`
@@ -347,14 +418,24 @@ class SchedulerCore:
         fit in the decode batch's remaining Eq.1 slack. Prefix-cache hits
         price only their uncached suffix, exactly as admission does. With
         slo_aware off (or the vllm policy) the queue term alone orders
-        replicas."""
+        replicas.
+
+        Preemption-adjusted: under the `deadline` admission ordering,
+        waiting work of a strictly LOWER priority class never sits ahead
+        of `r` (it orders behind, and with preemption on its running
+        siblings can even be paused for r) — so only same-or-higher
+        class queued work counts toward r's ETA. This is what `slo_aware`
+        routing sees: an overloaded-with-batch replica still advertises
+        a near-zero ETA to an interactive request."""
         t = max(now, self.now)
 
         def _cost(q: Request) -> float:
             c = self.cached_hint(q)
             return self.cost.chunk_prefill_time(q.prompt_len - c, c)
 
-        queued = sum(_cost(q) for q in self.waiting)
+        ahead = [q for q in self.waiting if q.priority >= r.priority] \
+            if self.sc.admission == "deadline" else self.waiting
+        queued = sum(_cost(q) for q in ahead)
         if not (self.sc.policy == "layerkv" and self.sc.slo_aware):
             return queued
         budget = self.slo.allow_prefill_budget(self.decoding, t)
@@ -431,6 +512,161 @@ class SchedulerCore:
             self.bm.cache.count(r.prompt_len, 0)  # admitted as a miss
         return retain, off
 
+    # ----------------------------------------------------------- preemption
+    def _migrate_layer(self, rid: str, layer: int, to_pool: str,
+                       kind: str, now: float) -> None:
+        """Move one layer's KV across tiers for pause/resume: the block
+        manager remaps (detach: blocks shared through the prefix cache
+        are copied out, never pulled from under another sharer), the
+        backend hook moves the real bytes, and the transfer ledger is
+        charged once per layer."""
+        a = self.bm.allocation(rid, layer)
+        nbytes = self.cost.kv_bytes(a.num_tokens, 1)
+        from_pool = a.pool
+        src, dst = self.bm.move_layer(rid, layer, to_pool, detach=True)
+        if self.physical_copy is not None:
+            for s, d in zip(src, dst):
+                self.physical_copy(from_pool, s, to_pool, d)
+        self.off.ledger.submit(now, nbytes, kind)
+        if kind == "reload":
+            self.reload_bytes_migrated += nbytes
+
+    def reclaimable_blocks(self, r: Request) -> int:
+        """Device blocks that preempting `r` would actually free: blocks
+        shared through the prefix cache are detached (copied out, the
+        device original stays with its other sharers) and free nothing."""
+        n = 0
+        for l in self.bm.layers_on(r.rid, DEVICE):
+            for b in self.bm.allocation(r.rid, l).blocks:
+                e = self.bm.cache.lookup(DEVICE, b) if self.bm.cache \
+                    else None
+                if e is None or e.ref <= 1:
+                    n += 1
+        return n
+
+    def total_host_blocks(self, r: Request) -> int:
+        """Blocks a request currently holds on the HOST tier."""
+        return sum(len(self.bm.allocation(r.rid, l).blocks)
+                   for l in self.bm.layers_on(r.rid, HOST))
+
+    def resume_need(self, r: Request) -> int:
+        """MINIMUM device blocks to resume a paused request. Under the
+        request-wise `vllm` policy that is its whole KV (decode needs
+        every layer device-resident); under `layerkv` it is one layer's
+        footprint — the rest stays host-resident and streams/promotes
+        through the same §3.1.1 machinery every offloaded request uses."""
+        if self.sc.policy == "vllm":
+            return self.total_host_blocks(r)
+        return self._blocks(r.prompt_len + r.tokens_out)
+
+    def preempt_request(self, r: Request, now: float) -> bool:
+        """Pause one running request losslessly: demote its
+        device-resident KV layer-wise to HOST through the PR 2 demotion
+        path and park it in `paused`. Nothing is recomputed on resume —
+        prefill progress, chunk state, and generated tokens all survive
+        (the engine's cached chunk buffers stay valid; chunk assembly
+        re-seats a resumed prefill by its original `prefill_start`).
+        Returns False when `r` is not running or the HOST pool cannot
+        hold its KV (the victim is then simply left running)."""
+        if r in self.prefilling:
+            src_q = self.prefilling
+        elif r in self.decoding:
+            src_q = self.decoding
+        else:
+            return False
+        dev = self.bm.layers_on(r.rid, DEVICE)
+        host_need = sum(len(self.bm.allocation(r.rid, l).blocks)
+                        for l in dev)
+        if self.bm.num_free(HOST) < host_need:
+            return False
+        for l in dev:
+            self._migrate_layer(r.rid, l, HOST, "offload", now)
+        self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
+        src_q.remove(r)
+        r.phase = Phase.PAUSED
+        r.n_preempted += 1
+        self.paused.append(r)
+        self.n_preempted += 1
+        return True
+
+    def _try_resume(self, r: Request, now: float) -> bool:
+        """Re-enter a paused request where it left off (decoding once its
+        prefill completed, else the chunk queue) — no recompute ever.
+        Promotion is greedy: as many host layers move back to DEVICE as
+        fit (allocation headroom respected); whatever stays host-resident
+        re-enters through the SAME layer-wise machinery every offloaded
+        request already uses (the sim streams/promotes it per §3.1.1, the
+        engine's decode selection promotes on demand). Under the
+        request-wise `vllm` policy everything must promote. False when
+        even `resume_need` does not fit yet — the request stays paused,
+        and unlike a blocked fresh admission it does NOT stall the pass
+        (its KV is safe on host and its aging continues)."""
+        if self.bm.num_free(DEVICE) < self.resume_need(r):
+            return False
+        for l in self.bm.layers_on(r.rid, HOST):
+            a = self.bm.allocation(r.rid, l)
+            if self.bm.num_free(DEVICE) - self.reserve_blocks \
+                    < len(a.blocks):
+                if self.sc.policy == "vllm":
+                    return False   # unreachable past the gate, but safe
+                break
+            self._migrate_layer(r.rid, l, DEVICE, "reload", now)
+        self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
+        self.paused.remove(r)
+        if r.prefill_complete:
+            r.phase = Phase.DECODE
+            self.decoding.append(r)
+        else:
+            r.phase = Phase.PREFILL
+            self.prefilling.append(r)
+        self.n_resumed += 1
+        return True
+
+    def _preempt_to_fit(self, r: Request, now: float) -> bool:
+        """Victim selection (arXiv 2503.13773-shaped): when `r` fails the
+        device-block gate, free its shortfall by pausing strictly
+        lower-priority running requests. Victims are taken lowest
+        priority class first, then largest reclaimable KV, then latest
+        deadline; SLO pricing (SLOScheduler.victim_affordable) charges
+        each victim the h2d promotion it must later pay against its own
+        deadline slack — unaffordable victims are touched only when `r`
+        is itself already past its effective deadline. All-or-nothing:
+        if the chosen set cannot cover the shortfall, nobody is paused
+        (a pointless preemption costs two PCIe crossings and buys no
+        admission)."""
+        shortfall = self.device_need(r) - self.bm.num_free(DEVICE)
+        if shortfall <= 0:
+            return True
+        cands = [v for v in self.prefilling + self.decoding
+                 if v.priority < r.priority]
+        if not cands:
+            return False
+        reclaim = {v.rid: self.reclaimable_blocks(v) for v in cands}
+        bw = self.cost.hw.offload_bw
+        afford = {
+            v.rid: self.slo.victim_affordable(
+                v, now, self.cost.kv_bytes(
+                    v.prompt_len + v.tokens_out, self.L), bw)
+            for v in cands}
+        critical = now > r.effective_deadline
+        pool = [v for v in cands if afford[v.rid]]
+        if critical:
+            pool += [v for v in cands if not afford[v.rid]]
+        pool.sort(key=lambda v: (v.priority, -reclaim[v.rid],
+                                 -v.effective_deadline))
+        chosen: List[Request] = []
+        freed = 0
+        for v in pool:
+            if freed >= shortfall:
+                break
+            chosen.append(v)
+            freed += reclaim[v.rid]
+        if freed < shortfall:
+            return False
+        for v in chosen:
+            self.preempt_request(v, now)
+        return self.bm.num_free(DEVICE) >= self.device_need(r)
+
     # ------------------------------------------------------------ admission
     def admission_budget(self, order: List[Request], now: float) -> int:
         """Alg.1: how many of the ordered waiting prefills fit in the
@@ -455,25 +691,43 @@ class SchedulerCore:
                                  runs the returned batch exclusively
                                  (`token_budget` caps its prompt tokens).
 
-        Returns the requests admitted this pass."""
-        if not self.waiting:
+        With preemption on, PAUSED requests join the same policy order
+        (under `deadline` ordering a resume competes by its next-token
+        due time) and re-enter by promoting their parked KV — they never
+        consume the Alg.1 prefill budget (nothing is prefilled) and a
+        blocked resume is skipped rather than stalling the pass (its KV
+        is safe on host; only fresh admissions are head-of-line). When a
+        fresh request fails the device-block gate, the preemption
+        controller may pause lower-priority running requests to fit it
+        (`_preempt_to_fit`) before the gate gives up.
+
+        Returns the (fresh) requests admitted this pass."""
+        pool = list(self.waiting) + list(self.paused)
+        if not pool:
             return []
-        order = self.policy.order(list(self.waiting), now, self)
-        budget_n = self.admission_budget(order, now)
+        order = self.policy.order(pool, now, self)
+        waiting_set = set(map(id, self.waiting))
+        budget_n = self.admission_budget(
+            [r for r in order if id(r) in waiting_set], now)
         admitted: List[Request] = []
         deferred = immediate is None and not self.sc.chunked
         for r in order:
-            if budget_n <= 0:
-                break
             in_flight = self.in_flight() + (len(admitted) if deferred
                                             else 0)
             if in_flight >= self.sc.max_batch_size:
+                break
+            if id(r) not in waiting_set:
+                self._try_resume(r, now)
+                continue
+            if budget_n <= 0:
                 break
             if token_budget is not None and admitted \
                     and r.prompt_len > token_budget:
                 break
             if self.bm.num_free(DEVICE) < self.device_need(r):
-                break
+                if not (self.sc.preemption
+                        and self._preempt_to_fit(r, now)):
+                    break
             if self.sc.chunked:
                 if self.alloc_prefill(r) is None:
                     break
@@ -546,7 +800,9 @@ class SchedulerCore:
                            blocks it already registered stay behind as
                            reclaimable cache (a cancelled request's
                            computed prefix remains hittable);
-          * decoding     — same, plus it leaves the decode batch.
+          * decoding     — same, plus it leaves the decode batch;
+          * paused       — same unwind over its host-parked KV (a
+                           preempted request never resumes after cancel).
 
         Transfers already submitted to the link ledger are sunk cost: the
         bytes were queued on the link, the ledger is occupancy accounting
@@ -563,6 +819,9 @@ class SchedulerCore:
         if r in self.decoding:
             self.decoding.remove(r)
             was_live = True
+        if r in self.paused:
+            self.paused.remove(r)
+            was_live = True
         if not was_live:
             return False
         if r.rid in self.bm.tables:
@@ -577,8 +836,15 @@ class SchedulerCore:
         """Names the request that actually blocked the admission pass:
         the head of the POLICY order (admission is head-of-line within
         it), which under prefix_aware need not be waiting[0]."""
-        order = self.policy.order(list(self.waiting), self.now, self)
-        r = order[0] if order else self.waiting[0]
+        pool = list(self.waiting) or list(self.paused)
+        order = self.policy.order(pool, self.now, self)
+        r = order[0] if order else pool[0]
+        if r in self.paused:
+            return AdmissionImpossible(
+                f"paused request {r.rid} can never resume: needs "
+                f"{self.resume_need(r)} device blocks, the pool has "
+                f"{self.bm.pools[DEVICE].num_blocks} and nothing is in "
+                f"flight to free any")
         return AdmissionImpossible(
             f"request {r.rid} (prompt {r.prompt_len}) can never be "
             f"admitted: needs {self.device_need(r)} device blocks, the "
@@ -607,6 +873,10 @@ class CoreDelegateMixin:
     @property
     def decoding(self):
         return self.core.decoding
+
+    @property
+    def paused(self):
+        return self.core.paused
 
     @property
     def done(self):

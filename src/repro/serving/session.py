@@ -71,6 +71,13 @@ class RequestHandle:
         return self.request.phase is Phase.FINISHED
 
     @property
+    def paused(self) -> bool:
+        """True while the request is preempted (KV parked on HOST). A
+        paused request is still live: it resumes losslessly and keeps
+        streaming, so `done` stays False."""
+        return self.request.phase is Phase.PAUSED
+
+    @property
     def cancelled(self) -> bool:
         return self.request.phase is Phase.CANCELLED
 

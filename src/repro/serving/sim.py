@@ -68,8 +68,24 @@ def SimConfig(**kw) -> ServeConfig:
     return ServeConfig.for_sim(**kw)
 
 
+def pooled_percentile(series: List[float], q: float = 0.99) -> float:
+    """Nearest-rank percentile over a RAW pooled series: the
+    ceil(q*n)-th smallest. Every percentile in SimMetrics — cluster-wide
+    or per-class — goes through this one helper over concatenated raw
+    series; averaging per-replica (or slicing per-class from truncated)
+    percentiles understates the tail exactly when load is imbalanced."""
+    if not series:
+        return 0.0
+    s = sorted(series)
+    return s[min(len(s), math.ceil(q * len(s))) - 1]
+
+
 @dataclasses.dataclass
 class SimMetrics:
+    """Per-run serving metrics. Carries RAW per-request series (not
+    just aggregates) so `merge` can pool seeds without averaging
+    averages — percentiles over merged runs are pooled nearest-rank,
+    and `class_report()` re-slices everything by priority class."""
     ttft: List[float]
     queuing: List[float]
     prefill_lat: List[float]
@@ -88,6 +104,16 @@ class SimMetrics:
     prefix_lookup_tokens: int = 0        # prompt tokens looked up
     n_cancelled: int = 0                 # session cancellations (excluded
     #                                      from every latency series above)
+    # per-request series ALIGNED with ttft/tpot/... (same index = same
+    # request), so per-class slices stay raw series and percentiles pool
+    # correctly across replicas
+    priorities: List[int] = dataclasses.field(default_factory=list)
+    tbt: List[float] = dataclasses.field(default_factory=list)
+    #   ^ per-request MAX inter-token gap (s) — the stall preemption causes
+    deadline_slack: List[float] = dataclasses.field(default_factory=list)
+    #   ^ effective_deadline - first_token_time (s); negative = violated
+    req_tokens: List[int] = dataclasses.field(default_factory=list)
+    #   ^ tokens generated per request (goodput numerator, deadline-gated)
 
     @classmethod
     def merge(cls, parts: List["SimMetrics"]) -> "SimMetrics":
@@ -116,6 +142,10 @@ class SimMetrics:
             prefix_lookup_tokens=sum(
                 m.prefix_lookup_tokens for m in parts),
             n_cancelled=sum(m.n_cancelled for m in parts),
+            priorities=[p for m in parts for p in m.priorities],
+            tbt=[t for m in parts for t in m.tbt],
+            deadline_slack=[s for m in parts for s in m.deadline_slack],
+            req_tokens=[n for m in parts for n in m.req_tokens],
         )
 
     @property
@@ -124,12 +154,65 @@ class SimMetrics:
 
     @property
     def p99_ttft(self):
-        """Nearest-rank p99: ceil(0.99 n)-th smallest. (int(0.99*n) was an
-        off-by-one that indexed the MAX at n=100.)"""
-        if not self.ttft:
+        """Nearest-rank p99 over the pooled raw series (int(0.99*n) was
+        an off-by-one that indexed the MAX at n=100)."""
+        return pooled_percentile(self.ttft, 0.99)
+
+    @property
+    def p99_tbt(self):
+        return pooled_percentile(self.tbt, 0.99)
+
+    @property
+    def mean_tbt(self):
+        vals = [t for t in self.tbt if t > 0]
+        return statistics.mean(vals) if vals else 0.0
+
+    @property
+    def deadline_violations(self) -> int:
+        return sum(1 for s in self.deadline_slack if s < 0)
+
+    @property
+    def deadline_violation_rate(self) -> float:
+        return self.deadline_violations / max(len(self.deadline_slack), 1)
+
+    @property
+    def goodput(self) -> float:
+        """Tokens/s from requests that met their first-token deadline
+        (tokens that arrive too late to matter don't count — the
+        SLO-attainment throughput the deadline scheduler optimizes)."""
+        if self.makespan <= 0:
             return 0.0
-        s = sorted(self.ttft)
-        return s[min(len(s), math.ceil(0.99 * len(s))) - 1]
+        good = sum(n for n, s in zip(self.req_tokens, self.deadline_slack)
+                   if s >= 0)
+        return good / self.makespan
+
+    def class_report(self) -> dict:
+        """Per-priority-class metrics, computed by slicing the ALIGNED
+        raw series and running the same pooled nearest-rank path as the
+        cluster-wide percentiles (never recomputed from pre-truncated
+        per-replica statistics). Keys are priority values; each entry
+        reports n / mean+p99 TTFT / p99 TBT / deadline-violation rate /
+        goodput share (tokens per second from deadline-met requests)."""
+        out: dict = {}
+        for cls_id in sorted(set(self.priorities)):
+            idx = [i for i, p in enumerate(self.priorities)
+                   if p == cls_id]
+            ttft = [self.ttft[i] for i in idx]
+            slack = [self.deadline_slack[i] for i in idx]
+            toks = [self.req_tokens[i] for i in idx]
+            out[cls_id] = {
+                "n": len(idx),
+                "mean_ttft": statistics.mean(ttft) if ttft else 0.0,
+                "p99_ttft": pooled_percentile(ttft, 0.99),
+                "p99_tbt": pooled_percentile(
+                    [self.tbt[i] for i in idx], 0.99),
+                "deadline_violation_rate":
+                    sum(1 for s in slack if s < 0) / max(len(slack), 1),
+                "goodput": (sum(n for n, s in zip(toks, slack)
+                                if s >= 0) / self.makespan)
+                    if self.makespan > 0 else 0.0,
+            }
+        return out
 
     @property
     def prefix_hit_rate(self):
@@ -192,6 +275,11 @@ def derive_device_blocks(cfg: ModelConfig, hw: HWProfile, sim: ServeConfig
 
 
 class ServingSimulator(CoreDelegateMixin):
+    """The discrete-event serving backend: drives the shared
+    `SchedulerCore` with step latencies priced by `CostModel` instead
+    of real forwards — same decisions as `LayerKVEngine`, no JAX
+    dependency. This is what the benchmarks and policy studies run."""
+
     produces_token_ids = False   # step latencies are modeled; the token
     #                              stream carries ordinals, not real ids
 
@@ -424,6 +512,7 @@ class ServingSimulator(CoreDelegateMixin):
                 self.decoding.remove(r)
                 continue
             r.tokens_out += 1
+            r.note_token(t)
             if r.tokens_out >= r.output_len:
                 r.finish_time = t
                 r.phase = Phase.FINISHED
@@ -447,7 +536,13 @@ class ServingSimulator(CoreDelegateMixin):
             makespan=mk,
             slo_violations=sum(1 for r in done if r.slo_violated()),
             n_requests=len(done),
-            preemptions=self.preemptions,
+            # recompute-preemptions (vLLM path) + lossless pause/resume
+            preemptions=self.preemptions + self.core.n_preempted,
+            priorities=[r.priority for r in done],
+            tbt=[r.max_tbt for r in done],
+            deadline_slack=[r.effective_deadline - r.first_token_time
+                            for r in done],
+            req_tokens=[r.tokens_out for r in done],
             chunk_iters=self._chunk_iters,
             max_iter_prefill_tokens=self._max_iter_prefill_tokens,
             prefix_hit_tokens=self.bm.cache.hit_tokens
@@ -499,6 +594,7 @@ class ServingSimulator(CoreDelegateMixin):
             for r in admitted:
                 r.first_token_time = t
                 r.tokens_out = 1
+                r.note_token(t)
                 r.prefill_done = r.prompt_len
                 r.n_chunks += 1
                 r.phase = Phase.DECODE
@@ -602,6 +698,7 @@ class ServingSimulator(CoreDelegateMixin):
             if r.prefill_complete:
                 r.first_token_time = t
                 r.tokens_out = 1
+                r.note_token(t)
                 r.phase = Phase.DECODE
                 self.prefilling.remove(r)
                 self.decoding.append(r)

@@ -149,7 +149,10 @@ def multi_tenant(n: int, rate: float, n_tenants: int = 4,
                  burst_on: float = 4.0, burst_off: float = 8.0,
                  burst_cv: float = 2.0, vocab_size: int = 32000,
                  seed: int = 0, tpot_slo: float = 0.2,
-                 ttft_slo: float = 3.0) -> List[Request]:
+                 ttft_slo: float = 3.0,
+                 interactive_tenants: int = 0,
+                 interactive_ttft_slo: float = 0.0,
+                 interactive_tpot_slo: float = 0.0) -> List[Request]:
     """Per-tenant shared-prefix templates under bursty on-off arrivals.
 
     Each of `n_tenants` tenants owns one template prefix of
@@ -175,6 +178,18 @@ def multi_tenant(n: int, rate: float, n_tenants: int = 4,
     `burst_cv=1` with `burst_off=0` degenerates to plain Poisson per
     tenant.
 
+    Priority classes (the KV-competition workload, arXiv 2503.13773):
+    the first `interactive_tenants` tenants are the INTERACTIVE class —
+    their requests carry `priority=1` and the (typically tighter)
+    `interactive_ttft_slo` / `interactive_tpot_slo` (0 = inherit the
+    batch values); the remaining tenants are the BATCH class at
+    `priority=0`. Because the hot Zipf tenants come first, making them
+    interactive reproduces the paper-style mix: a latency-critical hot
+    class competing for KV with long-running batch traffic. The default
+    `interactive_tenants=0` draws the identical RNG stream as before
+    (class assignment is by tenant index, never by a draw), so every
+    committed artifact stays bit-stable.
+
     Tenant quotas are apportioned by largest remainder so exactly `n`
     requests are returned, in arrival order, rids `t{tenant}r{i}` so
     tests and benchmarks can group by tenant."""
@@ -197,6 +212,12 @@ def multi_tenant(n: int, rate: float, n_tenants: int = 4,
         if burst_on + burst_off > 0 else 0.0
     out: List[Request] = []
     for k in range(n_tenants):
+        interactive = k < interactive_tenants
+        k_prio = 1 if interactive else 0
+        k_ttft = interactive_ttft_slo \
+            if interactive and interactive_ttft_slo > 0 else ttft_slo
+        k_tpot = interactive_tpot_slo \
+            if interactive and interactive_tpot_slo > 0 else tpot_slo
         tenant_rate = rate * weights[k] / wsum
         # arrivals only flow during ON windows, at burst_cv/duty x the
         # tenant's average rate; the stretched OFF mean above restores
@@ -221,7 +242,8 @@ def multi_tenant(n: int, rate: float, n_tenants: int = 4,
                 out.append(Request(
                     rid=f"t{k}r{i}", prompt_len=len(prompt),
                     output_len=output_len, arrival=t,
-                    tpot_slo=tpot_slo, ttft_slo=ttft_slo, prompt=prompt))
+                    tpot_slo=k_tpot, ttft_slo=k_ttft, prompt=prompt,
+                    priority=k_prio))
                 i += 1
             t += rng.expovariate(1.0 / max(off_mean, 1e-9)) \
                 if off_mean > 0 else 0.0

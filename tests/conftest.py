@@ -1,5 +1,7 @@
 import os
 
+import pytest
+
 # smoke tests and benches must see ONE device (the dry-run sets its own
 # flag in a separate process); keep jax quiet and deterministic
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -7,3 +9,18 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Drop compiled executables between test modules. The full suite
+    jit-compiles a few hundred distinct signatures; letting them all
+    accumulate in one XLA CPU client can crash the native compiler late
+    in the run (single-process, single-core containers). Modules rarely
+    share shapes, so per-module clearing costs little recompilation."""
+    yield
+    try:
+        import jax
+        jax.clear_caches()
+    except Exception:  # jax absent or too old — cache growth is its problem
+        pass

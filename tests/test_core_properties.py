@@ -403,6 +403,76 @@ def test_session_cancel_accounting_property(schedule):
     assert not sim.bm.live_requests()
 
 
+# ------------------------------------------- preemption invariants ---------
+
+@st.composite
+def preempt_schedule(draw):
+    """(victim index, step count before the forced pause) pairs + an
+    axes arm — the preemption analogue of `cancel_schedule`."""
+    n = draw(st.integers(5, 9))
+    pauses = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(1, 14)),
+        min_size=1, max_size=4))
+    arm = draw(st.sampled_from(
+        ["excl", "chunked", "chunked_prefix", "chunked_prefix_fused"]))
+    return n, sorted(pauses, key=lambda c: c[1]), arm
+
+
+@given(preempt_schedule())
+@settings(max_examples=20, deadline=None)
+def test_preemption_lossless_property(schedule):
+    """ANY forced-pause schedule, on any axes arm: no request is lost,
+    duplicated, or starved — every one finishes its FULL output (pause/
+    resume is lossless, zero recompute), every pause is matched by a
+    resume, block-manager invariants hold at each pause point, and the
+    pools return to baseline after drain."""
+    from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+    from repro.serving.session import ServingSession
+    from repro.serving.sim import ServingSimulator, SimConfig
+    from repro.serving.workload import shared_prefix
+
+    n, pauses, arm = schedule
+    kw = {"excl": {},
+          "chunked": dict(chunked=True),
+          "chunked_prefix": dict(chunked=True, prefix_cache=True),
+          "chunked_prefix_fused": dict(chunked=True, prefix_cache=True,
+                                       fused=True)}[arm]
+    sim = ServingSimulator(LLAMA2_7B, L20, SimConfig(
+        policy="layerkv", preemption=True, admission="deadline",
+        num_device_blocks=2048, num_host_blocks=1 << 14, **kw))
+    sess = ServingSession(sim)
+    reqs = shared_prefix(n, rate=50.0, scenario="rag_template",
+                         share_ratio=0.5, prompt_len=320, output_len=48,
+                         n_templates=2, seed=9)
+    for r in reqs:
+        sess.submit(r, arrival=r.arrival)
+    steps = forced = 0
+    for victim, at_step in pauses:
+        while steps < at_step and sess.step():
+            steps += 1
+        # pause whatever the victim index lands on among RUNNING work;
+        # preempt_request refuses non-running requests, that's fine
+        running = sim.core.prefilling + sim.core.decoding
+        if running and sim.core.preempt_request(
+                running[victim % len(running)], sim.core.now):
+            forced += 1
+        sim.bm.check()        # invariants hold at EVERY pause point
+    sess.drain()
+    assert sim.core.n_preempted >= forced
+    assert sim.core.n_resumed == sim.core.n_preempted
+    assert sim.preemptions == 0                     # zero recompute
+    assert len(sim.done) == n                       # nobody lost
+    assert sorted(r.rid for r in sim.done) \
+        == sorted(r.rid for r in reqs)              # nobody duplicated
+    assert all(r.tokens_out == r.output_len for r in sim.done)
+    assert not sim.core.paused
+    sim.bm.drop_cache()
+    sim.bm.check()
+    assert sim.bm.num_free(DEVICE) == sim.bm.pools[DEVICE].num_blocks
+    assert sim.bm.num_free(HOST) == sim.bm.pools[HOST].num_blocks
+    assert not sim.bm.live_requests()
+
+
 # ------------------------------------------- cluster routing invariants ----
 
 @st.composite

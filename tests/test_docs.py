@@ -1,0 +1,43 @@
+"""The docs-consistency gate, as a tier-1 test.
+
+`tools/check_docs.py` is the source of truth (CI also runs it
+standalone, before test deps exist); this wrapper makes a stale README
+fail `pytest` locally too, and unit-tests the parser helpers so a
+source-layout refactor that silently empties the required-name sets is
+caught as a failure rather than a vacuous pass.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_consistent():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, f"docs drifted:\n{proc.stdout}{proc.stderr}"
+
+
+def test_parser_sees_the_real_config_surface():
+    fields = check_docs.serveconfig_fields(check_docs.SCHEDULER)
+    # spot-check axes from every group: scheduling, pool, engine-, sim-only
+    for must in ("policy", "preemption", "admission", "num_device_blocks",
+                 "max_tokens_per_request", "forecast_horizon"):
+        assert must in fields
+    assert set(check_docs.policy_names(check_docs.SCHEDULER)) == {
+        "fcfs", "prefix_aware", "deadline"}
+    assert set(check_docs.policy_names(check_docs.ROUTER)) == {
+        "round_robin", "least_loaded", "prefix_affinity", "slo_aware"}
+
+
+def test_broken_link_detection(tmp_path):
+    doc = tmp_path / "X.md"
+    doc.write_text("see [good](X.md) and [bad](nope/missing.md) "
+                   "and [web](https://example.com/x.md)")
+    problems = check_docs.broken_links(doc)
+    assert len(problems) == 1 and "nope/missing.md" in problems[0]

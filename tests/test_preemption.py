@@ -1,0 +1,304 @@
+"""Lossless priority preemption + deadline-aware admission.
+
+Pins the PR's three contracts:
+
+  1. LOSSLESS — a preempted-then-resumed request produces exactly the
+     tokens an uninterrupted run produces (engine, real forward passes),
+     and in the simulator finishes its full output with ZERO recompute
+     (the vLLM-recompute counter stays 0; pause/resume moves KV, it
+     never discards it).
+  2. OFF == TODAY — with `preemption=False` (the default), and even with
+     `preemption=True` under a homogeneous priority class, the paused
+     queue stays empty and scheduling is bit-identical to the
+     pre-preemption scheduler.
+  3. DEADLINE ORDERING — the `deadline` admission policy serves by
+     virtual deadline (EDF with a bounded priority boost), so a tight
+     interactive arrival overtakes queued batch work, but only within
+     its aging window (no starvation).
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import DEVICE, HOST
+from repro.serving.costmodel import L20
+from repro.serving.request import Phase, Request
+from repro.serving.scheduler import DeadlineAdmission, ServeConfig
+from repro.serving.sim import ServingSimulator, SimMetrics, pooled_percentile
+
+LLAMA2_7B = get_config("llama2-7b")
+
+
+def _mix(n_batch=6, n_int=3):
+    """Long batch requests that fill a small pool, then tight-deadline
+    interactive arrivals that must preempt to meet their SLO."""
+    reqs = [Request(rid=f"b{i}", prompt_len=400, output_len=300,
+                    arrival=0.01 * i, priority=0,
+                    ttft_slo=60.0, tpot_slo=10.0) for i in range(n_batch)]
+    reqs += [Request(rid=f"i{j}", prompt_len=400, output_len=40,
+                     arrival=3.0 + 2 * j, priority=1,
+                     ttft_slo=1.0, tpot_slo=0.5) for j in range(n_int)]
+    return reqs
+
+
+# ------------------------------------------------------ admission order ----
+
+def test_deadline_admission_interactive_overtakes():
+    """A later-arriving priority-1 request with a tight deadline orders
+    ahead of earlier batch work (EDF + priority boost)."""
+    batch = Request(rid="b", prompt_len=100, output_len=10,
+                    arrival=0.0, priority=0, ttft_slo=3.0)
+    inter = Request(rid="i", prompt_len=100, output_len=10,
+                    arrival=1.0, priority=1, ttft_slo=0.75)
+    pol = DeadlineAdmission(age_frac=0.5)
+    assert [r.rid for r in pol.order([batch, inter], 1.0, None)] \
+        == ["i", "b"]
+
+
+def test_deadline_admission_aging_bound():
+    """The priority boost is BOUNDED: an interactive request arriving
+    far enough after a batch request orders behind it — the batch
+    request's real deadline has aged past the boost window, so it is
+    never starved by an endless interactive stream."""
+    batch = Request(rid="b", prompt_len=100, output_len=10,
+                    arrival=0.0, priority=0, ttft_slo=3.0)
+    # boost window = age_frac * ttft_slo = 0.375s; vdl_i = arrival + 0.375
+    late = Request(rid="i", prompt_len=100, output_len=10,
+                   arrival=10.0, priority=1, ttft_slo=0.75)
+    pol = DeadlineAdmission(age_frac=0.5)
+    assert [r.rid for r in pol.order([batch, late], 10.0, None)] \
+        == ["b", "i"]
+
+
+def test_deadline_admission_paused_keys_by_next_token():
+    """A paused mid-decode request is keyed by its NEXT-token due time
+    (last token + TPOT SLO), not its long-gone first-token deadline."""
+    paused = Request(rid="p", prompt_len=100, output_len=10,
+                     arrival=0.0, priority=0, tpot_slo=0.2, ttft_slo=3.0)
+    paused.phase = Phase.PAUSED
+    paused.last_token_time = 9.9          # next token due 10.1
+    fresh = Request(rid="f", prompt_len=100, output_len=10,
+                    arrival=8.0, priority=0, ttft_slo=3.0)  # dl 11.0
+    pol = DeadlineAdmission()
+    assert [r.rid for r in pol.order([fresh, paused], 10.0, None)] \
+        == ["p", "f"]
+
+
+# -------------------------------------------------- victim affordability ---
+
+def test_victim_affordable_scales_with_resume_bytes():
+    """A victim with ample deadline slack affords a small resume charge
+    but not one whose h2d promotion would eat its whole budget."""
+    from repro.core.predictor import OraclePredictor
+    from repro.core.slo_scheduler import SLOScheduler
+    from repro.serving.costmodel import CostModel
+    slo = SLOScheduler(CostModel(LLAMA2_7B, L20),
+                       OraclePredictor([64], accuracy=1.0))
+    r = Request(rid="v", prompt_len=128, output_len=64,
+                arrival=0.0, ttft_slo=5.0)
+    assert slo.preempt_slack(r, now=1.0) == pytest.approx(4.0)
+    assert slo.victim_affordable(r, 1.0, resume_bytes=L20.offload_bw * 1.0,
+                                 offload_bw=L20.offload_bw)
+    assert not slo.victim_affordable(r, 1.0,
+                                     resume_bytes=L20.offload_bw * 8.0,
+                                     offload_bw=L20.offload_bw)
+
+
+# ------------------------------------------------------ sim losslessness ---
+
+@pytest.mark.parametrize("chunked", [True, False],
+                         ids=["chunked", "exclusive"])
+def test_sim_preemption_lossless_under_overload(chunked):
+    """Tight pool + deadline admission + preemption: interactive
+    arrivals pause batch KV to HOST, every request still finishes its
+    FULL output, nothing is recomputed, and the pools drain to
+    baseline."""
+    sc = ServeConfig.for_sim(policy="layerkv", chunked=chunked,
+                             admission="deadline", preemption=True,
+                             num_device_blocks=160, block_size=16)
+    sim = ServingSimulator(LLAMA2_7B, L20, sc)
+    m = sim.run(_mix())
+    assert m.n_requests == 9
+    assert sim.core.n_preempted > 0            # preemption actually fired
+    assert sim.core.n_resumed == sim.core.n_preempted
+    assert sim.preemptions == 0                # zero recompute-preemptions
+    assert all(r.tokens_out == r.output_len for r in sim.done)
+    # the interactive class got its first token well inside its 1s SLO
+    int_ttft = [r.ttft for r in sim.done if r.priority == 1]
+    assert int_ttft and max(int_ttft) < 1.0
+    sim.finish()                               # pools back to baseline
+
+
+def test_sim_preemption_vllm_policy_resumes_whole_kv():
+    """Under the vLLM-style baseline policy (no layer-wise streaming) a
+    paused request resumes only when its ENTIRE KV fits again — every
+    pause is matched by a resume and every request still finishes its
+    full output. (The policy's OWN recompute-eviction path may also fire
+    under this load; that legacy mechanism is orthogonal and unchanged —
+    only the layerkv arm pins it to zero.)"""
+    sc = ServeConfig.for_sim(policy="vllm", chunked=True,
+                             admission="deadline", preemption=True,
+                             num_device_blocks=2048, block_size=16)
+    sim = ServingSimulator(LLAMA2_7B, L20, sc)
+    reqs = [Request(rid=f"b{i}", prompt_len=200, output_len=100,
+                    arrival=0.01 * i, priority=0,
+                    ttft_slo=60.0, tpot_slo=10.0) for i in range(6)]
+    reqs += [Request(rid=f"i{j}", prompt_len=200, output_len=20,
+                     arrival=1.0 + j, priority=1,
+                     ttft_slo=0.5, tpot_slo=0.2) for j in range(3)]
+    sim.run(reqs)
+    assert sim.core.n_preempted > 0
+    assert sim.core.n_resumed == sim.core.n_preempted
+    assert all(r.tokens_out == r.output_len for r in sim.done)
+    sim.finish()
+
+
+def test_sim_forced_preempt_pause_visible_and_resumes():
+    """Forcing a pause mid-decode via the public API parks the request
+    (phase PAUSED, KV on HOST, counted in LoadStats.n_paused) and the
+    admission pass resumes it to completion with no recompute."""
+    from repro.serving.session import ServingSession
+    sc = ServeConfig.for_sim(policy="layerkv", chunked=True,
+                             admission="deadline", preemption=True,
+                             num_device_blocks=512, block_size=16)
+    sim = ServingSimulator(LLAMA2_7B, L20, sc)
+    sess = ServingSession(sim)
+    reqs = [Request(rid=f"r{i}", prompt_len=200, output_len=60,
+                    arrival=0.0) for i in range(3)]
+    hs = [sess.submit(r, arrival=0.0) for r in reqs]
+    forced = False
+    while sess.step():
+        if not forced and reqs[0] in sim.core.decoding \
+                and reqs[0].tokens_out >= 3:
+            assert sim.core.preempt_request(reqs[0], sim.core.now)
+            assert reqs[0].phase is Phase.PAUSED
+            assert hs[0].paused and not hs[0].done
+            assert not sim.bm.layers_on("r0", DEVICE)
+            assert sim.bm.layers_on("r0", HOST)
+            assert sim.core.load_stats().n_paused == 1
+            sim.bm.check()
+            forced = True
+    assert forced
+    sess.drain()
+    assert sim.core.n_preempted == 1 and sim.core.n_resumed == 1
+    assert sim.preemptions == 0
+    assert all(r.tokens_out == r.output_len for r in reqs)
+    assert reqs[0].n_preempted == 1
+    sim.finish()
+
+
+# ------------------------------------------------- off == today (inert) ----
+
+def test_preemption_off_and_homogeneous_priority_identical():
+    """Three arms on one workload: (a) preemption off, (b) preemption on
+    but every request in the same priority class, (c) default config.
+    (a) and (b) must be BIT-IDENTICAL (no strictly-lower victim ever
+    exists, so the controller never fires) and (c) must equal (a)
+    (the feature defaults off)."""
+    def run(**kw):
+        sc = ServeConfig.for_sim(policy="layerkv", chunked=True,
+                                 num_device_blocks=256, block_size=16, **kw)
+        sim = ServingSimulator(LLAMA2_7B, L20, sc)
+        reqs = [Request(rid=f"r{i}", prompt_len=300, output_len=80,
+                        arrival=0.05 * i) for i in range(8)]
+        sim.run(reqs)
+        assert sim.core.n_preempted == 0 and not sim.core.paused
+        return [(r.rid, r.ttft, r.finish_time) for r in sim.done]
+
+    off = run(preemption=False)
+    on_flat = run(preemption=True)
+    default = run()
+    assert off == on_flat == default
+
+
+# ----------------------------------------------------- engine identity -----
+
+def test_engine_preempt_resume_token_identity():
+    """REAL forward passes: pause r0 mid-decode (KV demoted to HOST,
+    physically copied), resume it, and the generated token ids are
+    EXACTLY those of an uninterrupted run — the KV bytes survived the
+    round trip through the host pool."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import LayerKVEngine
+    from repro.serving.session import ServingSession
+    import numpy as np
+
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+
+    def mkreqs(seed=1):
+        rng = np.random.RandomState(seed)
+        return [Request(rid=f"r{i}", prompt_len=24, output_len=8,
+                        arrival=0.0,
+                        prompt=[int(x) for x in
+                                rng.randint(0, cfg.vocab_size, 24)])
+                for i in range(3)]
+
+    sc = ServeConfig.for_engine(policy="layerkv", preemption=True,
+                                admission="deadline",
+                                num_device_blocks=96, block_size=8)
+    e1 = LayerKVEngine(cfg, None, sc, rng=jax.random.PRNGKey(0))
+    ref = {r.rid: list(r.generated) for r in e1.run(mkreqs())}
+
+    e2 = LayerKVEngine(cfg, None, sc, rng=jax.random.PRNGKey(0))
+    sess = ServingSession(e2)
+    reqs = mkreqs()
+    for r in reqs:
+        sess.submit(r, arrival=0.0)
+    preempted = False
+    while True:
+        if not preempted:
+            v = [r for r in e2.decoding
+                 if r.rid == "r0" and r.tokens_out >= 3]
+            if v:
+                assert e2.core.preempt_request(v[0], e2.now)
+                assert v[0].phase is Phase.PAUSED
+                preempted = True
+        if not sess.step():
+            break
+    got = {r.rid: list(r.generated) for r in sess.drain()}
+    assert preempted
+    assert e2.core.n_preempted == 1 and e2.core.n_resumed == 1
+    assert got == ref
+    e2.finish()
+
+
+# -------------------------------------------------- pooled percentiles -----
+
+def test_pooled_percentile_nearest_rank():
+    s = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+    assert pooled_percentile(s, 0.50) == 0.5     # ceil(0.5*10)=5th
+    assert pooled_percentile(s, 0.99) == 1.0
+    assert pooled_percentile([3.0], 0.99) == 3.0
+    assert pooled_percentile(list(reversed(s)), 0.50) == 0.5  # order-free
+
+
+def test_class_report_pools_raw_series_across_merge():
+    """Per-class percentiles come from the POOLED raw series, not from
+    averaging per-part percentiles — merging parts then slicing by class
+    must equal a hand computation over the concatenated values."""
+    def mk(ttft, makespan, priorities, tbt, slack, toks):
+        return SimMetrics(
+            ttft=ttft, queuing=[0.0] * len(ttft),
+            prefill_lat=[0.0] * len(ttft), tpot=[0.01] * len(ttft),
+            finish_times=[makespan] * len(ttft), tokens_out=sum(toks),
+            makespan=makespan, slo_violations=0, n_requests=len(ttft),
+            preemptions=0, priorities=priorities, tbt=tbt,
+            deadline_slack=slack, req_tokens=toks)
+
+    a = mk([0.1, 0.9], 10.0, [1, 0], [0.02, 0.03], [0.5, -0.1], [10, 20])
+    b = mk([0.3, 0.7], 12.0, [1, 1], [0.04, 0.05], [0.2, 0.4], [30, 40])
+    m = SimMetrics.merge([a, b])
+    rep = m.class_report()
+    assert set(rep) == {0, 1}
+    assert rep[1]["n"] == 3 and rep[0]["n"] == 1
+    # pooled class-1 TTFT series is [0.1, 0.3, 0.7]
+    assert rep[1]["p99_ttft"] == pooled_percentile([0.1, 0.3, 0.7], 0.99)
+    assert rep[1]["mean_ttft"] == pytest.approx((0.1 + 0.3 + 0.7) / 3)
+    assert rep[0]["deadline_violation_rate"] == 1.0   # slack -0.1
+    assert rep[1]["deadline_violation_rate"] == 0.0
+    # goodput gates tokens on deadline-met: class 0's 20 tokens violated
+    assert m.deadline_violations == 1
+    assert m.goodput == pytest.approx((10 + 30 + 40) / 12.0)
