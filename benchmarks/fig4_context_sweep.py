@@ -36,7 +36,8 @@ def main(n_requests: int = 100, smoke: bool = False,
     rows = {}
     for ctx in CTX[:2] if smoke else CTX:
         t0 = time.perf_counter()
-        mk = lambda: fixed_length(n_requests, ctx, 512, rate=1.0, seed=1)
+        mk = lambda ctx=ctx: fixed_length(
+            n_requests, ctx, 512, rate=1.0, seed=1)
         mv = ServingSimulator(LLAMA2_7B, L20,
                               ServeConfig.for_sim(policy="vllm")).run(mk())
         ml = ServingSimulator(LLAMA2_7B, L20,

@@ -21,7 +21,8 @@ RATES = [2.0, 4.0, 8.0, 12.0, 16.0]
 def main(n_requests: int = 300, smoke: bool = False) -> None:
     for rate in RATES[:2] if smoke else RATES:
         t0 = time.perf_counter()
-        mk = lambda: sharegpt_like(n_requests, rate=rate, seed=7)
+        mk = lambda rate=rate: sharegpt_like(
+            n_requests, rate=rate, seed=7)
         mv = ServingSimulator(LLAMA2_7B, L20,
                               ServeConfig.for_sim(policy="vllm")).run(mk())
         ml = ServingSimulator(LLAMA2_7B, L20,

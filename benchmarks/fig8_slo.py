@@ -20,8 +20,8 @@ RATES = [6.0, 8.0, 10.0, 12.0, 14.0]
 def main(n_requests: int = 300, smoke: bool = False) -> None:
     for rate in RATES[:2] if smoke else RATES:
         t0 = time.perf_counter()
-        mk = lambda: sharegpt_like(n_requests, rate=rate, seed=13,
-                                   tpot_slo=0.2, ttft_slo=3.0)
+        mk = lambda rate=rate: sharegpt_like(
+            n_requests, rate=rate, seed=13, tpot_slo=0.2, ttft_slo=3.0)
         mv = ServingSimulator(LLAMA2_7B, L20,
                               ServeConfig.for_sim(policy="vllm")).run(mk())
         ml = ServingSimulator(LLAMA2_7B, L20,

@@ -61,8 +61,8 @@ ADMISSION_AGE_FRAC = 2.0
 def _one(arm_kw: dict, n: int, ratio: float, scenario: str):
     reqs = shared_prefix(n, rate=2.0, scenario=scenario, share_ratio=ratio,
                          prompt_len=1024, output_len=256, seed=13)
-    m = ServingSimulator(LLAMA2_7B, L20, ServeConfig.for_sim(**arm_kw)).run(reqs)
-    return m
+    return ServingSimulator(
+        LLAMA2_7B, L20, ServeConfig.for_sim(**arm_kw)).run(reqs)
 
 
 def _admission_arm(admission: str, n: int):

@@ -54,7 +54,7 @@ class PoolExhausted(Exception):
 
 
 class _Pool:
-    def __init__(self, name: str, num_blocks: int):
+    def __init__(self, name: str, num_blocks: int) -> None:
         self.name = name
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
@@ -135,7 +135,7 @@ class PrefixAcquisition:
 class PrefixCache:
     """Content-addressed registry of full prompt blocks, per layer."""
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.entries: Dict[Tuple[int, int], CachedBlock] = {}
         self.by_block: Dict[Tuple[str, int], CachedBlock] = {}
         self._tick = 0
@@ -224,7 +224,7 @@ class LayerwiseBlockManager:
 
     def __init__(self, num_device_blocks: int, num_host_blocks: int,
                  block_size: int, n_layers: int,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False) -> None:
         self.block_size = block_size
         self.n_layers = n_layers
         self.pools = {DEVICE: _Pool(DEVICE, num_device_blocks),
@@ -253,7 +253,8 @@ class LayerwiseBlockManager:
     def blocks_for_tokens(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
-    def request_blocks(self, n_tokens: int, n_layers: Optional[int] = None):
+    def request_blocks(self, n_tokens: int,
+                       n_layers: Optional[int] = None) -> int:
         """Blocks needed to hold `n_tokens` of KV for `n_layers` layers
         (request-wise baseline passes n_layers = all)."""
         L = self.n_layers if n_layers is None else n_layers
@@ -286,7 +287,8 @@ class LayerwiseBlockManager:
     def can_alloc(self, n_blocks: int, pool: str = DEVICE) -> bool:
         return self.num_free(pool) >= n_blocks
 
-    def _copy(self, src_pool: str, src: int, dst_pool: str, dst: int):
+    def _copy(self, src_pool: str, src: int, dst_pool: str,
+              dst: int) -> None:
         if self.on_copy is not None:
             self.on_copy(src_pool, src, dst_pool, dst)
 
@@ -324,7 +326,8 @@ class LayerwiseBlockManager:
         tbl[layer] = alloc
         return alloc
 
-    def extend_layer(self, req: str, layer: int, n_new_tokens: int = 1):
+    def extend_layer(self, req: str, layer: int,
+                     n_new_tokens: int = 1) -> LayerAllocation:
         """Grow a layer's allocation for newly decoded tokens (same pool)."""
         a = self.tables[req][layer]
         need = self.blocks_for_tokens(a.num_tokens + n_new_tokens) \
@@ -517,7 +520,7 @@ class LayerwiseBlockManager:
                 "(pass detach=True to copy them out)")
         src = list(a.blocks)
         dst = self._alloc_blocks(to_pool, len(src), (req, layer))
-        for s, d in zip(src, dst):
+        for s, d in zip(src, dst, strict=True):
             e = self.cache.lookup(a.pool, s) \
                 if self.cache is not None else None
             if e is not None and e.ref > 1:

@@ -101,7 +101,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=0, kv_len=None,
     kernel = functools.partial(
         _flash_kernel, bq=bq, bk=bk, n_kv_blocks=nk, causal=causal,
         window=window, q_offset=q_offset, scale=scale)
-    out = pl.pallas_call(
+    return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -122,4 +122,3 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=0, kv_len=None,
         ],
         interpret=interpret,
     )(q, k, v)
-    return out

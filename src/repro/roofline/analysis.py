@@ -42,8 +42,8 @@ def attention_flops(cfg: ModelConfig, tokens: int, ctx: int) -> float:
     """2 * 2 * L_attn * H * hd * tokens * ctx (QK^T and PV), causal halves
     the prefill case."""
     hd = cfg.resolved_head_dim
-    f = 4.0 * cfg.n_attention_layers() * cfg.n_q_heads * hd * tokens * ctx
-    return f
+    return (4.0 * cfg.n_attention_layers() * cfg.n_q_heads * hd
+            * tokens * ctx)
 
 
 def model_flops(cfg: ModelConfig, shp: InputShape) -> float:

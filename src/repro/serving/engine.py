@@ -323,7 +323,7 @@ class LayerKVEngine(CoreDelegateMixin):
                         key=lambda q: q.tpot_slo - q.current_tpot(self.now)):
             sel_ids = [q.rid for q in sel] + [r.rid]
 
-            def _need():
+            def _need(r: Request = r) -> int:
                 """Promotion blocks + growth blocks for r this iteration."""
                 need = 0
                 for l in self.bm.layers_on(r.rid, HOST):
@@ -374,15 +374,18 @@ class LayerKVEngine(CoreDelegateMixin):
         kv_lens = [r.prompt_len + r.tokens_out - 1 for r in sel]
         toks = [r.generated[-1] for r in sel]
         new_toks = self.ex.decode(toks, tables, kv_lens)
-        for r, tok in zip(sel, new_toks):
+        for r, tok in zip(sel, new_toks, strict=True):
             r.generated.append(tok)
             r.tokens_out += 1
         avg_ctx = int(sum(kv_lens) / R) + 1
         return self.cost.decode_step_time(R, avg_ctx, 0.0)
 
     def _retire_finished(self) -> None:
+        # the generation cap backstops runaway requests whose target EOS
+        # position exceeds the engine's per-request budget
+        cap = self.ec.max_tokens_per_request
         for r in list(self.decoding):
-            if r.tokens_out >= r.output_len:
+            if r.tokens_out >= min(r.output_len, cap):
                 r.finish_time = self.now
                 r.phase = Phase.FINISHED
                 self.bm.free_request(r.rid)
@@ -394,8 +397,14 @@ class LayerKVEngine(CoreDelegateMixin):
     # ---------------------------------------------------------------- step
     def step(self) -> bool:
         """One scheduler iteration. Returns False when fully idle."""
-        if self.ec.chunked:
-            return self._step_chunked()
+        out = self._step_chunked() if self.ec.chunked \
+            else self._step_exclusive()
+        if self.core.sanitizer is not None:
+            self.core.sanitizer.check(self.core)
+        return out
+
+    def _step_exclusive(self) -> bool:
+        """Exclusive-prefill iteration (vLLM 0.5.5 semantics)."""
         if self.core.admit_waiting(self.now, immediate=self._do_prefill):
             return True
         if not self.decoding:

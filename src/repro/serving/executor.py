@@ -256,7 +256,7 @@ class PagedExecutor:
             positions = jnp.broadcast_to(positions[None], (3, 1, C))
         ks_out, vs_out = [], []
         for l in range(cfg.n_layers):
-            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            lp = jax.tree.map(lambda a, _l=l: a[_l], params["layers"])
             h = layers.apply_norm(cfg, lp["attn_norm"], x)
             q, k, v = layers.qkv_proj(cfg, lp["attn"], h)
             q = layers.apply_rope(cfg, q, positions)
@@ -332,7 +332,7 @@ class PagedExecutor:
             positions = jnp.broadcast_to(
                 positions[None], (3, 1, tokens.shape[0]))
         for l in range(cfg.n_layers):
-            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            lp = jax.tree.map(lambda a, _l=l: a[_l], params["layers"])
             h = layers.apply_norm(cfg, lp["attn_norm"], x)
             q, k, v = layers.qkv_proj(cfg, lp["attn"], h)
             q = layers.apply_rope(cfg, q, positions)
@@ -479,7 +479,7 @@ class PagedExecutor:
         cur_block = kv_lens // BS
         cur_off = kv_lens % BS
         for l in range(cfg.n_layers):
-            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            lp = jax.tree.map(lambda a, _l=l: a[_l], params["layers"])
             h = layers.apply_norm(cfg, lp["attn_norm"], x)
             q, k, v = layers.decode_self_attention(
                 cfg, lp["attn"], h, None, None, None, positions)

@@ -31,8 +31,10 @@ Three public pieces:
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import deque
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Callable, Deque, Dict, List, \
+    Optional, Tuple
 
 from repro.core import (
     DEVICE, HOST, LayerwiseBlockManager, OffloadEngine, PoolExhausted,
@@ -40,6 +42,32 @@ from repro.core import (
 )
 from repro.serving.costmodel import CostModel
 from repro.serving.request import Phase, Request
+
+if TYPE_CHECKING:  # pragma: no cover — import cycle (sanitizer -> here)
+    from repro.core.sanitizer import KVSanitizer
+
+
+# Which SchedulerCore queue a request in each Phase sits in. This registry
+# is load-bearing twice: the runtime sanitizer walks it to assert
+# phase/queue consistency after every step, and the PHASE001 lint rule
+# asserts it stays TOTAL over the Phase enum — adding a lifecycle state
+# without deciding where such requests live is a hard lint error, not a
+# silent fall-through in some free/cancel path.
+PHASE_QUEUES: Dict[Phase, str] = {
+    Phase.QUEUED: "waiting",
+    Phase.PREFILL: "prefilling",
+    Phase.DECODE: "decoding",
+    Phase.PAUSED: "paused",
+    Phase.FINISHED: "done",
+    Phase.CANCELLED: "cancelled",
+}
+
+# The queues holding LIVE requests — the ones cancel() must test and
+# unwind paths must cover. PHASE001 also checks that any scheduler
+# function dispatching over several of these covers all of them (or
+# carries an explicit suppression naming why not).
+LIVE_QUEUES: Tuple[str, ...] = ("waiting", "prefilling", "decoding",
+                                "paused")
 
 
 # --------------------------------------------------------------------------
@@ -72,6 +100,13 @@ class ServeConfig:
     admission: str = "fcfs"         # waiting-queue order: 'fcfs' |
     #                                 'prefix_aware' | 'deadline'
     #                                 (see AdmissionPolicy)
+    sanitize: bool = False          # opt-in runtime KV-accounting
+    #                                 sanitizer: shadow-track every pool/
+    #                                 cache/ledger mutation and assert the
+    #                                 S1-S8 invariants after each step on
+    #                                 either backend (docs/ARCHITECTURE.md
+    #                                 "Invariants & analysis"). Also forced
+    #                                 on by the REPRO_SANITIZE=1 env var.
     admission_age_frac: float = 0.5  # aging bound, unit: fraction of the
     #                                 request's own TTFT SLO.
     #                                 prefix_aware: a HIT is ordered by a
@@ -118,13 +153,13 @@ class ServeConfig:
     # SimConfig shims (and anything still importing them) behave exactly
     # as before the unification.
     @classmethod
-    def for_engine(cls, **kw) -> "ServeConfig":
+    def for_engine(cls, **kw: Any) -> "ServeConfig":
         kw.setdefault("num_device_blocks", 128)
         kw.setdefault("max_prefill_tokens", 32)
         return cls(**kw).validate()
 
     @classmethod
-    def for_sim(cls, **kw) -> "ServeConfig":
+    def for_sim(cls, **kw: Any) -> "ServeConfig":
         kw.setdefault("num_host_blocks", 1 << 20)
         kw.setdefault("max_batch_size", 256)
         kw.setdefault("chunk_floor", 16)
@@ -191,7 +226,8 @@ class FCFSAdmission(AdmissionPolicy):
 
     name = "fcfs"
 
-    def order(self, waiting, now, core):
+    def order(self, waiting: List[Request], now: float,
+              core: "SchedulerCore") -> List[Request]:
         return list(waiting)
 
 
@@ -220,10 +256,11 @@ class PrefixAwareAdmission(AdmissionPolicy):
 
     name = "prefix_aware"
 
-    def __init__(self, age_frac: float = 0.5):
+    def __init__(self, age_frac: float = 0.5) -> None:
         self.age_frac = age_frac
 
-    def order(self, waiting, now, core):
+    def order(self, waiting: List[Request], now: float,
+              core: "SchedulerCore") -> List[Request]:
         keyed: List[Tuple[float, int, Request]] = []
         for i, r in enumerate(waiting):
             head_start = self.age_frac * r.ttft_slo \
@@ -258,10 +295,11 @@ class DeadlineAdmission(AdmissionPolicy):
 
     name = "deadline"
 
-    def __init__(self, age_frac: float = 0.5):
+    def __init__(self, age_frac: float = 0.5) -> None:
         self.age_frac = age_frac
 
-    def order(self, waiting, now, core):
+    def order(self, waiting: List[Request], now: float,
+              core: "SchedulerCore") -> List[Request]:
         keyed: List[Tuple[float, float, int, Request]] = []
         for i, r in enumerate(waiting):
             if r.phase is Phase.PAUSED and r.last_token_time >= 0.0:
@@ -313,7 +351,7 @@ class SchedulerCore:
                  bm: LayerwiseBlockManager, off: OffloadEngine,
                  slo: SLOScheduler, n_layers: int,
                  physical_copy: Optional[PhysicalCopy] = None,
-                 reserve_blocks: int = 0):
+                 reserve_blocks: int = 0) -> None:
         self.sc = sc
         self.cost = cost
         self.bm = bm
@@ -342,6 +380,13 @@ class SchedulerCore:
             # cache-driven copies (COW, promote, demote) charge the
             # transfer ledger here; the engine also moves the real bytes
             bm.on_copy = self.cache_copy
+        # opt-in KV-accounting sanitizer: installed AFTER on_copy so its
+        # event wrappers see the fully-wired manager; backends call
+        # sanitizer.check(core) after every step
+        self.sanitizer: Optional["KVSanitizer"] = None
+        if sc.sanitize or os.environ.get("REPRO_SANITIZE"):
+            from repro.core.sanitizer import KVSanitizer
+            self.sanitizer = KVSanitizer(bm, off, cost)
 
     # ------------------------------------------------------------- queries
     def in_flight(self) -> int:
@@ -525,7 +570,7 @@ class SchedulerCore:
         from_pool = a.pool
         src, dst = self.bm.move_layer(rid, layer, to_pool, detach=True)
         if self.physical_copy is not None:
-            for s, d in zip(src, dst):
+            for s, d in zip(src, dst, strict=True):
                 self.physical_copy(from_pool, s, to_pool, d)
         self.off.ledger.submit(now, nbytes, kind)
         if kind == "reload":
@@ -568,6 +613,9 @@ class SchedulerCore:
         re-seats a resumed prefill by its original `prefill_start`).
         Returns False when `r` is not running or the HOST pool cannot
         hold its KV (the victim is then simply left running)."""
+        # repro-lint: disable=PHASE001 -- pause targets RUNNING work only:
+        # a QUEUED request holds no KV to demote and a PAUSED one is
+        # already parked, so only prefilling/decoding membership is tested
         if r in self.prefilling:
             src_q = self.prefilling
         elif r in self.decoding:
@@ -863,31 +911,31 @@ class CoreDelegateMixin:
     core: SchedulerCore
 
     @property
-    def waiting(self):
+    def waiting(self) -> Deque[Request]:
         return self.core.waiting
 
     @property
-    def prefilling(self):
+    def prefilling(self) -> List[Request]:
         return self.core.prefilling
 
     @property
-    def decoding(self):
+    def decoding(self) -> List[Request]:
         return self.core.decoding
 
     @property
-    def paused(self):
+    def paused(self) -> List[Request]:
         return self.core.paused
 
     @property
-    def done(self):
+    def done(self) -> List[Request]:
         return self.core.done
 
     @property
-    def cancelled(self):
+    def cancelled(self) -> List[Request]:
         return self.core.cancelled
 
     @property
-    def host_layers(self):
+    def host_layers(self) -> Dict[str, int]:
         return self.core.host_layers
 
     def clock(self) -> float:

@@ -182,8 +182,8 @@ class SimMetrics:
         SLO-attainment throughput the deadline scheduler optimizes)."""
         if self.makespan <= 0:
             return 0.0
-        good = sum(n for n, s in zip(self.req_tokens, self.deadline_slack)
-                   if s >= 0)
+        good = sum(n for n, s in zip(self.req_tokens, self.deadline_slack,
+                                     strict=True) if s >= 0)
         return good / self.makespan
 
     def class_report(self) -> dict:
@@ -208,7 +208,7 @@ class SimMetrics:
                     [self.tbt[i] for i in idx], 0.99),
                 "deadline_violation_rate":
                     sum(1 for s in slack if s < 0) / max(len(slack), 1),
-                "goodput": (sum(n for n, s in zip(toks, slack)
+                "goodput": (sum(n for n, s in zip(toks, slack, strict=True)
                                 if s >= 0) / self.makespan)
                     if self.makespan > 0 else 0.0,
             }
@@ -560,9 +560,11 @@ class ServingSimulator(CoreDelegateMixin):
     def step(self) -> bool:
         """One engine-step iteration at the current clock. Returns False
         when fully idle (nothing admissible, nothing in flight)."""
-        if self.sim.chunked:
-            return self._step_chunked()
-        return self._step_exclusive()
+        out = self._step_chunked() if self.sim.chunked \
+            else self._step_exclusive()
+        if self.core.sanitizer is not None:
+            self.core.sanitizer.check(self.core)
+        return out
 
     def _step_exclusive(self) -> bool:
         """vLLM 0.5.5 engine-step: prefills stall the decode batch."""

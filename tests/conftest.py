@@ -11,6 +11,24 @@ def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
 
 
+@pytest.fixture(autouse=True)
+def _force_sim_sanitizer(monkeypatch):
+    """Run every sim-backend test with the KV-accounting sanitizer on:
+    the shadow model (src/repro/core/sanitizer.py) then asserts the
+    S1-S8 invariants after every scheduler step of every test. The
+    config is mutated IN PLACE (not replaced) so tests asserting
+    `sim.sim is sc` identity keep holding."""
+    from repro.serving.sim import ServingSimulator
+    orig = ServingSimulator.__init__
+
+    def patched(self, cfg, hw, sim, *args, **kwargs):
+        sim.sanitize = True
+        orig(self, cfg, hw, sim, *args, **kwargs)
+
+    patched._orig = orig  # tests that need the unforced ctor restore this
+    monkeypatch.setattr(ServingSimulator, "__init__", patched)
+
+
 @pytest.fixture(autouse=True, scope="module")
 def _clear_jax_caches_between_modules():
     """Drop compiled executables between test modules. The full suite

@@ -1,0 +1,15 @@
+"""CFG001 corpus (known-bad): dead and misplaced ServeConfig fields.
+Never executed — parsed only; the sibling sim.py/engine.py files are
+the backend read sites the rule cross-references."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    # ---- scheduling axes (shared) -------------------------------------
+    policy: str = "layerkv"
+    dead_knob: int = 0        # BAD: read by nobody
+    # ---- engine-only ---------------------------------------------------
+    engine_knob: int = 1      # BAD: the engine never reads it
+    # ---- sim-only --------------------------------------------------------
+    sim_knob: int = 2         # ok: sim.py reads it

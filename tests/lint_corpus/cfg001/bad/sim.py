@@ -1,0 +1,5 @@
+"""CFG001 corpus: the sim backend's read sites."""
+
+
+def run(sc):
+    return (sc.policy, sc.sim_knob, sc.engine_knob)

@@ -1,0 +1,5 @@
+"""CFG001 corpus: the engine backend's read sites."""
+
+
+def run(sc):
+    return (sc.policy, sc.live_knob, sc.engine_knob)

@@ -1,0 +1,14 @@
+"""CFG001 corpus (known-good twin): every field is read by the backend
+set its section claims."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    # ---- scheduling axes (shared) -------------------------------------
+    policy: str = "layerkv"
+    live_knob: int = 0        # read by both backends
+    # ---- engine-only ---------------------------------------------------
+    engine_knob: int = 1      # engine.py reads it, sim.py does not
+    # ---- sim-only --------------------------------------------------------
+    sim_knob: int = 2         # sim.py reads it, engine.py does not

@@ -1,0 +1,5 @@
+"""CFG001 corpus: the sim backend's read sites."""
+
+
+def run(sc):
+    return (sc.policy, sc.live_knob, sc.sim_knob)

@@ -1,0 +1,29 @@
+"""JIT001 corpus (known-bad): raw Python ints crossing jax.jit as
+traced arguments. Never executed — parsed only."""
+import functools
+
+import jax
+
+
+def _bucket(n, q=64):
+    return max(q, (n + q - 1) // q * q)
+
+
+class Executor:
+    def __init__(self):
+        self._decode_fn = jax.jit(self._decode,
+                                  static_argnames=("cap",))
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _forward(self, x, width):
+        return x[:width]
+
+    def _decode(self, x, width, cap):
+        return x[:width], cap
+
+    def step(self, x, toks):
+        n = len(toks)
+        self._forward(x, n)                    # BAD: len() traced
+        self._forward(x, 128)                  # BAD: int literal traced
+        self._decode_fn(x, _bucket(n), cap=4)  # ok: bucketed + static
+        self._decode_fn(x, n + 1, cap=4)       # BAD: tainted arithmetic

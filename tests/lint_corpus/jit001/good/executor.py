@@ -1,0 +1,31 @@
+"""JIT001 corpus (known-good twin): every width is bucketed, wrapped in
+an array, or declared static before it crosses jax.jit."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _bucket(n, q=64):
+    return max(q, (n + q - 1) // q * q)
+
+
+class Executor:
+    def __init__(self):
+        self._decode_fn = jax.jit(self._decode,
+                                  static_argnames=("cap",))
+
+    @functools.partial(jax.jit, static_argnums=(0, 2))
+    def _forward(self, x, width):
+        return x[:width]
+
+    def _decode(self, x, width, cap):
+        return x[:width], cap
+
+    def step(self, x, toks):
+        n = len(toks)
+        nb = _bucket(n)
+        self._forward(x, nb)                     # ok: width is static
+        self._forward(x, _bucket(128))           # ok: bucketed
+        self._decode_fn(x, jnp.asarray(n), cap=4)  # ok: array + static
+        self._decode_fn(x, nb, cap=4)            # ok: bucketed name

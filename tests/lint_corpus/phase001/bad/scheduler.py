@@ -1,0 +1,29 @@
+"""PHASE001 corpus (known-bad): a PHASE_QUEUES registry missing an enum
+member, and a cancel path that forgets the paused queue. Never
+executed — parsed only."""
+import enum
+
+
+class Phase(enum.Enum):
+    QUEUED = 0
+    PREFILL = 1
+    DECODE = 2
+    PAUSED = 3
+
+
+PHASE_QUEUES = {
+    Phase.QUEUED: "waiting",
+    Phase.PREFILL: "prefilling",
+    Phase.DECODE: "decoding",
+}  # BAD: no entry for Phase.PAUSED
+LIVE_QUEUES = ("waiting", "prefilling", "decoding", "paused")
+
+
+class Core:
+    def cancel(self, r):
+        if r in self.waiting:        # BAD: dispatch never tests 'paused'
+            self.waiting.remove(r)
+        elif r in self.prefilling:
+            self.prefilling.remove(r)
+        elif r in self.decoding:
+            self.decoding.remove(r)

@@ -1,0 +1,31 @@
+"""PHASE001 corpus (known-good twin): the registry is total over the
+enum and the cancel dispatch covers every live queue."""
+import enum
+
+
+class Phase(enum.Enum):
+    QUEUED = 0
+    PREFILL = 1
+    DECODE = 2
+    PAUSED = 3
+
+
+PHASE_QUEUES = {
+    Phase.QUEUED: "waiting",
+    Phase.PREFILL: "prefilling",
+    Phase.DECODE: "decoding",
+    Phase.PAUSED: "paused",
+}
+LIVE_QUEUES = ("waiting", "prefilling", "decoding", "paused")
+
+
+class Core:
+    def cancel(self, r):
+        if r in self.waiting:
+            self.waiting.remove(r)
+        elif r in self.prefilling:
+            self.prefilling.remove(r)
+        elif r in self.decoding:
+            self.decoding.remove(r)
+        elif r in self.paused:
+            self.paused.remove(r)

@@ -1,0 +1,17 @@
+"""PL001 corpus (known-bad): pl.program_id read inside pl.when bodies,
+one per form the rule understands. Never executed — parsed only."""
+from jax.experimental import pallas as pl
+
+
+def kernel(o_ref):
+    i = pl.program_id(0)  # fine: top level
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = pl.program_id(1)  # BAD: decorator form
+
+    def _finalize():
+        o_ref[1] = pl.program_id(0)  # BAD: call form
+
+    pl.when(i == 1)(_finalize)
+    pl.when(i == 2)(lambda: o_ref[pl.program_id(0)])  # BAD: lambda form

@@ -1,0 +1,18 @@
+"""PL001 corpus (known-good twin): program ids hoisted to kernel top
+level and closed over — the pattern the real kernels use."""
+from jax.experimental import pallas as pl
+
+
+def kernel(o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = j  # closes over the hoisted id
+
+    def _finalize():
+        o_ref[1] = i
+
+    pl.when(i == 1)(_finalize)
+    pl.when(i == 2)(lambda: o_ref[j])

@@ -1,0 +1,19 @@
+"""SEAM001 corpus (known-bad): a policy that mutates core and request
+state instead of observing it. Never executed — parsed only."""
+
+
+class AdmissionPolicy:
+    def order(self, waiting, now, core):
+        raise NotImplementedError
+
+
+class GreedyAdmission(AdmissionPolicy):
+    name = "greedy"
+
+    def order(self, waiting, now, core):
+        best = sorted(waiting, key=lambda r: r.arrival)
+        core.preempt_request(best[0])  # BAD: mutating call on core
+        for r in waiting:
+            r.priority = 99            # BAD: writes through argument
+        core.waiting.clear()           # BAD: non-read call on core state
+        return best

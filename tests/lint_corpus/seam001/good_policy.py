@@ -1,0 +1,24 @@
+"""SEAM001 corpus (known-good twin): the same ranking expressed through
+the read-only observer API and policy-local state."""
+
+
+class AdmissionPolicy:
+    def order(self, waiting, now, core):
+        raise NotImplementedError
+
+
+class GreedyAdmission(AdmissionPolicy):
+    name = "greedy"
+
+    def __init__(self):
+        self._calls = 0  # policy-local state is fine
+
+    def order(self, waiting, now, core):
+        self._calls += 1
+        keyed = []
+        for i, r in enumerate(waiting):
+            eta = core.admit_eta(r, now)       # observer API
+            hit = core.cached_hint(r)          # observer API
+            keyed.append((eta - hit, r.arrival, i, r))
+        keyed.sort(key=lambda k: k[:3])
+        return [r for _, _, _, r in keyed]

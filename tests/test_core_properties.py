@@ -401,6 +401,12 @@ def test_session_cancel_accounting_property(schedule):
     assert sim.bm.num_free(DEVICE) == sim.bm.pools[DEVICE].num_blocks
     assert sim.bm.num_free(HOST) == sim.bm.pools[HOST].num_blocks
     assert not sim.bm.live_requests()
+    # sanitizer-enabled re-run: conftest forces sanitize=True for sim
+    # tests, so the shadow model checked S1-S8 at every step above;
+    # re-assert the deep tier at the post-unwind baseline (S8)
+    san = sim.core.sanitizer
+    assert san is not None and san.n_checks > 0
+    san.check(sim.core, full=True)
 
 
 # ------------------------------------------- preemption invariants ---------
@@ -471,6 +477,11 @@ def test_preemption_lossless_property(schedule):
     assert sim.bm.num_free(DEVICE) == sim.bm.pools[DEVICE].num_blocks
     assert sim.bm.num_free(HOST) == sim.bm.pools[HOST].num_blocks
     assert not sim.bm.live_requests()
+    # sanitizer-enabled re-run (see cancel property above): every pause/
+    # resume step was shadow-checked; deep-check the final baseline too
+    san = sim.core.sanitizer
+    assert san is not None and san.n_checks > 0
+    san.check(sim.core, full=True)
 
 
 # ------------------------------------------- cluster routing invariants ----

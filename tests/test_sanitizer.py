@@ -1,0 +1,156 @@
+"""KV-accounting sanitizer tests: clean runs stay silent on both
+backends, each injected bug class (double free, refcount leak, ledger
+mismatch) is caught with its invariant id, and the opt-in wiring
+(ServeConfig.sanitize / REPRO_SANITIZE) installs the shadow model."""
+import dataclasses
+
+import pytest
+
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.core.sanitizer import KVSanitizer, SanitizerError
+from repro.serving.costmodel import L20
+from repro.serving.scheduler import ServeConfig
+from repro.serving.session import ServingSession
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import shared_prefix, sharegpt_like
+
+
+def _mid_flight_sim(n_steps=60, **kw):
+    """A sanitized sim paused mid-flight: live tables, cache entries
+    (when prefix_cache is on), and ledger traffic all populated."""
+    cfg = SimConfig(policy="layerkv", num_device_blocks=2048,
+                    num_host_blocks=1 << 13, sanitize=True, **kw)
+    reqs = shared_prefix(12, rate=50.0, seed=0) \
+        if kw.get("prefix_cache") else sharegpt_like(12, rate=50.0, seed=0)
+    sim = ServingSimulator(LLAMA2_7B, L20, cfg)
+    sess = ServingSession(sim)
+    for r in reqs:
+        sess.submit(r, arrival=r.arrival)
+    for _ in range(n_steps):
+        if not sess.step():
+            break
+    assert sim.core.sanitizer is not None
+    assert sim.bm.tables, "need live allocations mid-flight"
+    return sim
+
+
+# ------------------------------------------------------------ clean runs --
+
+def test_clean_run_passes_and_checks_fire():
+    cfg = SimConfig(policy="layerkv", num_device_blocks=2048,
+                    num_host_blocks=1 << 13, sanitize=True)
+    sim = ServingSimulator(LLAMA2_7B, L20, cfg)
+    sim.run(sharegpt_like(20, rate=20.0, seed=1))
+    san = sim.core.sanitizer
+    assert san is not None and san.n_checks > 0
+    assert san.n_full_checks > 0, "deep tier never ran"
+    assert san.n_events > 0, "shadow model observed no mutations"
+    # S5 held all run: every h2d charge was movement-backed
+    assert san.charged_h2d == pytest.approx(san.expected_h2d)
+    san.check(sim.core, full=True)  # idle baseline (S8) re-asserts
+
+
+def test_clean_run_with_preemption_and_prefix_cache():
+    cfg = SimConfig(policy="layerkv", num_device_blocks=2048,
+                    num_host_blocks=1 << 13, sanitize=True,
+                    chunked=True, prefix_cache=True,
+                    preemption=True, admission="deadline")
+    sim = ServingSimulator(LLAMA2_7B, L20, cfg)
+    sim.run(shared_prefix(20, rate=50.0, seed=2))
+    san = sim.core.sanitizer
+    san.check(sim.core, full=True)
+    assert san.charged_h2d == pytest.approx(san.expected_h2d)
+    assert san.charged_d2h >= san.expected_d2h - 1.0
+
+
+def test_sanitizer_off_by_default():
+    # the conftest fixture forces sanitize on for sim-backend tests, so
+    # probe the dataclass default rather than a simulator instance
+    fields = {f.name: f for f in dataclasses.fields(ServeConfig)}
+    assert fields["sanitize"].default is False
+
+
+def test_env_var_opt_in(monkeypatch):
+    # undo the conftest force so the env var is the ONLY opt-in path
+    orig = getattr(ServingSimulator.__init__, "_orig", None)
+    if orig is not None:
+        monkeypatch.setattr(ServingSimulator, "__init__", orig)
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg = SimConfig(policy="layerkv")
+    assert cfg.sanitize is False
+    sim = ServingSimulator(LLAMA2_7B, L20, cfg)
+    assert sim.core.sanitizer is not None
+
+
+# ------------------------------------------------- injected bug classes --
+
+def test_double_free_caught():
+    sim = _mid_flight_sim()
+    san = sim.core.sanitizer
+    san.inject_double_free()
+    with pytest.raises(SanitizerError, match="S1"):
+        san.check(sim.core, full=True)
+
+
+def test_refcount_leak_caught():
+    sim = _mid_flight_sim(prefix_cache=True, chunked=True)
+    san = sim.core.sanitizer
+    san.inject_refcount_leak()
+    with pytest.raises(SanitizerError, match="S4"):
+        san.check(sim.core, full=True)
+
+
+def test_ledger_mismatch_caught():
+    sim = _mid_flight_sim()
+    san = sim.core.sanitizer
+    san.inject_ledger_mismatch()
+    with pytest.raises(SanitizerError, match="S5"):
+        san.check(sim.core, full=True)
+
+
+def test_mutation_time_trap_double_free_via_api():
+    """Freeing through the pool API twice trips the shadow at the event
+    itself, not at the next check."""
+    sim = _mid_flight_sim()
+    pool = sim.bm.pools["device"]
+    owned = next(iter(pool._owner))
+    # first free is legal; the second is the historical bug class
+    pool.free([owned])
+    with pytest.raises(SanitizerError, match="double free"):
+        pool.free([owned])
+
+
+# ------------------------------------------------------------ real engine --
+
+@pytest.mark.slow
+def test_engine_backend_sanitized():
+    """The shadow model rides the REAL engine too: tight device pool
+    forces offload/reload traffic and every step is checked."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import EngineConfig, LayerKVEngine
+    from repro.serving.request import Request
+    import numpy as np
+
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    r0 = np.random.RandomState(11)
+    reqs = []
+    for i in range(4):
+        plen = int(r0.randint(24, 40))
+        reqs.append(Request(
+            rid=f"r{i}", prompt_len=plen,
+            output_len=int(r0.randint(8, 14)), arrival=0.0,
+            prompt=[int(x) for x in r0.randint(0, cfg.vocab_size, plen)]))
+    eng = LayerKVEngine(
+        cfg, None,
+        EngineConfig(policy="layerkv", slo_aware=False,
+                     num_device_blocks=24, num_host_blocks=512,
+                     block_size=8, sanitize=True),
+        rng=jax.random.PRNGKey(42))
+    done = eng.run(reqs)
+    assert len(done) == 4
+    san = eng.core.sanitizer
+    assert isinstance(san, KVSanitizer) and san.n_checks > 0
+    san.check(eng.core, full=True)
+    assert san.charged_h2d == pytest.approx(san.expected_h2d)

@@ -1,0 +1,11 @@
+"""repro-lint: the project's AST-based static-analysis framework.
+
+Dependency-free (stdlib `ast` only, in the style of tools/check_docs.py)
+so it runs anywhere — including a CI step before test deps install.
+
+    python tools/analyze/run.py src        # lint the serving stack
+
+See `core.py` for the runner/suppression machinery, `rules.py` for the
+project-specific rules (PL001, JIT001, SEAM001, CFG001, PHASE001), and
+docs/ARCHITECTURE.md "Invariants & analysis" for what each rule pins.
+"""

@@ -1,0 +1,212 @@
+"""repro-lint framework: file contexts, rule base classes, suppression
+handling and the runner.
+
+Suppression grammar (a reason after ``--`` is mandatory; the runner
+rejects bare disables and flags suppressions that match nothing):
+
+    x = compute()  # repro-lint: disable=JIT001 -- width is pre-bucketed
+
+    # repro-lint: disable=PHASE001 -- pause targets running work only
+    if r in self.prefilling:
+        ...
+
+    # repro-lint: file-disable=SEAM001 -- generated file
+
+A line-level suppression covers violations on its own line, or — when it
+sits in a contiguous block of comment lines — violations on the first
+non-comment line below the block.  A file-level suppression covers the
+whole file.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(?P<kind>disable|file-disable)="
+    r"(?P<ids>[A-Z0-9]+(?:\s*,\s*[A-Z0-9]+)*)"
+    r"(?:\s*--\s*(?P<reason>\S.*))?"
+)
+COMMENT_RE = re.compile(r"^\s*#")
+
+
+@dataclasses.dataclass
+class Violation:
+    """One rule hit, reported as ``path:line: RULE message``."""
+
+    rule_id: str
+    path: Path
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule_id} {self.message}"
+
+
+@dataclasses.dataclass
+class Suppression:
+    rule_id: str
+    path: Path
+    line: int            # line the comment itself is on (1-based)
+    file_level: bool
+    reason: Optional[str]
+    covers: int          # line whose violations it covers (line rules)
+    used: bool = False
+
+
+class FileContext:
+    """Parsed view of one source file handed to every rule."""
+
+    def __init__(self, path: Path, source: str) -> None:
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+
+
+class Rule:
+    """Base class: per-file rules override ``check_file``."""
+
+    rule_id = "RULE000"
+    description = ""
+    project_wide = False
+
+    def interested(self, path: Path) -> bool:
+        return path.suffix == ".py"
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        return []
+
+    def check_project(
+        self, ctxs: Sequence[FileContext]
+    ) -> List[Violation]:
+        return []
+
+    def violation(
+        self, ctx: FileContext, line: int, message: str
+    ) -> Violation:
+        return Violation(self.rule_id, ctx.path, line, message)
+
+
+def _covered_line(lines: List[str], idx: int) -> int:
+    """Line (1-based) covered by a suppression comment at ``idx``.
+
+    For an own-line comment inside a contiguous comment block, that is
+    the first non-comment line below the block; for a trailing comment,
+    the line itself.
+    """
+    if not COMMENT_RE.match(lines[idx]):
+        return idx + 1  # trailing comment on a code line
+    j = idx
+    while j < len(lines) and COMMENT_RE.match(lines[j]):
+        j += 1
+    return j + 1
+
+
+def parse_suppressions(ctx: FileContext) -> Tuple[
+    List[Suppression], List[Violation]
+]:
+    """Extract suppressions; malformed ones come back as violations."""
+    sups: List[Suppression] = []
+    errors: List[Violation] = []
+    for i, line in enumerate(ctx.lines):
+        m = SUPPRESS_RE.search(line)
+        if m is None:
+            if "repro-lint:" in line and COMMENT_RE.search(line):
+                errors.append(Violation(
+                    "LINT000", ctx.path, i + 1,
+                    "malformed repro-lint comment (expected "
+                    "'# repro-lint: disable=RULE -- reason')"))
+            continue
+        reason = m.group("reason")
+        if not reason:
+            errors.append(Violation(
+                "LINT000", ctx.path, i + 1,
+                "suppression without a reason: append "
+                "' -- <why this is safe>'"))
+            continue
+        file_level = m.group("kind") == "file-disable"
+        covers = 0 if file_level else _covered_line(ctx.lines, i)
+        for rid in re.split(r"\s*,\s*", m.group("ids")):
+            sups.append(Suppression(
+                rid, ctx.path, i + 1, file_level, reason, covers))
+    return sups, errors
+
+
+def apply_suppressions(
+    violations: List[Violation],
+    sups_by_file: Dict[Path, List[Suppression]],
+) -> Tuple[List[Violation], List[Violation]]:
+    """Filter suppressed hits; also flag suppressions that match nothing."""
+    kept: List[Violation] = []
+    for v in violations:
+        sups = sups_by_file.get(v.path, [])
+        hit = False
+        for s in sups:
+            if s.rule_id != v.rule_id:
+                continue
+            if s.file_level or s.covers == v.line:
+                s.used = True
+                hit = True
+        if not hit:
+            kept.append(v)
+    unused: List[Violation] = []
+    for sups in sups_by_file.values():
+        for s in sups:
+            if not s.used:
+                unused.append(Violation(
+                    "LINT001", s.path, s.line,
+                    f"unused suppression for {s.rule_id}: nothing to "
+                    "disable here (stale comment?)"))
+    return kept, unused
+
+
+def collect_files(roots: Iterable[str]) -> List[Path]:
+    files: List[Path] = []
+    for root in roots:
+        p = Path(root)
+        if p.is_file():
+            files.append(p)
+        else:
+            files.extend(sorted(p.rglob("*.py")))
+    return files
+
+
+def run_rules(
+    rules: Sequence[Rule], roots: Iterable[str]
+) -> List[Violation]:
+    """Parse every file once, run all rules, resolve suppressions."""
+    ctxs: List[FileContext] = []
+    out: List[Violation] = []
+    for path in collect_files(roots):
+        try:
+            ctxs.append(FileContext(path, path.read_text()))
+        except (SyntaxError, UnicodeDecodeError) as exc:
+            out.append(Violation(
+                "LINT002", path, getattr(exc, "lineno", 1) or 1,
+                f"could not parse file: {exc}"))
+    sups_by_file: Dict[Path, List[Suppression]] = {}
+    for ctx in ctxs:
+        sups, errors = parse_suppressions(ctx)
+        sups_by_file[ctx.path] = sups
+        out.extend(errors)
+
+    raw: List[Violation] = []
+    for rule in rules:
+        if rule.project_wide:
+            raw.extend(rule.check_project(
+                [c for c in ctxs if rule.interested(c.path)]))
+        else:
+            for ctx in ctxs:
+                if rule.interested(ctx.path):
+                    raw.extend(rule.check_file(ctx))
+
+    kept, unused = apply_suppressions(raw, sups_by_file)
+    out.extend(kept)
+    out.extend(unused)
+    out.sort(key=lambda v: (str(v.path), v.line, v.rule_id))
+    return out

@@ -1,0 +1,599 @@
+"""repro-lint rules for the layer-wise serving core.
+
+Each rule pins an invariant that once regressed silently (or nearly
+did).  One line per rule; the long story lives in docs/ARCHITECTURE.md
+"Invariants & analysis".
+
+  PL001    no pl.program_id inside a pl.when body (kernels/)
+  JIT001   no raw Python int shape/width crossing jax.jit un-bucketed
+  SEAM001  Admission/Routing policies are read-only observers
+  CFG001   every ServeConfig field is read by the backend set that
+           owns it (no dead or cross-backend config)
+  PHASE001 queue dispatches over request phase handle every live queue
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+try:
+    from tools.analyze.core import FileContext, Rule, Violation
+except ImportError:  # run as a plain script: tools/analyze on sys.path
+    from core import FileContext, Rule, Violation
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """'pl.program_id' for Attribute(Name('pl'), 'program_id')."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+# ------------------------------------------------------------------ PL001
+class PL001NoProgramIdInWhen(Rule):
+    """Pallas `pl.when` predicates a *body*; reading `pl.program_id`
+    inside one gives grid-position-dependent control flow that the
+    interpret-mode harness executes differently from compiled mode
+    (see kernels/paged_prefill.py).  Read program ids at kernel top
+    level and close over them."""
+
+    rule_id = "PL001"
+    description = "pl.program_id read inside a pl.when body"
+
+    def interested(self, path: Path) -> bool:
+        return path.suffix == ".py" and "kernels" in path.parts
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        defs: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.FunctionDef)}
+        bodies: List[ast.AST] = []
+        for node in ast.walk(ctx.tree):
+            # @pl.when(cond) decorating a def
+            if isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    if (isinstance(dec, ast.Call)
+                            and isinstance(dec.func, ast.Attribute)
+                            and dec.func.attr == "when"):
+                        bodies.append(node)
+            # pl.when(cond)(fn_or_lambda)
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Call)
+                    and isinstance(node.func.func, ast.Attribute)
+                    and node.func.func.attr == "when"
+                    and node.args):
+                target = node.args[0]
+                if isinstance(target, ast.Lambda):
+                    bodies.append(target.body)
+                elif (isinstance(target, ast.Name)
+                        and target.id in defs):
+                    bodies.append(defs[target.id])
+        for body in bodies:
+            for sub in ast.walk(body):
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr == "program_id"):
+                    out.append(self.violation(
+                        ctx, sub.lineno,
+                        "pl.program_id read inside a pl.when body; "
+                        "hoist it to kernel top level"))
+        return out
+
+
+# ----------------------------------------------------------------- JIT001
+_TAINT_FUNCS = {"len", "int"}
+
+
+class JIT001RawIntAcrossJit(Rule):
+    """A raw Python int (literal, len(), or arithmetic thereof) passed
+    as a traced argument to a jitted callable becomes part of the trace
+    signature via its *value* only when static — otherwise every novel
+    width is a silent retrace.  Route widths through `_bucket` /
+    `_round_up` / `jnp.asarray`, or declare them static."""
+
+    rule_id = "JIT001"
+    description = "raw Python int crossing jax.jit without bucketing"
+
+    def interested(self, path: Path) -> bool:
+        return path.name in ("executor.py", "engine.py")
+
+    # -- taint -------------------------------------------------------
+    def _tainted(self, node: ast.AST,
+                 env: Dict[str, List[Tuple[int, bool]]],
+                 line: int) -> bool:
+        if isinstance(node, ast.Constant):
+            return isinstance(node.value, int) \
+                and not isinstance(node.value, bool)
+        if isinstance(node, ast.Name):
+            hist = env.get(node.id, [])
+            prior = [t for ln, t in hist if ln <= line]
+            return prior[-1] if prior else False
+        if isinstance(node, ast.BinOp):
+            return self._tainted(node.left, env, line) \
+                or self._tainted(node.right, env, line)
+        if isinstance(node, ast.UnaryOp):
+            return self._tainted(node.operand, env, line)
+        if isinstance(node, ast.IfExp):
+            return self._tainted(node.body, env, line) \
+                or self._tainted(node.orelse, env, line)
+        if isinstance(node, ast.Call):
+            return isinstance(node.func, ast.Name) \
+                and node.func.id in _TAINT_FUNCS
+        return False
+
+    # -- jitted callables ---------------------------------------------
+    @staticmethod
+    def _static_spec(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+        nums: Set[int] = set()
+        names: Set[str] = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                vals = kw.value.elts \
+                    if isinstance(kw.value, ast.Tuple) else [kw.value]
+                for v in vals:
+                    if isinstance(v, ast.Constant):
+                        nums.add(int(v.value))
+            elif kw.arg == "static_argnames":
+                vals = kw.value.elts if isinstance(
+                    kw.value, (ast.Tuple, ast.List)) else [kw.value]
+                for v in vals:
+                    if isinstance(v, ast.Constant):
+                        names.add(str(v.value))
+        return nums, names
+
+    @staticmethod
+    def _is_jit(node: ast.AST) -> bool:
+        return _attr_chain(node).endswith("jax.jit") \
+            or _attr_chain(node) == "jit"
+
+    def _collect_jitted(self, tree: ast.Module) -> Dict[str, Dict]:
+        """name -> {params, static_nums, static_names, offset}."""
+        jitted: Dict[str, Dict] = {}
+        method_params: Dict[str, List[str]] = {}
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            params = [a.arg for a in node.args.args]
+            method_params[node.name] = params
+            for dec in node.decorator_list:
+                # @functools.partial(jax.jit, static_argnums=...)
+                if (isinstance(dec, ast.Call) and dec.args
+                        and _attr_chain(dec.func).endswith("partial")
+                        and self._is_jit(dec.args[0])):
+                    nums, names = self._static_spec(dec)
+                    jitted[node.name] = {
+                        "params": params, "nums": nums,
+                        "names": names,
+                        "offset": 1 if params[:1] == ["self"] else 0}
+                elif isinstance(dec, ast.Call) and self._is_jit(dec.func):
+                    nums, names = self._static_spec(dec)
+                    jitted[node.name] = {
+                        "params": params, "nums": nums,
+                        "names": names,
+                        "offset": 1 if params[:1] == ["self"] else 0}
+        # self._f = jax.jit(self._g, ...) / f = jax.jit(g, ...)
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)
+                    and self._is_jit(node.value.func)
+                    and len(node.targets) == 1):
+                continue
+            tgt = node.targets[0]
+            name = tgt.attr if isinstance(tgt, ast.Attribute) else (
+                tgt.id if isinstance(tgt, ast.Name) else None)
+            if name is None or not node.value.args:
+                continue
+            nums, names = self._static_spec(node.value)
+            wrapped = node.value.args[0]
+            params: Optional[List[str]] = None
+            offset = 0
+            if isinstance(wrapped, ast.Attribute) \
+                    and wrapped.attr in method_params:
+                params = method_params[wrapped.attr]
+                offset = 1 if params[:1] == ["self"] else 0
+            jitted[name] = {"params": params, "nums": nums,
+                            "names": names, "offset": offset}
+        return jitted
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        jitted = self._collect_jitted(ctx.tree)
+        if not jitted:
+            return []
+        out: List[Violation] = []
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            env: Dict[str, List[Tuple[int, bool]]] = {}
+            for st in ast.walk(fn):
+                tgt: Optional[ast.expr] = None
+                val: Optional[ast.expr] = None
+                if isinstance(st, ast.Assign) and len(st.targets) == 1:
+                    tgt, val = st.targets[0], st.value
+                elif isinstance(st, (ast.AnnAssign, ast.AugAssign)):
+                    tgt, val = st.target, st.value
+                if isinstance(tgt, ast.Name) and val is not None:
+                    env.setdefault(tgt.id, []).append(
+                        (st.lineno, self._tainted(val, env, st.lineno)))
+            for call in ast.walk(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                name = call.func.attr \
+                    if isinstance(call.func, ast.Attribute) else (
+                        call.func.id
+                        if isinstance(call.func, ast.Name) else None)
+                if name not in jitted:
+                    continue
+                spec = jitted[name]
+                for i, arg in enumerate(call.args):
+                    idx = i + spec["offset"]
+                    if idx in spec["nums"]:
+                        continue
+                    if spec["params"] is not None \
+                            and idx < len(spec["params"]) \
+                            and spec["params"][idx] in spec["names"]:
+                        continue
+                    if self._tainted(arg, env, call.lineno):
+                        out.append(self.violation(
+                            ctx, call.lineno,
+                            f"raw Python int as traced arg {i} of "
+                            f"jitted '{name}': bucket it "
+                            "(_bucket/_round_up/jnp.asarray) or "
+                            "declare it static"))
+                for kw in call.keywords:
+                    if kw.arg is None or kw.arg in spec["names"]:
+                        continue
+                    if spec["params"] is not None \
+                            and kw.arg in spec["params"] \
+                            and spec["params"].index(kw.arg) \
+                            in spec["nums"]:
+                        continue
+                    if self._tainted(kw.value, env, call.lineno):
+                        out.append(self.violation(
+                            ctx, call.lineno,
+                            f"raw Python int as traced kwarg "
+                            f"'{kw.arg}' of jitted '{name}': bucket "
+                            "it or declare it static"))
+        return out
+
+
+# ---------------------------------------------------------------- SEAM001
+_READ_API = frozenset({
+    # SchedulerCore observer surface
+    "load_stats", "admit_eta", "cached_hint", "device_need",
+    "resume_need", "in_flight", "occupancy",
+    # block manager / prefix cache probes
+    "match_prefix", "num_free", "layers_on", "allocation",
+    "blocks_for_tokens", "request_blocks", "total_host_blocks",
+    "reclaimable_blocks",
+    # cost model queries
+    "chunk_prefill_time", "prefill_time", "decode_step_time",
+    "kv_bytes",
+    # harmless pure container reads
+    "get", "keys", "values", "items", "index", "copy",
+})
+_ROOT_PRESERVING = frozenset(
+    {"enumerate", "sorted", "reversed", "list", "tuple", "iter"})
+
+
+class SEAM001PolicyMutatesCore(Rule):
+    """Admission/Routing policies are *observers*: they rank, they never
+    mutate scheduler, block-manager, or request state.  A policy that
+    writes through its arguments bypasses the core's accounting (the
+    sanitizer's shadow model would flag it at runtime; this catches it
+    at review time)."""
+
+    rule_id = "SEAM001"
+    description = "policy subclass mutates core/request state"
+
+    @staticmethod
+    def _is_policy(cls: ast.ClassDef) -> bool:
+        for base in cls.bases:
+            name = base.attr if isinstance(base, ast.Attribute) else (
+                base.id if isinstance(base, ast.Name) else "")
+            if name.endswith(("AdmissionPolicy", "RoutingPolicy")):
+                return True
+        return False
+
+    def _rooted(self, node: ast.AST, roots: Set[str]) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in roots
+        if isinstance(node, (ast.Attribute, ast.Subscript)):
+            return self._rooted(node.value, roots)
+        if isinstance(node, ast.Starred):
+            return self._rooted(node.value, roots)
+        return False  # calls/comprehensions/literals build fresh values
+
+    def _check_method(self, ctx: FileContext, fn: ast.FunctionDef,
+                      out: List[Violation]) -> None:
+        roots: Set[str] = {
+            a.arg for a in fn.args.args + fn.args.kwonlyargs
+        } - {"self", "cls"}
+        for node in ast.walk(fn):
+            # propagate rootedness through aliases and loops
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) \
+                            and self._rooted(node.value, roots):
+                        roots.add(tgt.id)
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                it = node.iter
+                if isinstance(it, ast.Call) and isinstance(
+                        it.func, ast.Name) \
+                        and it.func.id in _ROOT_PRESERVING:
+                    src_rooted = any(
+                        self._rooted(a, roots) for a in it.args)
+                else:
+                    src_rooted = self._rooted(it, roots)
+                if src_rooted:
+                    tgts = node.target.elts if isinstance(
+                        node.target, ast.Tuple) else [node.target]
+                    for t in tgts:
+                        if isinstance(t, ast.Name):
+                            roots.add(t.id)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                tgts = node.targets if isinstance(
+                    node, ast.Assign) else [node.target]
+                for tgt in tgts:
+                    if isinstance(tgt, (ast.Attribute, ast.Subscript)) \
+                            and self._rooted(tgt.value, roots):
+                        out.append(self.violation(
+                            ctx, node.lineno,
+                            "policy writes through its argument "
+                            f"('{_attr_chain(tgt)[:40]}'): policies "
+                            "are read-only observers"))
+            elif isinstance(node, ast.Delete):
+                for tgt in node.targets:
+                    if self._rooted(tgt, roots):
+                        out.append(self.violation(
+                            ctx, node.lineno,
+                            "policy deletes core state: policies are "
+                            "read-only observers"))
+            elif isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Attribute):
+                if self._rooted(node.func.value, roots) \
+                        and node.func.attr not in _READ_API:
+                    out.append(self.violation(
+                        ctx, node.lineno,
+                        f"policy calls '.{node.func.attr}(...)' on "
+                        "core/request state — not in the read-only "
+                        "observer API (see _READ_API in "
+                        "tools/analyze/rules.py)"))
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef) and self._is_policy(node):
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef) \
+                            and item.name != "__init__":
+                        self._check_method(ctx, item, out)
+        return out
+
+
+# ----------------------------------------------------------------- CFG001
+_SECTION_RE = re.compile(r"#\s*----\s*(?P<label>.*?)\s*-*\s*$")
+_SIM_FILES = frozenset({"sim.py"})
+_ENGINE_FILES = frozenset({"engine.py", "executor.py"})
+_COMMON_FILES = frozenset({"scheduler.py"})
+
+
+class CFG001DeadOrMisplacedConfig(Rule):
+    """Every ServeConfig field must be read by the backend set its
+    section comment claims: shared fields somewhere in the serving
+    core, `engine-only` fields in the engine set (and never in the
+    sim), `sim-only` in the sim set (and never in the engine).  Dead
+    config is how the two backends drift apart silently."""
+
+    rule_id = "CFG001"
+    description = "ServeConfig field unread or read by the wrong backend"
+    project_wide = True
+
+    @staticmethod
+    def _fields(ctx: FileContext, cls: ast.ClassDef) -> List[
+            Tuple[str, int, str]]:
+        """(name, line, section) per field, section from markers."""
+        section_at: Dict[int, str] = {}
+        current = "shared"
+        end = max(getattr(n, "end_lineno", n.lineno)
+                  for n in cls.body)
+        for ln in range(cls.lineno, end + 1):
+            m = _SECTION_RE.search(ctx.lines[ln - 1]) \
+                if ln <= len(ctx.lines) else None
+            if m:
+                label = m.group("label").lower()
+                if "engine-only" in label:
+                    current = "engine"
+                elif "sim-only" in label:
+                    current = "sim"
+                else:
+                    current = "shared"
+            section_at[ln] = current
+        out = []
+        for st in cls.body:
+            if isinstance(st, ast.AnnAssign) \
+                    and isinstance(st.target, ast.Name):
+                out.append((st.target.id, st.lineno,
+                            section_at.get(st.lineno, "shared")))
+        return out
+
+    @staticmethod
+    def _reads(ctx: FileContext, skip: Optional[ast.ClassDef]) -> Set[str]:
+        inside = set()
+        if skip is not None:
+            inside = {id(n) for n in ast.walk(skip)}
+        return {
+            n.attr for n in ast.walk(ctx.tree)
+            if isinstance(n, ast.Attribute)
+            and isinstance(n.ctx, ast.Load)
+            and id(n) not in inside}
+
+    def check_project(
+        self, ctxs: Sequence[FileContext]
+    ) -> List[Violation]:
+        cfg_ctx: Optional[FileContext] = None
+        cfg_cls: Optional[ast.ClassDef] = None
+        for ctx in ctxs:
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, ast.ClassDef) \
+                        and node.name == "ServeConfig":
+                    cfg_ctx, cfg_cls = ctx, node
+                    break
+            if cfg_cls is not None:
+                break
+        if cfg_cls is None or cfg_ctx is None:
+            return []
+        sim_reads: Set[str] = set()
+        engine_reads: Set[str] = set()
+        common_reads: Set[str] = set()
+        for ctx in ctxs:
+            skip = cfg_cls if ctx is cfg_ctx else None
+            if ctx.path.name in _SIM_FILES:
+                sim_reads |= self._reads(ctx, skip)
+            if ctx.path.name in _ENGINE_FILES:
+                engine_reads |= self._reads(ctx, skip)
+            if ctx.path.name in _COMMON_FILES:
+                common_reads |= self._reads(ctx, skip)
+        out: List[Violation] = []
+        for name, line, section in self._fields(cfg_ctx, cfg_cls):
+            everywhere = sim_reads | engine_reads | common_reads
+            if section == "shared" and name not in everywhere:
+                out.append(self.violation(
+                    cfg_ctx, line,
+                    f"shared field '{name}' is read by neither "
+                    "backend nor the scheduler core: dead config "
+                    "(or mark it backend-only)"))
+            elif section == "engine":
+                if name not in engine_reads:
+                    out.append(self.violation(
+                        cfg_ctx, line,
+                        f"engine-only field '{name}' is never read "
+                        "by the engine backend"))
+                elif name in sim_reads:
+                    out.append(self.violation(
+                        cfg_ctx, line,
+                        f"engine-only field '{name}' is also read by "
+                        "the sim backend: move it to the shared "
+                        "section"))
+            elif section == "sim":
+                if name not in sim_reads:
+                    out.append(self.violation(
+                        cfg_ctx, line,
+                        f"sim-only field '{name}' is never read by "
+                        "the sim backend"))
+                elif name in engine_reads:
+                    out.append(self.violation(
+                        cfg_ctx, line,
+                        f"sim-only field '{name}' is also read by "
+                        "the engine backend: move it to the shared "
+                        "section"))
+        return out
+
+
+# --------------------------------------------------------------- PHASE001
+class PHASE001PartialPhaseDispatch(Rule):
+    """Free/cancel/unwind paths dispatch a request by which live queue
+    holds it.  A dispatch that tests some live queues but not all of
+    them silently drops requests in the untested phase (the PAUSED
+    queue was added after the cancel path — this rule exists so the
+    next phase cannot repeat that near-miss).  Also checks PHASE_QUEUES
+    itself stays total over the Phase enum."""
+
+    rule_id = "PHASE001"
+    description = "phase dispatch misses a live queue / enum member"
+    project_wide = True
+
+    @staticmethod
+    def _find(ctxs: Sequence[FileContext]) -> Tuple[
+            Optional[FileContext], Optional[ast.Assign],
+            Tuple[str, ...], Set[str]]:
+        """Locate PHASE_QUEUES / LIVE_QUEUES and the Phase enum."""
+        host, pq_node = None, None
+        live: Tuple[str, ...] = ()
+        members: Set[str] = set()
+        for ctx in ctxs:
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                    tgt = node.targets[0] if isinstance(
+                        node, ast.Assign) else node.target
+                    if not isinstance(tgt, ast.Name):
+                        continue
+                    if tgt.id == "PHASE_QUEUES":
+                        host, pq_node = ctx, node
+                    elif tgt.id == "LIVE_QUEUES" \
+                            and isinstance(node.value,
+                                           (ast.Tuple, ast.List)):
+                        live = tuple(
+                            e.value for e in node.value.elts
+                            if isinstance(e, ast.Constant))
+                elif isinstance(node, ast.ClassDef) \
+                        and node.name == "Phase":
+                    members = {
+                        t.id for st in node.body
+                        if isinstance(st, ast.Assign)
+                        for t in st.targets
+                        if isinstance(t, ast.Name)}
+        return host, pq_node, live, members
+
+    def check_project(
+        self, ctxs: Sequence[FileContext]
+    ) -> List[Violation]:
+        host, pq_node, live, members = self._find(ctxs)
+        if host is None or pq_node is None:
+            return []
+        out: List[Violation] = []
+        # (a) PHASE_QUEUES total over the Phase enum
+        value = pq_node.value
+        if members and isinstance(value, ast.Dict):
+            keyed = {
+                k.attr for k in value.keys
+                if isinstance(k, ast.Attribute)}
+            for missing in sorted(members - keyed):
+                out.append(self.violation(
+                    host, pq_node.lineno,
+                    f"PHASE_QUEUES has no entry for "
+                    f"Phase.{missing}: map every enum member to "
+                    "its queue"))
+        # (b) live-queue dispatches in the defining file are total
+        if not live:
+            return out
+        for fn in ast.walk(host.tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            tested: Dict[str, int] = {}
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Compare):
+                    continue
+                if not any(isinstance(op, (ast.In, ast.NotIn))
+                           for op in node.ops):
+                    continue
+                for comp in node.comparators:
+                    if isinstance(comp, ast.Attribute) \
+                            and comp.attr in live:
+                        tested.setdefault(comp.attr, node.lineno)
+            if len(tested) >= 2 and len(tested) < len(live):
+                missing = sorted(set(live) - set(tested))
+                out.append(self.violation(
+                    host, min(tested.values()),
+                    f"'{fn.name}' dispatches over live queues "
+                    f"{sorted(tested)} but never tests "
+                    f"{missing}: a request parked there is "
+                    "silently skipped"))
+        return out
+
+
+ALL_RULES: List[Rule] = [
+    PL001NoProgramIdInWhen(),
+    JIT001RawIntAcrossJit(),
+    SEAM001PolicyMutatesCore(),
+    CFG001DeadOrMisplacedConfig(),
+    PHASE001PartialPhaseDispatch(),
+]

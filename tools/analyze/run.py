@@ -1,0 +1,50 @@
+#!/usr/bin/env python3
+"""repro-lint CLI.
+
+    python tools/analyze/run.py [PATHS...]     # default: src
+
+Exit 0 when clean, 1 when any violation (including malformed or unused
+suppressions) survives.  `--list-rules` prints the registered rule ids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+try:
+    from tools.analyze.core import run_rules
+    from tools.analyze.rules import ALL_RULES
+except ImportError:
+    from core import run_rules
+    from rules import ALL_RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro-lint", description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print registered rule ids and exit")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.rule_id}  {rule.description}")
+        return 0
+    violations = run_rules(ALL_RULES, args.paths or ["src"])
+    for v in violations:
+        print(v.render())
+    if violations:
+        print(f"repro-lint: {len(violations)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print(f"repro-lint: clean ({len(ALL_RULES)} rules)",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,7 +12,9 @@ even installed. Checks:
   2. every admission policy name (class-level `name = "..."` in
      scheduler.py) and every routing policy name (same, in
      src/repro/serving/router.py) is mentioned;
-  3. every relative markdown link in the checked docs points at a file
+  3. every repro-lint rule id (class-level `rule_id = "..."` in
+     tools/analyze/rules.py) is documented;
+  4. every relative markdown link in the checked docs points at a file
      that exists (no rotting links).
 
 Exit code 0 = consistent; nonzero prints what is missing.
@@ -30,6 +32,7 @@ ROOT = Path(__file__).resolve().parent.parent
 DOCS = [ROOT / "README.md", ROOT / "docs" / "ARCHITECTURE.md"]
 SCHEDULER = ROOT / "src" / "repro" / "serving" / "scheduler.py"
 ROUTER = ROOT / "src" / "repro" / "serving" / "router.py"
+LINT_RULES = ROOT / "tools" / "analyze" / "rules.py"
 
 
 def serveconfig_fields(path: Path) -> list:
@@ -64,6 +67,26 @@ def policy_names(path: Path) -> list:
     return names
 
 
+def lint_rule_ids(path: Path) -> list:
+    """Class-level `rule_id = "..."` literals of registered repro-lint
+    rules (the Rule base's placeholder is skipped)."""
+    tree = ast.parse(path.read_text())
+    ids = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for st in node.body:
+            if (isinstance(st, ast.Assign)
+                    and len(st.targets) == 1
+                    and isinstance(st.targets[0], ast.Name)
+                    and st.targets[0].id == "rule_id"
+                    and isinstance(st.value, ast.Constant)
+                    and isinstance(st.value.value, str)
+                    and not st.value.value.startswith("RULE")):
+                ids.append(st.value.value)
+    return ids
+
+
 # matches [text](target) but not images/anchors/URLs
 _LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)#][^)]*)\)")
 
@@ -92,6 +115,7 @@ def main() -> int:
         "ServeConfig field": serveconfig_fields(SCHEDULER),
         "admission policy": policy_names(SCHEDULER),
         "routing policy": policy_names(ROUTER),
+        "repro-lint rule": lint_rule_ids(LINT_RULES),
     }
     errors = []
     for kind, names in required.items():
@@ -116,7 +140,8 @@ def main() -> int:
     n_fields = len(required["ServeConfig field"])
     print(f"docs check OK: {n_fields} ServeConfig fields, "
           f"{len(required['admission policy'])} admission + "
-          f"{len(required['routing policy'])} routing policies documented, "
+          f"{len(required['routing policy'])} routing policies, "
+          f"{len(required['repro-lint rule'])} lint rules documented, "
           f"links resolve.")
     return 0
 
