@@ -24,7 +24,7 @@ def main() -> None:
                     help="toy scale: CI guard that every script still runs")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig4,fig5,fig6,fig8,prefix,"
-                         "fused,kernels,cluster,preemption")
+                         "fused,kernels,cluster,preemption,faults")
     args = ap.parse_args()
     n = 40 if args.quick else 100
     if args.smoke:
@@ -32,10 +32,10 @@ def main() -> None:
     smoke = args.smoke
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (cluster, fig1_motivation, fig4_context_sweep,
-                            fig5_parallelism, fig6_fig7_arrival, fig8_slo,
-                            fused_step, kernels_micro, preemption,
-                            prefix_cache)
+    from benchmarks import (cluster, faults, fig1_motivation,
+                            fig4_context_sweep, fig5_parallelism,
+                            fig6_fig7_arrival, fig8_slo, fused_step,
+                            kernels_micro, preemption, prefix_cache)
 
     print("name,us_per_call,derived")
     if not only or "fig1" in only:
@@ -61,6 +61,9 @@ def main() -> None:
     if not only or "preemption" in only:
         preemption.main(n_requests=36 if not (args.quick or smoke) else n,
                         smoke=smoke)
+    if not only or "faults" in only:
+        faults.main(n_requests=40 if not (args.quick or smoke) else n,
+                    smoke=smoke)
     if not only or "kernels" in only:
         kernels_micro.main(smoke=smoke)
 

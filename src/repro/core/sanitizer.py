@@ -41,7 +41,15 @@ Invariants checked (see docs/ARCHITECTURE.md "Invariants & analysis"):
   S8  baseline           with no live requests, both pools are back to
                          baseline: nothing owned except ref==0 cache
                          retentions (cancel/preempt/resume unwound
-                         everything they touched).
+                         everything they touched);
+  S9  recovery baseline  after a replica kill unwinds every request the
+                         dead replica owned (`ClusterSession.kill`), the
+                         core must be FULLY at baseline — no live
+                         requests in any queue, no block tables, nothing
+                         owned by non-cache owners, all cache refcounts
+                         zero — before any work is re-dispatched
+                         (`check_recovery_baseline`, an unconditional
+                         strict form of S8).
 
 Cost discipline — ``check`` runs after EVERY scheduler step, so it is
 tiered: the count/conservation halves of S1/S2, the ledger totals
@@ -82,7 +90,7 @@ FULL_SCAN_MAX_BLOCKS = 8192
 
 
 class SanitizerError(AssertionError):
-    """An accounting invariant broke. Carries the invariant id (S1..S8)
+    """An accounting invariant broke. Carries the invariant id (S1..S9)
     in the message so regression tests can pin which check fired."""
 
 
@@ -415,6 +423,35 @@ class KVSanitizer:
             if ref != 0:
                 self._fail(
                     f"S8 cache entry {key}: idle core but refcount {ref}")
+
+    def check_recovery_baseline(self, core: "SchedulerCore") -> None:
+        """S9: post-kill pool accounting. `ClusterSession.kill` calls
+        this after unwinding everything the dead replica owned and
+        before re-dispatching any of it — unlike S8 (which silently
+        skips while anything looks live), a non-empty queue or a
+        leftover block table here IS the failure: the kill path missed
+        something, and re-dispatch would double-account it."""
+        for qname in ("waiting", "prefilling", "decoding", "paused"):
+            q = getattr(core, qname)
+            if q:
+                self._fail(
+                    f"S9 recovery: '{qname}' still holds "
+                    f"{[r.rid for r in q][:4]} after the kill unwind")
+        if self.bm.tables:
+            self._fail(
+                f"S9 recovery: block tables survive for "
+                f"{sorted(self.bm.tables)[:4]} (KV not freed)")
+        for name, sp in self.shadow_pools.items():
+            non_cache = [b for b, (req, _) in sp.owner.items()
+                         if req != CACHE_OWNER]
+            if non_cache:
+                self._fail(
+                    f"S9 recovery: {name} blocks {sorted(non_cache)[:4]} "
+                    "still owned by non-cache owners")
+        for key, ref in self.shadow_refs.items():
+            if ref != 0:
+                self._fail(
+                    f"S9 recovery: cache entry {key} refcount {ref} != 0")
 
     def check(self, core: Optional["SchedulerCore"] = None,
               full: Optional[bool] = None) -> None:

@@ -16,6 +16,13 @@ round_robin|least_loaded|prefix_affinity|slo_aware); a cluster of 1 is
 bit-identical to a bare session. Real JAX execution with paged KV
 pools; prints the per-token stream, per-request TTFT, a per-replica
 occupancy/hit-rate line at drain, and the offload-ledger summary.
+
+Fault tolerance: `--fault-plan SPEC` injects deterministic failures on
+the shared virtual clock (grammar: `crash@0.5:r0:recover=1.0;
+wedge@0.2:r1:dur=0.3` or `random:SEED[:n=N]` — serving/faults.py);
+`--liveness-timeout` arms missing-heartbeat detection, `--shed-overload`
+turns wedging overload into typed request shedding. The drain report
+then includes the recovery trace and kill/retry/shed counters.
 """
 from __future__ import annotations
 
@@ -58,6 +65,17 @@ def main():
                     choices=["round_robin", "least_loaded",
                              "prefix_affinity", "slo_aware"],
                     help="cluster dispatch policy (--replicas > 1)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault injection, e.g. "
+                         "'crash@0.5:r0:recover=1.0;wedge@0.2:r1:dur=0.3' "
+                         "or 'random:SEED[:n=N]' (serving/faults.py)")
+    ap.add_argument("--liveness-timeout", type=float, default=None,
+                    help="kill any replica whose next due event lags the "
+                         "shared clock by more than this many seconds "
+                         "while frozen (heartbeat failure detection)")
+    ap.add_argument("--shed-overload", action="store_true",
+                    help="graceful degradation: shed blocked requests "
+                         "with a typed reason instead of wedging")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--shared-len", type=int, default=0,
@@ -77,6 +95,7 @@ def main():
     from repro.configs import get_config, get_smoke_config
     from repro.serving.cluster import ClusterSession
     from repro.serving.engine import LayerKVEngine
+    from repro.serving.faults import FaultPlan
     from repro.serving.request import Request
     from repro.serving.scheduler import ServeConfig
 
@@ -117,7 +136,14 @@ def main():
         max_prefill_tokens=args.chunk_size,
         num_device_blocks=args.device_blocks,
         num_host_blocks=args.host_blocks,
-        block_size=args.block_size)
+        block_size=args.block_size,
+        shed_overload=args.shed_overload)
+    plan = FaultPlan.parse(args.fault_plan, n_replicas=args.replicas) \
+        if args.fault_plan else None
+    if plan is not None:
+        print("fault plan:")
+        for line in plan.describe():
+            print(f"  {line}")
     # every replica loads the SAME weights (one PRNG seed): a cluster is
     # N copies of one model behind a router, not N different models
     engines = [LayerKVEngine(cfg, None, sc, rng=jax.random.PRNGKey(args.seed))
@@ -126,15 +152,18 @@ def main():
     # submit everything up front (arrivals dispatch as the shared clock
     # reaches them) and pump the cluster one event at a time, printing
     # the token stream live as each iteration produces it
-    session = ClusterSession(engines, router=args.router)
+    session = ClusterSession(engines, router=args.router,
+                             fault_plan=plan,
+                             liveness_timeout=args.liveness_timeout)
     handles = [session.submit(r, arrival=r.arrival) for r in reqs]
     while session.step():
         for h in handles:
             new = h.take_new()
             if new and not args.quiet:
                 star = "*" if h.request.cached_prompt_len else " "
+                where = "?" if h.replica is None else h.replica
                 print(f"[t={session.clock() * 1e3:9.3f}ms] {h.rid:>4}{star}"
-                      f"@{h.replica} +{len(new)} -> {new}")
+                      f"@{where} +{len(new)} -> {new}")
     done = session.drain()
 
     ttfts = [r.ttft for r in done]
@@ -145,9 +174,19 @@ def main():
     if args.preemption:
         print(f"preemptions={sum(e.core.n_preempted for e in engines)} "
               f"resumes={sum(e.core.n_resumed for e in engines)}")
-    print(f"requests={len(done)} "
-          f"mean_ttft={statistics.mean(ttfts)*1e3:.1f}ms "
-          f"p99_ttft={sorted(ttfts)[-1]*1e3:.1f}ms")
+    if ttfts:
+        print(f"requests={len(done)} "
+              f"mean_ttft={statistics.mean(ttfts)*1e3:.1f}ms "
+              f"p99_ttft={sorted(ttfts)[-1]*1e3:.1f}ms")
+    if session.recovery_log or plan is not None:
+        shed = len(session.shed) \
+            + sum(len(e.core.shed) for e in engines)
+        print(f"faults: kills={session.n_kills} "
+              f"recoveries={session.n_recoveries} "
+              f"redispatched={len(session.redispatch_priorities)} "
+              f"dispatch_retries={session.n_retries} shed={shed}")
+        for line in session.recovery_log:
+            print(f"  {line}")
     for i, (eng, st) in enumerate(zip(engines, session.stats)):
         served = len(eng.core.done)
         hit = f"{eng.bm.cache.hit_rate:.2f}" \
@@ -164,8 +203,9 @@ def main():
           f"({sum(x.nbytes for x in off)/2**20:.2f} MiB), "
           f"{len(rel)} reloads "
           f"({sum(x.nbytes for x in rel)/2**20:.2f} MiB)")
-    sample = done[0]
-    print(f"sample output ({sample.rid}): {sample.generated[:8]}...")
+    if done:
+        sample = done[0]
+        print(f"sample output ({sample.rid}): {sample.generated[:8]}...")
 
 
 if __name__ == "__main__":

@@ -159,7 +159,8 @@ class LayerKVEngine(CoreDelegateMixin):
             if self.ec.prefix_cache and r.prompt:
                 self.bm.register_prefix(r.rid, r.prompt)
         r.prefill_start = r.prefill_start if r.prefill_start >= 0 else self.now
-        r.first_token_time = self.now
+        if r.first_token_time < 0:  # survives replica-kill restart
+            r.first_token_time = self.now
         r.tokens_out = 1
         r.note_token(self.now)
         r.phase = Phase.DECODE
@@ -304,7 +305,7 @@ class LayerKVEngine(CoreDelegateMixin):
                 continue
             for l in dev:
                 a = self.bm.allocation(r.rid, l)
-                if self.bm.num_free(HOST) < len(a.blocks):
+                if self.core.host_free() < len(a.blocks):
                     return False
                 src, dst = self.bm.move_layer(r.rid, l, HOST, detach=True)
                 self.ex.copy_blocks("device", "host", src, dst)
@@ -456,7 +457,8 @@ class LayerKVEngine(CoreDelegateMixin):
         # requests whose final chunk just ran get their first token now
         for r, _ in chunk_work:
             if r.prefill_complete and r.phase is Phase.PREFILL:
-                r.first_token_time = self.now
+                if r.first_token_time < 0:  # survives replica-kill restart
+                    r.first_token_time = self.now
                 r.tokens_out = 1
                 r.note_token(self.now)
                 r.phase = Phase.DECODE

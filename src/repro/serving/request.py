@@ -15,6 +15,9 @@ class Phase(enum.Enum):
     #                                  resume losslessly (no recompute)
     FINISHED = "finished"
     CANCELLED = "cancelled"          # unwound by ServingSession.cancel
+    SHED = "shed"                    # rejected under overload/fault
+    #                                  (graceful degradation; reason in
+    #                                  Request.shed_reason)
 
 
 @dataclasses.dataclass
@@ -55,6 +58,17 @@ class Request:
     cached_prompt_len: int = 0       # prompt tokens served from the
     #                                  cross-request prefix cache (compute
     #                                  skipped; subset of prefill_done)
+
+    # --- fault tolerance (cluster-owned) -------------------------------------
+    shed_reason: Optional[str] = None  # AdmissionImpossible subclass name
+    #                                    when phase is SHED
+    n_redispatched: int = 0          # replica kills survived: each one
+    #                                  folded the streamed tokens into the
+    #                                  prompt and restarted the remainder
+    tokens_salvaged: int = 0         # tokens streamed by DEAD incarnations
+    #                                  (already delivered; excluded from
+    #                                  output_len, which counts down)
+    n_dispatch_retries: int = 0      # transient dispatch failures retried
 
     @property
     def prefill_remaining(self) -> int:

@@ -60,6 +60,7 @@ PHASE_QUEUES: Dict[Phase, str] = {
     Phase.PAUSED: "paused",
     Phase.FINISHED: "done",
     Phase.CANCELLED: "cancelled",
+    Phase.SHED: "shed",
 }
 
 # The queues holding LIVE requests — the ones cancel() must test and
@@ -107,6 +108,19 @@ class ServeConfig:
     #                                 either backend (docs/ARCHITECTURE.md
     #                                 "Invariants & analysis"). Also forced
     #                                 on by the REPRO_SANITIZE=1 env var.
+    shed_overload: bool = False     # graceful degradation: when a gate-
+    #                                 blocked request's deadline is
+    #                                 hopeless (or the scheduler would
+    #                                 wedge outright), SHED it with a
+    #                                 typed reason (AdmissionImpossible
+    #                                 subclass name on r.shed_reason)
+    #                                 instead of stalling the queue. Off
+    #                                 (the default) is bit-identical to
+    #                                 the pre-fault scheduler.
+    shed_grace_frac: float = 1.0    # how far past its effective deadline
+    #                                 (unit: fraction of the request's own
+    #                                 TTFT SLO) a blocked request may age
+    #                                 before shed_overload rejects it
     admission_age_frac: float = 0.5  # aging bound, unit: fraction of the
     #                                 request's own TTFT SLO.
     #                                 prefix_aware: a HIT is ordered by a
@@ -201,6 +215,31 @@ class AdmissionImpossible(RuntimeError):
     the old opaque "wedged with waiting requests" — a temporarily
     unadmittable request simply waits (backpressure), only a permanently
     unservable one raises."""
+
+
+# Typed rejection reasons: with `shed_overload` on, the scheduler sheds a
+# doomed request (Phase.SHED, `r.shed_reason` = the subclass NAME) instead
+# of raising/wedging; the classes double as raisable errors for callers
+# that want hard failure. Per-class shed counts surface in
+# `SimMetrics.class_report()`.
+class PoolInfeasible(AdmissionImpossible):
+    """The request's minimum device need exceeds the pool outright — no
+    amount of waiting can ever admit it."""
+
+
+class HostPoolExhausted(AdmissionImpossible):
+    """The HOST (offload) pool cannot take the request's layers — under
+    a host_exhaust fault or genuine host-memory pressure."""
+
+
+class DeadlineUnmeetable(AdmissionImpossible):
+    """The request aged past its effective deadline plus grace while
+    blocked; serving it now could only burn pool on a lost cause."""
+
+
+class DispatchFailed(AdmissionImpossible):
+    """Cluster-level: every dispatch attempt failed (transient dispatch
+    faults or no live replica) and the bounded retry budget ran out."""
 
 
 # --------------------------------------------------------------------------
@@ -370,8 +409,15 @@ class SchedulerCore:
         self.paused: List[Request] = []       # preempted, KV parked on HOST
         self.done: List[Request] = []
         self.cancelled: List[Request] = []
+        self.shed: List[Request] = []         # rejected under overload
+        #                                       (graceful degradation)
         self.n_preempted = 0                  # lossless preemption events
         self.n_resumed = 0
+        # host-pool blocks made unusable by an active host_exhaust fault
+        # (serving/faults.py). 0 unless a FaultPlan is installed on the
+        # owning cluster, and every read is inert at 0 — fault-free runs
+        # are bit-identical.
+        self.fault_host_reserve = 0
         # ---- per-request bookkeeping --------------------------------------
         self.host_layers: Dict[str, int] = {}  # layers resident on host
         self.plans: Dict[str, object] = {}     # rid -> Eq.4 OffloadPlan
@@ -397,6 +443,14 @@ class SchedulerCore:
 
     def _blocks(self, tokens: int) -> int:
         return self.bm.blocks_for_tokens(tokens)
+
+    def host_free(self) -> int:
+        """Usable HOST-pool blocks: the manager's free count minus any
+        fault-injected reserve. Every HOST-side gate (admission offload
+        layers, preemption demotion, sim eviction) reads this instead of
+        `bm.num_free(HOST)` so host_exhaust faults degrade those paths
+        without ever touching real pool accounting."""
+        return self.bm.num_free(HOST) - self.fault_host_reserve
 
     def cached_hint(self, r: Request) -> int:
         """Cached-prefix length for Eq.3 admission estimates (price the
@@ -545,6 +599,13 @@ class SchedulerCore:
                 retain_n = min(self.L, max(plan.x, fit))
                 off = interleave_offload_layers(self.L, retain_n)
                 retain = [l for l in range(self.L) if l not in set(off)]
+                # host-side gate for the offload layers: inert unless a
+                # host_exhaust fault holds a reserve (without one, the
+                # HOST allocation below raises PoolExhausted on exactly
+                # the same shortfall)
+                if off and self.fault_host_reserve > 0 \
+                        and self.host_free() < per_layer * len(off):
+                    return None
             for l in retain:
                 self.bm.alloc_layer(r.rid, l, r.prompt_len, DEVICE)
             for l in off:
@@ -625,7 +686,7 @@ class SchedulerCore:
         dev = self.bm.layers_on(r.rid, DEVICE)
         host_need = sum(len(self.bm.allocation(r.rid, l).blocks)
                         for l in dev)
-        if self.bm.num_free(HOST) < host_need:
+        if self.host_free() < host_need:
             return False
         for l in dev:
             self._migrate_layer(r.rid, l, HOST, "offload", now)
@@ -775,9 +836,13 @@ class SchedulerCore:
             if self.bm.num_free(DEVICE) < self.device_need(r):
                 if not (self.sc.preemption
                         and self._preempt_to_fit(r, now)):
+                    if self._maybe_shed(r, now):
+                        continue
                     break
             if self.sc.chunked:
                 if self.alloc_prefill(r) is None:
+                    if self._maybe_shed(r, now):
+                        continue
                     break
                 self.waiting.remove(r)
                 r.phase = Phase.PREFILL
@@ -793,9 +858,13 @@ class SchedulerCore:
                 r.prefill_start = self.now
                 if not immediate(r):
                     self.waiting.appendleft(r)
+                    if self._maybe_shed(r, now):
+                        continue
                     break
             else:
                 if self.alloc_prefill(r) is None:
+                    if self._maybe_shed(r, now):
+                        continue
                     break
                 self.waiting.remove(r)
             admitted.append(r)
@@ -880,6 +949,61 @@ class SchedulerCore:
         self.cancelled.append(r)
         return True
 
+    # ---------------------------------------------- graceful degradation
+    def _shed_class(self, r: Request) -> type:
+        """Typed rejection reason for a blocked request, most-specific
+        first (permanent infeasibility beats fault pressure beats aging
+        out)."""
+        if self.device_need(r, memoize=False) \
+                > self.bm.pools[DEVICE].num_blocks:
+            return PoolInfeasible
+        if self.fault_host_reserve > 0:
+            return HostPoolExhausted
+        return DeadlineUnmeetable
+
+    def shed_request(self, r: Request, reason: str, now: float) -> None:
+        """Reject a WAITING request with a typed reason: it leaves the
+        queue terminally (Phase.SHED), keeps nothing allocated, and is
+        reported per deadline class by `SimMetrics.class_report()`."""
+        if r in self.waiting:
+            self.waiting.remove(r)
+        self.release(r)
+        r.phase = Phase.SHED
+        r.shed_reason = reason
+        r.prefill_start = -1.0
+        r.finish_time = now
+        self.shed.append(r)
+
+    def _maybe_shed(self, r: Request, now: float) -> bool:
+        """Shed-by-deadline-class at the admission gate: with
+        `shed_overload` on, a fresh request that failed a gate AND has
+        aged `shed_grace_frac` of its own TTFT SLO past its effective
+        deadline is rejected (typed reason) instead of blocking the
+        head of the line. Off by default — returning False preserves
+        the head-of-line `break` bit-identically."""
+        if not self.sc.shed_overload:
+            return False
+        if now <= r.effective_deadline \
+                + self.sc.shed_grace_frac * r.ttft_slo:
+            return False
+        self.shed_request(r, self._shed_class(r).__name__, now)
+        return True
+
+    def shed_blocked(self, now: float) -> bool:
+        """Last-resort degradation for a WEDGED scheduler: nothing is in
+        flight, nothing can be admitted, and the queue would otherwise
+        raise `wedged_error`. With `shed_overload` on, shed the blocking
+        head of the policy order (typed reason) so the queue behind it
+        drains; returns True when something was shed (progress)."""
+        if not self.sc.shed_overload or not self.waiting:
+            return False
+        order = self.policy.order(list(self.waiting), now, self)
+        r = next((q for q in order if q in self.waiting), None)
+        if r is None:
+            return False
+        self.shed_request(r, self._shed_class(r).__name__, now)
+        return True
+
     def wedged_error(self) -> AdmissionImpossible:
         """Names the request that actually blocked the admission pass:
         the head of the POLICY order (admission is head-of-line within
@@ -933,6 +1057,10 @@ class CoreDelegateMixin:
     @property
     def cancelled(self) -> List[Request]:
         return self.core.cancelled
+
+    @property
+    def shed(self) -> List[Request]:
+        return self.core.shed
 
     @property
     def host_layers(self) -> Dict[str, int]:

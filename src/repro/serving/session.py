@@ -82,8 +82,15 @@ class RequestHandle:
         return self.request.phase is Phase.CANCELLED
 
     @property
+    def shed(self) -> bool:
+        """True when the scheduler rejected the request under overload
+        (graceful degradation, `shed_overload`); the typed reason is on
+        `request.shed_reason`. Terminal, like cancelled."""
+        return self.request.phase is Phase.SHED
+
+    @property
     def done(self) -> bool:
-        return self.finished or self.cancelled
+        return self.finished or self.cancelled or self.shed
 
     def take_new(self) -> List[int]:
         """Tokens produced since the last call (non-blocking). Real token
@@ -204,6 +211,11 @@ class ServingSession:
             if handle.done:
                 return
             if not self.step():
+                # graceful degradation first: with shed_overload on, the
+                # blocking head is rejected (typed reason) and the pump
+                # continues; only a hard-wedged scheduler still raises
+                if self.core.shed_blocked(self.backend.clock()):
+                    continue
                 # names the request that actually blocks admission
                 # (under prefix_aware ordering it may not be `handle`)
                 raise self.core.wedged_error()
@@ -238,6 +250,9 @@ class ServingSession:
         if handle.finished:
             if r in self.core.done:
                 self.core.done.remove(r)
+        elif handle.shed:
+            if r in self.core.shed:
+                self.core.shed.remove(r)
         elif r in self.core.cancelled:
             self.core.cancelled.remove(r)
         return r
@@ -249,6 +264,8 @@ class ServingSession:
         while self._pending or self.core.waiting \
                 or not self.core.idle():
             if not self.step():
+                if self.core.shed_blocked(self.backend.clock()):
+                    continue
                 raise self.core.wedged_error()
         self.backend.finish()
         return list(self.core.done)

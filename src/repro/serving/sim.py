@@ -114,6 +114,19 @@ class SimMetrics:
     #   ^ effective_deadline - first_token_time (s); negative = violated
     req_tokens: List[int] = dataclasses.field(default_factory=list)
     #   ^ tokens generated per request (goodput numerator, deadline-gated)
+    # fault-tolerance accounting (all zero/empty without a FaultPlan or
+    # shed_overload — the counters exist so degraded runs stay auditable)
+    n_shed: int = 0                      # requests rejected under overload
+    shed_priorities: List[int] = dataclasses.field(default_factory=list)
+    shed_reasons: List[str] = dataclasses.field(default_factory=list)
+    #   ^ AdmissionImpossible subclass names, aligned with shed_priorities
+    n_retries: int = 0                   # dispatch retries (backoff spins)
+    retry_priorities: List[int] = dataclasses.field(default_factory=list)
+    n_redispatched: int = 0              # restarts after a replica kill
+    redispatch_priorities: List[int] = dataclasses.field(
+        default_factory=list)
+    n_replica_kills: int = 0
+    n_replica_recoveries: int = 0
 
     @classmethod
     def merge(cls, parts: List["SimMetrics"]) -> "SimMetrics":
@@ -146,6 +159,18 @@ class SimMetrics:
             tbt=[t for m in parts for t in m.tbt],
             deadline_slack=[s for m in parts for s in m.deadline_slack],
             req_tokens=[n for m in parts for n in m.req_tokens],
+            n_shed=sum(m.n_shed for m in parts),
+            shed_priorities=[p for m in parts for p in m.shed_priorities],
+            shed_reasons=[s for m in parts for s in m.shed_reasons],
+            n_retries=sum(m.n_retries for m in parts),
+            retry_priorities=[p for m in parts
+                              for p in m.retry_priorities],
+            n_redispatched=sum(m.n_redispatched for m in parts),
+            redispatch_priorities=[p for m in parts
+                                   for p in m.redispatch_priorities],
+            n_replica_kills=sum(m.n_replica_kills for m in parts),
+            n_replica_recoveries=sum(
+                m.n_replica_recoveries for m in parts),
         )
 
     @property
@@ -192,9 +217,14 @@ class SimMetrics:
         cluster-wide percentiles (never recomputed from pre-truncated
         per-replica statistics). Keys are priority values; each entry
         reports n / mean+p99 TTFT / p99 TBT / deadline-violation rate /
-        goodput share (tokens per second from deadline-met requests)."""
+        goodput share (tokens per second from deadline-met requests) /
+        fault-tolerance counters (requests shed under overload, dispatch
+        retries, kill-restart re-dispatches — which classes degradation
+        actually lands on)."""
         out: dict = {}
-        for cls_id in sorted(set(self.priorities)):
+        classes = set(self.priorities) | set(self.shed_priorities) \
+            | set(self.retry_priorities) | set(self.redispatch_priorities)
+        for cls_id in sorted(classes):
             idx = [i for i, p in enumerate(self.priorities)
                    if p == cls_id]
             ttft = [self.ttft[i] for i in idx]
@@ -211,6 +241,12 @@ class SimMetrics:
                 "goodput": (sum(n for n, s in zip(toks, slack, strict=True)
                                 if s >= 0) / self.makespan)
                     if self.makespan > 0 else 0.0,
+                "n_shed": sum(1 for p in self.shed_priorities
+                              if p == cls_id),
+                "n_retries": sum(1 for p in self.retry_priorities
+                                 if p == cls_id),
+                "n_redispatched": sum(
+                    1 for p in self.redispatch_priorities if p == cls_id),
             }
         return out
 
@@ -454,7 +490,7 @@ class ServingSimulator(CoreDelegateMixin):
                 if dev_layers else 0
             for l in dev_layers:
                 a = self.bm.allocation(r.rid, l)
-                if self.bm.num_free(HOST) < len(a.blocks):
+                if self.core.host_free() < len(a.blocks):
                     return  # host tier full: nothing more to evict into
                 # detach: shared prefix blocks are copied out, never pulled
                 # from under the requests still mapping them
@@ -484,7 +520,7 @@ class ServingSimulator(CoreDelegateMixin):
             moved = 0
             for l in dev_layers[:n_evict]:
                 a = self.bm.allocation(r.rid, l)
-                if self.bm.num_free(HOST) < len(a.blocks):
+                if self.core.host_free() < len(a.blocks):
                     break  # host tier full: stop evicting
                 self.bm.move_layer(r.rid, l, HOST, detach=True)
                 moved += 1
@@ -532,7 +568,9 @@ class ServingSimulator(CoreDelegateMixin):
             prefill_lat=[r.prefill_latency for r in done],
             tpot=[r.tpot for r in done],
             finish_times=[r.finish_time for r in done],
-            tokens_out=sum(r.tokens_out for r in done),
+            # tokens_salvaged: delivered by incarnations a replica kill
+            # destroyed — still real output of this request
+            tokens_out=sum(r.tokens_out + r.tokens_salvaged for r in done),
             makespan=mk,
             slo_violations=sum(1 for r in done if r.slo_violated()),
             n_requests=len(done),
@@ -542,7 +580,7 @@ class ServingSimulator(CoreDelegateMixin):
             tbt=[r.max_tbt for r in done],
             deadline_slack=[r.effective_deadline - r.first_token_time
                             for r in done],
-            req_tokens=[r.tokens_out for r in done],
+            req_tokens=[r.tokens_out + r.tokens_salvaged for r in done],
             chunk_iters=self._chunk_iters,
             max_iter_prefill_tokens=self._max_iter_prefill_tokens,
             prefix_hit_tokens=self.bm.cache.hit_tokens
@@ -550,6 +588,9 @@ class ServingSimulator(CoreDelegateMixin):
             prefix_lookup_tokens=self.bm.cache.lookup_tokens
             if self.bm.cache else 0,
             n_cancelled=len(self.core.cancelled),
+            n_shed=len(self.core.shed),
+            shed_priorities=[r.priority for r in self.core.shed],
+            shed_reasons=[r.shed_reason or "" for r in self.core.shed],
         )
 
     def metrics(self) -> SimMetrics:
@@ -594,7 +635,10 @@ class ServingSimulator(CoreDelegateMixin):
             t += dt
             self.t = t
             for r in admitted:
-                r.first_token_time = t
+                # preserved across a replica-kill restart: the user saw
+                # their first token from the dead incarnation already
+                if r.first_token_time < 0:
+                    r.first_token_time = t
                 r.tokens_out = 1
                 r.note_token(t)
                 r.prefill_done = r.prompt_len
@@ -698,7 +742,8 @@ class ServingSimulator(CoreDelegateMixin):
                 self.bm.register_prefix(r.rid, r.prompt,
                                         upto=r.prefill_done)
             if r.prefill_complete:
-                r.first_token_time = t
+                if r.first_token_time < 0:  # survives replica-kill restart
+                    r.first_token_time = t
                 r.tokens_out = 1
                 r.note_token(t)
                 r.phase = Phase.DECODE

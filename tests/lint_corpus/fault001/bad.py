@@ -1,0 +1,22 @@
+"""FAULT001 corpus (known-bad): fault hooks live by default — a
+constructed `fault_plan` default, an unguarded call through `.faults`,
+and a kw-only `faults` defaulting to an instance. Never executed —
+parsed only."""
+
+
+class FaultPlan:
+    pass
+
+
+class Cluster:
+    def __init__(self, backends,
+                 fault_plan=FaultPlan()):  # BAD: ambient fault plan
+        self.faults = fault_plan
+
+    def step(self, now):
+        self.faults.poll(self, now)  # BAD: no `is not None` guard
+        return True
+
+
+def attach(cluster, *, faults=FaultPlan()):  # BAD: kw-only non-None
+    cluster.faults = faults

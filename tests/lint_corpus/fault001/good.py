@@ -1,0 +1,26 @@
+"""FAULT001 corpus (known-good): the same shapes with the opt-in
+contract honoured — None defaults, an `is not None` branch guard, and
+an `and`-chain guard. Never executed — parsed only."""
+
+
+class Cluster:
+    def __init__(self, backends, fault_plan=None):
+        self.faults = fault_plan
+
+    def step(self, now):
+        if self.faults is not None:
+            self.faults.poll(self, now)
+        return True
+
+    def dispatchable(self, i, now):
+        return self.faults is None or not (
+            self.faults is not None and self.faults.dispatch_fails(i, now))
+
+    def next_wedge(self, wedged):
+        if self.faults is not None:
+            return min(wedged, key=lambda k: self.faults.wedge_end(k))
+        return None
+
+
+def attach(cluster, *, faults=None):
+    cluster.faults = faults

@@ -38,6 +38,8 @@ CASES = [
      CORPUS / "cfg001" / "good", 2, (11, 13)),
     ("PHASE001", CORPUS / "phase001" / "bad",
      CORPUS / "phase001" / "good", 2, (14, 24)),
+    ("FAULT001", CORPUS / "fault001" / "bad.py",
+     CORPUS / "fault001" / "good.py", 3, (13, 17, 21)),
 ]
 
 
@@ -67,13 +69,13 @@ def test_head_is_clean():
     assert rc == 0, out
 
 
-def test_list_rules_names_all_five():
+def test_list_rules_names_all_six():
     proc = subprocess.run(
         [sys.executable, str(RUN), "--list-rules"],
         capture_output=True, text=True, cwd=REPO)
     listed = {ln.split()[0] for ln in proc.stdout.splitlines()}
     assert {"PL001", "JIT001", "SEAM001", "CFG001",
-            "PHASE001"} <= listed
+            "PHASE001", "FAULT001"} <= listed
 
 
 # ------------------------------------------------- suppression machinery --

@@ -1,0 +1,535 @@
+"""Fault-tolerance subsystem coverage (serving/faults.py + the cluster's
+detection/recovery machinery).
+
+Five layers of guarantees:
+  * plan mechanics — the `FaultPlan` grammar, seeded generation, and
+    validation errors; a plan is immutable and time-ordered;
+  * fault-free identity — a cluster with the fault machinery ARMED
+    (liveness timeout set, a plan whose events all target a replica the
+    cluster doesn't have) produces bit-identical metrics to a cluster
+    with no fault arguments at all: every fault code path is
+    unreachable until a fault actually fires (lint rule FAULT001);
+  * deterministic replay — the same plan over the same workload yields
+    a bit-identical recovery log, fault trace, metrics and finish
+    order, run after run;
+  * lossless recovery — under crash/revive, wedge + liveness kill,
+    transient dispatch failure, host exhaustion, slowdown and link
+    stall, NO request is lost or duplicated: every stream delivers each
+    token exactly once across any number of kills (sim ordinals and
+    real engine ids both), and total delivered tokens match the
+    fault-free run;
+  * graceful degradation — blocked requests shed with TYPED reasons
+    (PoolInfeasible / HostPoolExhausted / DispatchFailed) instead of
+    wedging, and `SimMetrics.class_report` attributes the degradation
+    to the priority classes it actually landed on.
+
+The hypothesis property (random plans x routers x replica counts) lives
+in tests/test_core_properties.py.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.core import DEVICE, HOST
+from repro.core.sanitizer import SanitizerError
+from repro.serving.cluster import ClusterSession
+from repro.serving.costmodel import L20
+from repro.serving.engine import EngineConfig, LayerKVEngine
+from repro.serving.faults import FaultEvent, FaultPlan
+from repro.serving.request import Request
+from repro.serving.router import PrefixAffinityRouting
+from repro.serving.session import ServingSession
+from repro.serving.sim import ServingSimulator, SimConfig
+from repro.serving.workload import multi_tenant
+
+
+def _sim(**kw):
+    base = dict(policy="layerkv", chunked=True, prefix_cache=True,
+                num_device_blocks=2048, num_host_blocks=1 << 14)
+    base.update(kw)
+    return ServingSimulator(LLAMA2_7B, L20, SimConfig(**base))
+
+
+def _burst(n=40):
+    """Bursty multi-tenant arrivals spanning roughly t=4.5..33s — the
+    fault stamps below land squarely inside the busy window."""
+    return multi_tenant(n, rate=16.0, n_tenants=3, prompt_len=512,
+                        output_len=48, seed=7)
+
+
+def _cluster(plan=None, n_rep=3, **kw):
+    return ClusterSession([_sim() for _ in range(n_rep)],
+                          router="round_robin", fault_plan=plan, **kw)
+
+
+def _pools_at_baseline(cl):
+    for s in cl.sessions:
+        bm = s.backend.bm
+        bm.drop_cache()
+        bm.check()
+        assert bm.num_free(DEVICE) == bm.pools[DEVICE].num_blocks
+        assert bm.num_free(HOST) == bm.pools[HOST].num_blocks
+        assert not bm.live_requests()
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """The fault-free reference run every recovery arm is held to."""
+    cl = ClusterSession([ServingSimulator(LLAMA2_7B, L20, SimConfig(
+        policy="layerkv", chunked=True, prefix_cache=True,
+        num_device_blocks=2048, num_host_blocks=1 << 14, sanitize=True))
+        for _ in range(3)], router="round_robin")
+    done = cl.run(_burst())
+    return [r.rid for r in done], cl.metrics()
+
+
+# ----------------------------------------------------------- plan mechanics --
+
+def test_fault_plan_parse_grammar():
+    plan = FaultPlan.parse(
+        "crash@0.5:r0:recover=1.0; wedge@0.2:r1:dur=0.3;"
+        "slowdown@0.4:r2:dur=0.6:factor=3.5;"
+        "host_exhaust@0.7:r0:dur=0.2:blocks=128", n_replicas=3)
+    assert len(plan) == 4
+    # time-ordered regardless of spec order
+    assert [e.t for e in plan.events] == [0.2, 0.4, 0.5, 0.7]
+    crash = next(e for e in plan.events if e.kind == "crash")
+    assert crash.replica == 0 and crash.recover_after == 1.0
+    slow = next(e for e in plan.events if e.kind == "slowdown")
+    assert slow.factor == 3.5 and slow.duration == 0.6
+    hx = next(e for e in plan.events if e.kind == "host_exhaust")
+    assert hx.blocks == 128
+    assert any("wedge r1" in line for line in plan.describe())
+
+
+def test_fault_plan_parse_errors():
+    with pytest.raises(ValueError, match="missing '@time'"):
+        FaultPlan.parse("crash:r0")
+    with pytest.raises(ValueError, match="missing ':rN' replica"):
+        FaultPlan.parse("crash@0.5")
+    with pytest.raises(ValueError, match="unknown fault option"):
+        FaultPlan.parse("crash@0.5:r0:bogus=1")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan([FaultEvent(0.1, "meteor", 0)])
+    with pytest.raises(ValueError, match="before t=0"):
+        FaultPlan([FaultEvent(-0.1, "crash", 0)])
+    with pytest.raises(ValueError, match="unknown random-plan option"):
+        FaultPlan.parse("random:3:zap=1")
+
+
+def test_fault_plan_random_is_seeded():
+    a = FaultPlan.random(7, 3, n_events=5)
+    b = FaultPlan.random(7, 3, n_events=5)
+    assert a.describe() == b.describe()
+    assert a.describe() != FaultPlan.random(8, 3, n_events=5).describe()
+    # random crashes always carry a recovery (no permanent sinkholes)
+    for e in FaultPlan.random(11, 2, n_events=20, kinds=["crash"]).events:
+        assert e.recover_after >= 0
+    assert len(FaultPlan.parse("random:7:n=5", n_replicas=3)) == 5
+
+
+# ------------------------------------------------------- fault-free identity --
+
+def test_armed_but_idle_machinery_is_bit_identical(baseline):
+    """Liveness detection armed + a plan whose events all target a
+    replica this cluster doesn't have: no fault ever fires, and the
+    run is bit-identical to a cluster with no fault arguments."""
+    rids, base = baseline
+    plan = FaultPlan.parse("crash@1.0:r7:recover=1.0", n_replicas=8)
+    cl = _cluster(plan=plan, liveness_timeout=30.0)
+    done = cl.run(_burst())
+    assert [r.rid for r in done] == rids
+    assert cl.metrics() == base
+    assert cl.faults.trace == [] and cl.recovery_log == []
+
+
+# ------------------------------------------------------------ crash recovery --
+
+def test_crash_recovery_lossless(baseline):
+    """A replica crash mid-burst: its live work is salvaged, unwound
+    (sanitizer S9 holds inside kill()), re-dispatched and finished —
+    every request completes, total delivered tokens match the
+    fault-free run, and the replica revives cold."""
+    rids, base = baseline
+    plan = FaultPlan.parse("crash@5.2:r0:recover=2.0", n_replicas=3)
+    cl = _cluster(plan=plan)
+    done = cl.run(_burst())
+    m = cl.metrics()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert m.n_replica_kills == 1 and m.n_replica_recoveries == 1
+    assert m.n_redispatched >= 1
+    assert m.n_shed == 0
+    assert m.tokens_out == base.tokens_out
+    # per-request conservation: salvaged + reserved remainder == 48
+    assert all(r.tokens_out + r.tokens_salvaged == 48 for r in done)
+    assert cl.alive[0], "crash carried recover=2.0; replica must revive"
+    assert any("kill r0 (fault)" in line for line in cl.recovery_log)
+    assert any("revive r0" in line for line in cl.recovery_log)
+    _pools_at_baseline(cl)
+
+
+def test_crash_recovery_replays_bit_identically():
+    """Determinism: the same plan over the same workload produces a
+    bit-identical recovery log, fault trace, metrics and finish order."""
+    def run():
+        plan = FaultPlan.parse(
+            "crash@5.2:r0:recover=2.0;dispatch_fail@4.5:r1:dur=2.0",
+            n_replicas=3)
+        cl = _cluster(plan=plan)
+        done = cl.run(_burst())
+        return (cl.recovery_log, cl.faults.trace, cl.metrics(),
+                [r.rid for r in done])
+
+    log_a, trace_a, m_a, order_a = run()
+    log_b, trace_b, m_b, order_b = run()
+    assert log_a == log_b and trace_a == trace_b
+    assert m_a == m_b and order_a == order_b
+
+
+def test_manual_kill_and_revive_lossless(baseline):
+    """The manual path (operator action, no plan): kill a replica with
+    live work, revive it later; nothing is lost and kill is idempotent
+    on a corpse."""
+    rids, _ = baseline
+    cl = _cluster()
+    hs = [cl.submit(r, arrival=r.arrival) for r in _burst()]
+    while not any(h.replica == 0 and h.request.tokens_out for h in hs):
+        assert cl.step()
+    cl.kill(0)
+    assert not cl.alive[0] and cl.n_kills == 1
+    cl.kill(0)                       # idempotent on a dead replica
+    assert cl.n_kills == 1
+    cl.revive(0)
+    assert cl.alive[0] and cl.n_recoveries == 1
+    done = cl.drain()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert all(r.tokens_out + r.tokens_salvaged == 48 for r in done)
+    _pools_at_baseline(cl)
+
+
+def test_sim_stream_survives_kill_no_gap_no_duplicate():
+    """Stream exactness across a kill: a consumer polling `take_new`
+    through a mid-stream replica failure sees each ordinal exactly once
+    — the salvaged backlog drains first, then the restarted remainder,
+    rebased so 0..23 appears with no gap and no repeat."""
+    cl = ClusterSession([_sim() for _ in range(2)], router="round_robin")
+    hs = [cl.submit(Request(rid=f"r{i}", prompt_len=256, output_len=24,
+                            arrival=0.001 * i), arrival=0.001 * i)
+          for i in range(4)]
+    streams = {h.rid: [] for h in hs}
+
+    def pump():
+        for h in hs:
+            streams[h.rid].extend(h.take_new())
+
+    while not any(h.replica == 0 and streams[h.rid] for h in hs):
+        assert cl.step()
+        pump()
+    cl.kill(0)
+    pump()
+    while cl.step():
+        pump()
+    cl.drain()
+    pump()
+    for h in hs:
+        assert streams[h.rid] == list(range(24)), h.rid
+        assert h.request.tokens_out + h.request.tokens_salvaged == 24
+    assert cl.n_kills == 1
+    assert any(h.request.n_redispatched for h in hs)
+
+
+# -------------------------------------------------- wedge / liveness kill ----
+
+def test_wedge_liveness_detection_kills_and_recovers(baseline):
+    """A wedged replica is declared dead by MISSING HEARTBEAT (its next
+    due event lags the shared clock past the timeout), not by oracle
+    knowledge of the injected fault; its work re-dispatches losslessly."""
+    rids, base = baseline
+    plan = FaultPlan.parse("wedge@5.0:r0:dur=60.0", n_replicas=3)
+    cl = _cluster(plan=plan, liveness_timeout=0.5)
+    done = cl.run(_burst())
+    m = cl.metrics()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert m.n_replica_kills == 1 and m.n_shed == 0
+    assert m.tokens_out == base.tokens_out
+    assert not cl.alive[0]           # liveness kill carries no revival
+    assert any("liveness" in line for line in cl.recovery_log)
+    _pools_at_baseline(cl)
+
+
+def test_wedge_without_liveness_rides_out_the_window(baseline):
+    """No detector armed: the cluster waits the wedge out (virtual time
+    advances past the window) and still finishes everything — slower,
+    never wedged."""
+    rids, base = baseline
+    plan = FaultPlan.parse("wedge@5.0:r0:dur=3.0", n_replicas=3)
+    cl = _cluster(plan=plan)
+    done = cl.run(_burst())
+    m = cl.metrics()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert m.n_replica_kills == 0 and m.n_shed == 0
+    assert m.tokens_out == base.tokens_out
+    assert m.makespan >= base.makespan
+
+
+# ------------------------------------------------ transient dispatch faults --
+
+def test_dispatch_fail_retries_with_backoff_then_succeeds(baseline):
+    """A transient dispatch-failure window: affected arrivals retry
+    with exponential backoff and ALL eventually land — zero sheds."""
+    rids, base = baseline
+    plan = FaultPlan.parse("dispatch_fail@4.5:r0:dur=2.0", n_replicas=3)
+    cl = _cluster(plan=plan)
+    done = cl.run(_burst())
+    m = cl.metrics()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert m.n_retries >= 1 and m.n_shed == 0
+    assert m.tokens_out == base.tokens_out
+    assert any("retry" not in line for line in cl.recovery_log) \
+        or cl.recovery_log == []     # retries are counters, not log spam
+
+
+def test_dispatch_retries_exhaust_to_typed_shed():
+    """Bounded retry: a request that cannot dispatch within its budget
+    is SHED with the typed DispatchFailed reason — the cluster reports
+    it (handle, metrics, class_report) instead of spinning or wedging."""
+    plan = FaultPlan.parse("dispatch_fail@0.0:r0:dur=1000.0",
+                           n_replicas=1)
+    cl = _cluster(plan=plan, n_rep=1, max_dispatch_retries=3,
+                  retry_backoff=0.01)
+    h = cl.submit(Request(rid="doomed", prompt_len=64, output_len=4,
+                          priority=1), arrival=0.5)
+    done = cl.drain()
+    assert done == [] and h.shed and h.done
+    assert h.request.shed_reason == "DispatchFailed"
+    m = cl.metrics()
+    assert m.n_shed == 1 and m.shed_reasons == ["DispatchFailed"]
+    assert m.n_retries == 4          # 3 backoff spins + the final straw
+    report = m.class_report()
+    assert report[1]["n_shed"] == 1 and report[1]["n_retries"] == 4
+    assert cl.reap(h).rid == "doomed"
+    assert not cl.shed and not cl.handles
+
+
+def test_no_live_replica_sheds_after_retry_budget():
+    """All replicas dead (manual kill, no plan): arrivals burn their
+    retry budget against an empty cluster and shed typed."""
+    cl = _cluster(n_rep=1, max_dispatch_retries=2, retry_backoff=0.01)
+    cl.kill(0)
+    h = cl.submit(Request(rid="a", prompt_len=64, output_len=4))
+    cl.drain()
+    assert h.shed and h.request.shed_reason == "DispatchFailed"
+    assert cl.metrics().n_shed == 1
+
+
+# --------------------------------------- host exhaustion / slowdown / stall --
+
+def test_host_exhaust_backpressures_losslessly(baseline):
+    """The whole host pool vanishes for 3s mid-burst: admission
+    backpressures until the window clears, then everything finishes;
+    the reserve returns to zero (inert again)."""
+    rids, base = baseline
+    plan = FaultPlan.parse("host_exhaust@5.0:r0:dur=3.0", n_replicas=3)
+    cl = _cluster(plan=plan)
+    done = cl.run(_burst())
+    m = cl.metrics()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert m.n_replica_kills == 0 and m.n_shed == 0
+    assert m.tokens_out == base.tokens_out
+    assert all(c.fault_host_reserve == 0 for c in cl.cores)
+
+
+def test_slowdown_and_link_stall_are_stragglers_not_corpses(baseline):
+    """A slowdown stretches the replica's virtual time and a link stall
+    reserves its offload channel: both degrade latency, neither loses
+    work or triggers recovery."""
+    rids, base = baseline
+    plan = FaultPlan.parse(
+        "slowdown@5.0:r0:dur=3.0:factor=3.0;link_stall@6.0:r1:dur=1.0",
+        n_replicas=3)
+    cl = _cluster(plan=plan)
+    done = cl.run(_burst())
+    m = cl.metrics()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert m.n_replica_kills == 0 and m.n_shed == 0
+    assert m.tokens_out == base.tokens_out
+    assert m.makespan >= base.makespan
+
+
+# ---------------------------------------------------------- graceful drain ---
+
+def test_drain_replica_graceful_retire(baseline):
+    """`drain_replica` re-routes queued work, lets in-flight work
+    finish in place (zero recompute — nothing is re-dispatched through
+    the restart path), and retires the replica once empty."""
+    rids, base = baseline
+    cl = _cluster()
+    hs = [cl.submit(r, arrival=r.arrival) for r in _burst()]
+    while not any(h.replica == 0 and h.request.tokens_out for h in hs):
+        assert cl.step()
+    cl.drain_replica(0)
+    done = cl.drain()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert not cl.alive[0]
+    assert cl.metrics().n_redispatched == 0   # graceful != kill
+    assert cl.metrics().tokens_out == base.tokens_out
+    assert any("drain r0" in line for line in cl.recovery_log)
+    assert any("retired r0" in line for line in cl.recovery_log)
+    _pools_at_baseline(cl)
+
+
+# ------------------------------------------------------- template re-homing --
+
+def test_template_rehoming_after_kill():
+    """Prefix affinity survives a kill: the hot template's re-dispatched
+    requests all land on ONE recovery replica (the first re-dispatch
+    records the home, the rest follow it) — never scattered."""
+    cl = ClusterSession(
+        [_sim() for _ in range(3)],
+        router=PrefixAffinityRouting(spill_frac=float("inf")))
+    reqs = multi_tenant(24, rate=60.0, n_tenants=1, prompt_len=512,
+                        output_len=64, seed=11)
+    hs = [cl.submit(r, arrival=r.arrival) for r in reqs]
+    while not any(h.replica is not None and h.request.tokens_out
+                  for h in hs):
+        assert cl.step()
+    home = next(h.replica for h in hs if h.replica is not None)
+    cl.kill(home)
+    done = cl.drain()
+    assert len(done) == 24
+    redisp = [h for h in hs if h.request.n_redispatched]
+    assert redisp, "the kill must have displaced live template work"
+    landed = {h.replica for h in redisp}
+    assert len(landed) == 1 and home not in landed
+    assert set(cl._template_home.values()) == landed
+
+
+# --------------------------------------------------- graceful degradation ----
+
+def test_shed_overload_pool_infeasible_instead_of_wedge():
+    """The test_cluster backpressure scenario, with `shed_overload` on:
+    the never-fits request is shed typed (PoolInfeasible) and the drain
+    COMPLETES — same workload, no AdmissionImpossible."""
+    cl = ClusterSession(
+        [_sim(policy="vllm", chunked=False, prefix_cache=False,
+              num_device_blocks=LLAMA2_7B.n_layers * 8,
+              shed_overload=True)
+         for _ in range(2)],
+        router="least_loaded")
+    ok = [cl.submit(Request(rid=f"r{i}", prompt_len=100, output_len=4))
+          for i in range(4)]
+    big = cl.submit(Request(rid="huge", prompt_len=4096, output_len=4))
+    done = cl.drain()
+    assert all(h.finished for h in ok) and len(done) == 4
+    assert big.shed and big.request.shed_reason == "PoolInfeasible"
+    m = cl.metrics()
+    assert m.n_shed == 1 and m.shed_reasons == ["PoolInfeasible"]
+
+
+def test_shed_reason_host_pool_exhausted_under_fault_pressure():
+    """A feasible request starved past its deadline while the host pool
+    is fault-reserved sheds with the HostPoolExhausted reason — the
+    typed report distinguishes fault pressure from plain infeasibility."""
+    sim = _sim(shed_overload=True, shed_grace_frac=0.0)
+    sess = ServingSession(sim)
+    sess.submit(Request(rid="a", prompt_len=512, output_len=16))
+    for _ in range(4):
+        sess.step()          # a reaches DECODE before the fault lands
+    sim.core.fault_host_reserve = 1 << 14   # injected host pressure
+    starved = Request(rid="b", prompt_len=512, output_len=4,
+                      ttft_slo=0.001)
+    sess.submit(starved)
+    done = sess.drain()
+    # b's layer-wise prefill offload cannot reach the host pool; once
+    # aged past its (tight) deadline it sheds typed — a is untouched
+    assert [r.rid for r in done] == ["a"]
+    assert starved.shed_reason == "HostPoolExhausted"
+    assert [r.rid for r in sim.core.shed] == ["b"]
+
+
+# ------------------------------------------------------------- sanitizer S9 --
+
+def test_s9_recovery_baseline_detects_leftover_state():
+    """The S9 tier is STRICTER than a live full check: any queued
+    request or surviving KV table after a kill-unwind is a failure."""
+    sim = _sim()
+    sess = ServingSession(sim)
+    sess.submit(Request(rid="a", prompt_len=64, output_len=4))
+    san = sim.core.sanitizer
+    assert san is not None
+    with pytest.raises(SanitizerError, match="S9 recovery"):
+        san.check_recovery_baseline(sim.core)
+    sess.drain()
+    san.check_recovery_baseline(sim.core)    # clean after drain
+
+
+# ---------------------------------------------------------------- real engine --
+
+def _engine(cfg, **kw):
+    kw.setdefault("policy", "layerkv")
+    kw.setdefault("slo_aware", False)
+    return LayerKVEngine(
+        cfg, None,
+        EngineConfig(num_host_blocks=512, block_size=8, **kw),
+        rng=jax.random.PRNGKey(42))
+
+
+def _eng_workload(cfg, n=4, shared_len=24, seed=2):
+    r0 = np.random.RandomState(seed)
+    pre = [int(x) for x in r0.randint(0, cfg.vocab_size, shared_len)]
+    reqs = []
+    for i in range(n):
+        sfx = [int(x) for x in
+               r0.randint(0, cfg.vocab_size, int(r0.randint(8, 24)))]
+        reqs.append(Request(
+            rid=f"r{i}", prompt_len=shared_len + len(sfx),
+            output_len=int(r0.randint(6, 10)), arrival=float(i) * 1e-6,
+            prompt=pre + sfx))
+    return reqs
+
+
+@pytest.mark.slow
+def test_engine_kill_streams_bit_identical_tokens():
+    """Token exactness on the REAL engine: a mid-stream kill folds the
+    delivered ids into the prompt, and greedy decode of the remainder
+    continues bit-identically — every stream equals a fault-free solo
+    run of the same prompt, with no gap and no repeat."""
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"),
+                              dtype="float32")
+    kw = dict(chunked=True, chunk_size=16, prefix_cache=True,
+              num_device_blocks=1024)
+    reference = {}
+    for r in _eng_workload(cfg):
+        reference[r.rid] = [int(t) for t in
+                            _engine(cfg, **kw).run([r])[0].generated]
+
+    cl = ClusterSession([_engine(cfg, **kw) for _ in range(2)],
+                        router="round_robin")
+    hs = [cl.submit(r, arrival=r.arrival) for r in _eng_workload(cfg)]
+    streams = {h.rid: [] for h in hs}
+
+    def pump():
+        for h in hs:
+            streams[h.rid].extend(h.take_new())
+
+    while not any(h.replica == 0 and streams[h.rid] for h in hs):
+        assert cl.step()
+        pump()
+    cl.kill(0)
+    while cl.step():
+        pump()
+    cl.drain()
+    pump()
+    assert cl.n_kills == 1
+    assert any(h.request.n_redispatched for h in hs)
+    for h in hs:
+        assert streams[h.rid] == reference[h.rid], h.rid
+    for s in cl.sessions:
+        s.backend.bm.drop_cache()
+        s.backend.bm.check()
+        assert s.backend.bm.num_free(DEVICE) == \
+            s.backend.bm.pools[DEVICE].num_blocks

@@ -10,6 +10,8 @@ did).  One line per rule; the long story lives in docs/ARCHITECTURE.md
   CFG001   every ServeConfig field is read by the backend set that
            owns it (no dead or cross-backend config)
   PHASE001 queue dispatches over request phase handle every live queue
+  FAULT001 fault injection is default-off: fault params default to
+           None and every fault-engine call is guarded
 """
 
 from __future__ import annotations
@@ -590,10 +592,130 @@ class PHASE001PartialPhaseDispatch(Rule):
         return out
 
 
+# --------------------------------------------------------------- FAULT001
+_FAULT_PARAMS = frozenset({"fault_plan", "faults"})
+
+
+class FAULT001FaultHooksNotDefaultOff(Rule):
+    """Fault injection must be UNREACHABLE without an explicitly
+    installed `FaultPlan`: the fault-free arms of every benchmark and
+    identity test are the baseline the paper's numbers compare against,
+    so a fault hook that runs by default silently changes them.  Two
+    checks: (a) any parameter named `fault_plan`/`faults` must default
+    to None (opt-in, like the sanitizer); (b) any CALL through a
+    `faults` attribute (e.g. `self.faults.poll(...)`) must sit under a
+    guard that tests the attribute — an `if`/`while`/ternary whose
+    condition mentions it, or an `and` chain where a preceding operand
+    does.  Plain value reads (`fault_host_reserve` arithmetic, which is
+    inert at 0) are exempt."""
+
+    rule_id = "FAULT001"
+    description = "fault hook reachable without an installed FaultPlan"
+
+    def interested(self, path: Path) -> bool:
+        return path.suffix == ".py"
+
+    @staticmethod
+    def _mentions_faults(node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute) and sub.attr == "faults":
+                return True
+            if isinstance(sub, ast.Name) and sub.id == "faults":
+                return True
+        return False
+
+    @staticmethod
+    def _is_faults_call(call: ast.Call) -> bool:
+        node = call.func
+        while isinstance(node, ast.Attribute):
+            if node.attr == "faults":
+                return True
+            node = node.value
+        return isinstance(node, ast.Name) and node.id == "faults"
+
+    def _check_defaults(self, ctx: FileContext,
+                        out: List[Violation]) -> None:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            a = fn.args
+            pos = a.posonlyargs + a.args
+            # defaults align with the TAIL of the positional params
+            pad: List[Optional[ast.expr]] = \
+                [None] * (len(pos) - len(a.defaults))
+            for arg, dflt in zip(pos, pad + list(a.defaults)):
+                if arg.arg in _FAULT_PARAMS and not (
+                        isinstance(dflt, ast.Constant)
+                        and dflt.value is None):
+                    out.append(self.violation(
+                        ctx, arg.lineno,
+                        f"fault parameter '{arg.arg}' must default to "
+                        "None: fault injection is opt-in, never "
+                        "ambient"))
+            for arg, kdflt in zip(a.kwonlyargs, a.kw_defaults):
+                if arg.arg in _FAULT_PARAMS and not (
+                        isinstance(kdflt, ast.Constant)
+                        and kdflt.value is None):
+                    out.append(self.violation(
+                        ctx, arg.lineno,
+                        f"fault parameter '{arg.arg}' must default to "
+                        "None: fault injection is opt-in, never "
+                        "ambient"))
+
+    def _check_guards(self, ctx: FileContext,
+                      out: List[Violation]) -> None:
+        parents: Dict[int, ast.AST] = {}
+        for node in ast.walk(ctx.tree):
+            for child in ast.iter_child_nodes(node):
+                parents[id(child)] = node
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and self._is_faults_call(node)):
+                continue
+            guarded = False
+            cur: ast.AST = node
+            while id(cur) in parents:
+                parent = parents[id(cur)]
+                if isinstance(parent, (ast.If, ast.While, ast.IfExp)) \
+                        and cur is not parent.test \
+                        and self._mentions_faults(parent.test):
+                    guarded = True
+                    break
+                if isinstance(parent, ast.BoolOp) \
+                        and isinstance(parent.op, ast.And):
+                    before = parent.values[:parent.values.index(cur)] \
+                        if cur in parent.values else parent.values
+                    if any(self._mentions_faults(v) for v in before
+                           if v is not cur):
+                        guarded = True
+                        break
+                if isinstance(parent, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef,
+                                       ast.ClassDef)):
+                    # guards don't cross def/class boundaries (a lambda
+                    # inside a guarded branch IS lexically guarded)
+                    break
+                cur = parent
+            if not guarded:
+                out.append(self.violation(
+                    ctx, node.lineno,
+                    "unguarded call through '.faults': test the "
+                    "attribute first (`if self.faults is not None:`) "
+                    "so fault-free runs never reach the hook"))
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        out: List[Violation] = []
+        self._check_defaults(ctx, out)
+        self._check_guards(ctx, out)
+        return out
+
+
 ALL_RULES: List[Rule] = [
     PL001NoProgramIdInWhen(),
     JIT001RawIntAcrossJit(),
     SEAM001PolicyMutatesCore(),
     CFG001DeadOrMisplacedConfig(),
     PHASE001PartialPhaseDispatch(),
+    FAULT001FaultHooksNotDefaultOff(),
 ]
