@@ -62,6 +62,8 @@ def main() -> None:
         preemption.main(n_requests=36 if not (args.quick or smoke) else n,
                         smoke=smoke)
     if not only or "faults" in only:
+        # repro-lint: disable=FAULT001 -- `faults` here is the benchmark
+        # module, not a FaultPlan hook; the "only" test above is the guard
         faults.main(n_requests=40 if not (args.quick or smoke) else n,
                     smoke=smoke)
     if not only or "kernels" in only:

@@ -40,6 +40,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
+from repro.core.units import Blocks, LayerIdx, Tokens, tokens_to_blocks
+
 DEVICE = "device"
 HOST = "host"
 
@@ -54,14 +56,14 @@ class PoolExhausted(Exception):
 
 
 class _Pool:
-    def __init__(self, name: str, num_blocks: int) -> None:
+    def __init__(self, name: str, num_blocks: Blocks) -> None:
         self.name = name
-        self.num_blocks = num_blocks
+        self.num_blocks: Blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._owner: Dict[int, Tuple[str, int]] = {}  # block -> (req, layer)
 
     @property
-    def num_free(self) -> int:
+    def num_free(self) -> Blocks:
         return len(self._free)
 
     def alloc(self, n: int, owner: Tuple[str, int]) -> List[int]:
@@ -93,7 +95,7 @@ class _Pool:
 class LayerAllocation:
     pool: str                    # DEVICE or HOST
     blocks: List[int]            # physical ids, logical order
-    num_tokens: int = 0          # valid tokens written
+    num_tokens: Tokens = 0       # valid tokens written
 
 
 @dataclasses.dataclass
@@ -127,7 +129,7 @@ class PrefixAcquisition:
     """Result of mapping a cached prefix into a request's block tables.
     The physical copies were already issued through `on_copy`; the lists
     here are for accounting/tests."""
-    cached_len: int                               # prompt tokens skipped
+    cached_len: Tokens                            # prompt tokens skipped
     cow_copies: List[Tuple[int, int, int]]        # (layer, src, dst) d2d
     promotions: List[Tuple[int, int, int]]        # (layer, host src, dst)
 
@@ -184,7 +186,7 @@ class PrefixCache:
             self.lru[pool][key] = e
         return e
 
-    def count(self, lookup_tokens: int, hit_tokens: int) -> None:
+    def count(self, lookup_tokens: Tokens, hit_tokens: Tokens) -> None:
         """Record one admission's lookup — called ONCE per admitted
         request (not per retry), so hit_rate measures workload sharing."""
         self.lookup_tokens += lookup_tokens
@@ -242,7 +244,7 @@ class LayerwiseBlockManager:
         self._hash_memo: Dict[int, Tuple[list, List[int]]] = {}
 
     # ------------------------------------------------------------- queries
-    def num_free(self, pool: str = DEVICE) -> int:
+    def num_free(self, pool: str = DEVICE) -> Blocks:
         """Allocatable blocks: the free list plus unreferenced cache blocks
         (reclaimed on demand inside `_alloc_blocks`)."""
         n = self.pools[pool].num_free
@@ -250,11 +252,11 @@ class LayerwiseBlockManager:
             n += self.cache.n_unref(pool)
         return n
 
-    def blocks_for_tokens(self, n_tokens: int) -> int:
-        return -(-n_tokens // self.block_size)
+    def blocks_for_tokens(self, n_tokens: Tokens) -> Blocks:
+        return tokens_to_blocks(n_tokens, self.block_size)
 
-    def request_blocks(self, n_tokens: int,
-                       n_layers: Optional[int] = None) -> int:
+    def request_blocks(self, n_tokens: Tokens,
+                       n_layers: Optional[int] = None) -> Blocks:
         """Blocks needed to hold `n_tokens` of KV for `n_layers` layers
         (request-wise baseline passes n_layers = all)."""
         L = self.n_layers if n_layers is None else n_layers
@@ -264,13 +266,13 @@ class LayerwiseBlockManager:
         return [l for l, a in self.tables.get(req, {}).items()
                 if a.pool == pool]
 
-    def allocation(self, req: str, layer: int) -> LayerAllocation:
+    def allocation(self, req: str, layer: LayerIdx) -> LayerAllocation:
         return self.tables[req][layer]
 
     def live_requests(self) -> List[str]:
         return list(self.tables)
 
-    def layer_shared(self, req: str, layer: int) -> bool:
+    def layer_shared(self, req: str, layer: LayerIdx) -> bool:
         """True when any block of (req, layer) is also referenced by
         another live request — such layers must not migrate or be evicted
         out from under the sharer."""
@@ -284,7 +286,7 @@ class LayerwiseBlockManager:
         return False
 
     # ---------------------------------------------------------- allocation
-    def can_alloc(self, n_blocks: int, pool: str = DEVICE) -> bool:
+    def can_alloc(self, n_blocks: Blocks, pool: str = DEVICE) -> bool:
         return self.num_free(pool) >= n_blocks
 
     def _copy(self, src_pool: str, src: int, dst_pool: str,
@@ -315,7 +317,7 @@ class LayerwiseBlockManager:
                     self.cache.drop(e)
         return p.alloc(n, owner)
 
-    def alloc_layer(self, req: str, layer: int, n_tokens: int,
+    def alloc_layer(self, req: str, layer: LayerIdx, n_tokens: Tokens,
                     pool: str = DEVICE) -> LayerAllocation:
         assert 0 <= layer < self.n_layers
         tbl = self.tables.setdefault(req, {})
@@ -326,8 +328,8 @@ class LayerwiseBlockManager:
         tbl[layer] = alloc
         return alloc
 
-    def extend_layer(self, req: str, layer: int,
-                     n_new_tokens: int = 1) -> LayerAllocation:
+    def extend_layer(self, req: str, layer: LayerIdx,
+                     n_new_tokens: Tokens = 1) -> LayerAllocation:
         """Grow a layer's allocation for newly decoded tokens (same pool)."""
         a = self.tables[req][layer]
         need = self.blocks_for_tokens(a.num_tokens + n_new_tokens) \
@@ -351,7 +353,7 @@ class LayerwiseBlockManager:
         self._hash_memo[key] = (tokens, hs)
         return hs
 
-    def match_prefix(self, tokens: Optional[List[int]]) -> int:
+    def match_prefix(self, tokens: Optional[List[int]]) -> Tokens:
         """Longest cached prompt prefix, in tokens. Full-block granular,
         capped at len(tokens)-1 so at least one token is always recomputed
         (its logits produce the first output token). A block counts as
@@ -467,7 +469,7 @@ class LayerwiseBlockManager:
         return PrefixAcquisition(cached_len, cow, promos)
 
     def register_prefix(self, req: str, tokens: List[int],
-                        upto: Optional[int] = None) -> int:
+                        upto: Optional[Tokens] = None) -> Blocks:
         """Publish `req`'s full prompt blocks into the cache, for the
         blocks wholly inside [0, upto) (default: the whole prompt) — call
         as their KV is written (chunked prefill registers incrementally).
@@ -498,7 +500,7 @@ class LayerwiseBlockManager:
         return added
 
     # ----------------------------------------------------------- migration
-    def move_layer(self, req: str, layer: int, to_pool: str,
+    def move_layer(self, req: str, layer: LayerIdx, to_pool: str,
                    detach: bool = False) -> Tuple[List[int], List[int]]:
         """Migrate one layer's KV between pools. Returns (src_blocks,
         dst_blocks) so the caller can issue the physical copies; accounting
@@ -534,7 +536,7 @@ class LayerwiseBlockManager:
         return src, dst
 
     # ------------------------------------------------------------- release
-    def free_request(self, req: str) -> int:
+    def free_request(self, req: str) -> Blocks:
         """Release every block of a finished request. Cache-registered
         blocks are decref'd and retained (reclaimable LRU) instead of
         freed. Returns #blocks made available on DEVICE (free or
@@ -557,7 +559,7 @@ class LayerwiseBlockManager:
                     dev_freed += 1
         return dev_freed
 
-    def drop_cache(self) -> int:
+    def drop_cache(self) -> Blocks:
         """Drop every unreferenced cache entry (test/maintenance hook)."""
         if self.cache is None:
             return 0

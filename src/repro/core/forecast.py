@@ -9,10 +9,12 @@ offloaded before the pool runs dry (paper §3.1.1 last paragraph).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import TYPE_CHECKING, List, Sequence
 
 from repro.core.predictor import LengthPredictor
-from repro.serving.request import Request
+
+if TYPE_CHECKING:  # annotation-only: a runtime import would cycle via
+    from repro.serving.request import Request  # repro.core.units
 
 
 @dataclasses.dataclass

@@ -13,9 +13,10 @@ Three responsibilities:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import TYPE_CHECKING, List, Optional, Tuple
 
-from repro.serving.costmodel import CostModel
+if TYPE_CHECKING:  # pragma: no cover — import cycle (serving -> core)
+    from repro.serving.costmodel import CostModel
 
 
 def interleave_offload_layers(n_layers: int, retain: int) -> List[int]:

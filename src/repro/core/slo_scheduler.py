@@ -13,11 +13,14 @@ N_future by the bucketed length predictor.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import TYPE_CHECKING, Callable, Optional, Sequence
 
 from repro.core.predictor import LengthPredictor
-from repro.serving.costmodel import CostModel
-from repro.serving.request import Request
+from repro.core.units import Bytes, Seconds, Tokens, bytes_to_seconds
+
+if TYPE_CHECKING:  # pragma: no cover — import cycle (serving -> core)
+    from repro.serving.costmodel import CostModel
+    from repro.serving.request import Request
 
 
 @dataclasses.dataclass
@@ -30,8 +33,8 @@ class SLOScheduler:
     min_admit_when_idle: int = 1
 
     # ------------------------------------------------------------------ Eq.1
-    def allow_prefill_budget(self, decoding: Sequence[Request], now: float
-                             ) -> float:
+    def allow_prefill_budget(self, decoding: Sequence[Request], now: Seconds
+                             ) -> Seconds:
         """min_i T_allow^i over decoding requests; +inf if none decoding."""
         budget = float("inf")
         for r in decoding:
@@ -48,8 +51,8 @@ class SLOScheduler:
 
     # ------------------------------------------------------------- Alg.1
     def max_prefills(self, queue: Sequence[Request],
-                     decoding: Sequence[Request], now: float,
-                     cached_len: Optional[Callable[[Request], int]] = None
+                     decoding: Sequence[Request], now: Seconds,
+                     cached_len: Optional[Callable[[Request], Tokens]] = None
                      ) -> int:
         """Maximum n such that the first n queued prefills fit in the
         minimum TPOT slack (Eq. 2). `queue` arrives in the caller's
@@ -79,7 +82,7 @@ class SLOScheduler:
         return n
 
     # ------------------------------------------------- preemption pricing
-    def preempt_slack(self, r: Request, now: float) -> float:
+    def preempt_slack(self, r: Request, now: Seconds) -> Seconds:
         """Deadline slack of one request, for victim selection:
 
           * not yet decoding — first-token headroom, its effective
@@ -92,8 +95,8 @@ class SLOScheduler:
             return r.effective_deadline - now
         return self.allow_prefill_budget([r], now)
 
-    def victim_affordable(self, r: Request, now: float,
-                          resume_bytes: float, offload_bw: float) -> bool:
+    def victim_affordable(self, r: Request, now: Seconds,
+                          resume_bytes: Bytes, offload_bw: float) -> bool:
         """Can `r` absorb being preempted without blowing its own SLO?
         The price of pausing r is the h2d promotion it must later pay to
         resume (its whole KV crossing the offload link back); affordable
@@ -102,11 +105,11 @@ class SLOScheduler:
         unaffordable ones only for a preemptor that is itself already
         past its deadline."""
         return self.preempt_slack(r, now) \
-            >= resume_bytes / max(offload_bw, 1e-9)
+            >= bytes_to_seconds(resume_bytes, max(offload_bw, 1e-9))
 
     # ------------------------------------------------- chunked prefill budget
-    def max_chunk_tokens(self, decoding: Sequence[Request], now: float,
-                         cap: int, floor: int = 16) -> int:
+    def max_chunk_tokens(self, decoding: Sequence[Request], now: Seconds,
+                         cap: Tokens, floor: Tokens = 16) -> Tokens:
         """Per-iteration prefill-TOKEN budget for chunked prefill (the
         token-budget analogue of Alg.1). With mixed batching decodes are
         not stalled by a prefill, but the iteration stretches to the chunk

@@ -9,6 +9,8 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.base import ModelConfig
+from repro.core.units import Bytes, Seconds, Tokens, bytes_to_seconds, \
+    tokens_to_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,7 +62,7 @@ class CostModel:
     mbu_decode: float = 0.70    # achievable fraction of HBM bw in decode
 
     # ------------------------------------------------------------------ Eq.3
-    def prefill_time(self, seqlen: int) -> float:
+    def prefill_time(self, seqlen: Tokens) -> Seconds:
         """T_prefill = alpha * seqlen * (2 n_param + 2 seqlen n_hidden)
         / FLOPs  (paper Eq. 3), with FLOPs derated by achievable MFU."""
         n_param = self.cfg.active_param_count()
@@ -69,7 +71,8 @@ class CostModel:
         return self.alpha * seqlen * flops / (
             self.hw.flops_per_s * self.mfu_prefill)
 
-    def chunk_prefill_time(self, chunk_len: int, prefix_len: int) -> float:
+    def chunk_prefill_time(self, chunk_len: Tokens,
+                           prefix_len: Tokens) -> Seconds:
         """Eq.3 cost of prefilling tokens [prefix, prefix+chunk) given that
         `prefix_len` tokens are already cached (chunked prefill). The
         quadratic attention term is split so chunk costs telescope exactly:
@@ -85,21 +88,22 @@ class CostModel:
         return self.alpha * flops / (self.hw.flops_per_s * self.mfu_prefill)
 
     # ------------------------------------------------------------------ Eq.4
-    def kv_bytes(self, seqlen: int, n_layers: int | None = None) -> int:
+    def kv_bytes(self, seqlen: Tokens, n_layers: int | None = None) -> Bytes:
         """KV bytes for `seqlen` tokens across `n_layers` attention layers
         (default: all of them). 2 * d_heads * n_heads * f_precision per
         token-layer, with GQA heads."""
         L = self.cfg.n_attention_layers() if n_layers is None else n_layers
         hd = self.cfg.resolved_head_dim
-        return int(2 * L * self.cfg.n_kv_heads * hd * self.hw.f_precision
-                   * seqlen)
+        per_token = int(2 * L * self.cfg.n_kv_heads * hd
+                        * self.hw.f_precision)
+        return tokens_to_bytes(seqlen, per_token)
 
-    def offload_time(self, seqlen: int, n_offload_layers: int) -> float:
+    def offload_time(self, seqlen: Tokens, n_offload_layers: int) -> Seconds:
         """T_offload = beta * seqlen * 2 (L-x) d_heads n_heads f / BW."""
-        return self.beta * self.kv_bytes(seqlen, n_offload_layers) \
-            / self.hw.offload_bw
+        return self.beta * bytes_to_seconds(
+            self.kv_bytes(seqlen, n_offload_layers), self.hw.offload_bw)
 
-    def min_retained_layers(self, seqlen: int) -> int:
+    def min_retained_layers(self, seqlen: Tokens) -> int:
         """Smallest x with T_offload(L - x) <= T_prefill(seqlen) (paper
         §3.1.1): retain x layers on device, offload the rest fully hidden
         under prefill compute."""
@@ -111,8 +115,8 @@ class CostModel:
         return L
 
     # ---------------------------------------------------------------- decode
-    def decode_step_time(self, batch_size: int, avg_ctx: int,
-                         host_kv_bytes: float = 0.0) -> float:
+    def decode_step_time(self, batch_size: int, avg_ctx: Tokens,
+                         host_kv_bytes: Bytes = 0) -> Seconds:
         """One decode iteration for a running batch. Memory-bound: stream
         active params once + the batch's KV; `host_kv_bytes` of KV resident
         on the host streams over the offload link overlapped with compute
@@ -124,9 +128,9 @@ class CostModel:
         return max(t_hbm, t_reload)
 
     # ----------------------------------------------------------- mixed batch
-    def mixed_step_time(self, prefill_chunk_time: float, batch_size: int,
-                        avg_ctx: int, host_kv_bytes: float = 0.0,
-                        fused: bool = False) -> float:
+    def mixed_step_time(self, prefill_chunk_time: Seconds, batch_size: int,
+                        avg_ctx: Tokens, host_kv_bytes: Bytes = 0,
+                        fused: bool = False) -> Seconds:
         """One iteration that batches prefill-chunk tokens WITH the decode
         tokens (chunked prefill). The chunk portion is FLOPs-bound, the
         decode portion HBM-bound — the iteration takes the max of the two,

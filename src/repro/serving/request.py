@@ -5,6 +5,8 @@ import dataclasses
 import enum
 from typing import List, Optional
 
+from repro.core.units import Seconds, Tokens
+
 
 class Phase(enum.Enum):
     """Request lifecycle states, shared by both backends."""
@@ -26,36 +28,36 @@ class Request:
     are in seconds; `priority`/`deadline` feed the `deadline` admission
     policy and the preemption controller (units in field comments)."""
     rid: str
-    prompt_len: int
-    output_len: int                  # target generation length (EOS position)
-    arrival: float = 0.0
-    tpot_slo: float = 0.2            # seconds/token (paper Fig.8: 200 ms)
-    ttft_slo: float = 3.0            # seconds (paper Fig.8: 3000 ms)
+    prompt_len: Tokens
+    output_len: Tokens                  # target generation length (EOS position)
+    arrival: Seconds = 0.0
+    tpot_slo: Seconds = 0.2            # seconds/token (paper Fig.8: 200 ms)
+    ttft_slo: Seconds = 3.0            # seconds (paper Fig.8: 3000 ms)
     prompt: Optional[list] = None    # token ids (real engine)
     priority: int = 0                # class rank; HIGHER preempts lower
     #                                  (0 = batch, 1 = interactive by
     #                                  convention). Only the 'deadline'
     #                                  admission policy and the preemption
     #                                  controller read it.
-    deadline: float = -1.0           # absolute first-token deadline
+    deadline: Seconds = -1.0           # absolute first-token deadline
     #                                  (seconds on the virtual clock);
     #                                  < 0 derives arrival + ttft_slo
 
     phase: Phase = Phase.QUEUED
-    prefill_start: float = -1.0
-    first_token_time: float = -1.0   # TTFT reference point
-    finish_time: float = -1.0
-    tokens_out: int = 0
-    decode_start: float = -1.0
+    prefill_start: Seconds = -1.0
+    first_token_time: Seconds = -1.0   # TTFT reference point
+    finish_time: Seconds = -1.0
+    tokens_out: Tokens = 0
+    decode_start: Seconds = -1.0
     generated: List[int] = dataclasses.field(default_factory=list)
     n_preempted: int = 0             # times this request was paused
-    last_token_time: float = -1.0    # stamp of the newest emitted token
-    max_tbt: float = 0.0             # widest gap between adjacent tokens
+    last_token_time: Seconds = -1.0    # stamp of the newest emitted token
+    max_tbt: Seconds = 0.0             # widest gap between adjacent tokens
 
     # --- chunked-prefill progress (scheduler-owned) --------------------------
-    prefill_done: int = 0            # prompt tokens whose KV is cached
+    prefill_done: Tokens = 0            # prompt tokens whose KV is cached
     n_chunks: int = 0                # chunks this prefill was split into
-    cached_prompt_len: int = 0       # prompt tokens served from the
+    cached_prompt_len: Tokens = 0       # prompt tokens served from the
     #                                  cross-request prefix cache (compute
     #                                  skipped; subset of prefill_done)
 
@@ -65,13 +67,13 @@ class Request:
     n_redispatched: int = 0          # replica kills survived: each one
     #                                  folded the streamed tokens into the
     #                                  prompt and restarted the remainder
-    tokens_salvaged: int = 0         # tokens streamed by DEAD incarnations
+    tokens_salvaged: Tokens = 0         # tokens streamed by DEAD incarnations
     #                                  (already delivered; excluded from
     #                                  output_len, which counts down)
     n_dispatch_retries: int = 0      # transient dispatch failures retried
 
     @property
-    def prefill_remaining(self) -> int:
+    def prefill_remaining(self) -> Tokens:
         return max(self.prompt_len - self.prefill_done, 0)
 
     @property
@@ -80,7 +82,7 @@ class Request:
 
     # --- deadline / preemption ----------------------------------------------
     @property
-    def effective_deadline(self) -> float:
+    def effective_deadline(self) -> Seconds:
         """Absolute time the first token is due: the explicit `deadline`
         when set, else `arrival + ttft_slo` (so every request has one and
         the deadline policy degrades gracefully to TTFT-SLO ordering)."""
@@ -91,7 +93,7 @@ class Request:
         return self.first_token_time >= 0 \
             and self.first_token_time <= self.effective_deadline
 
-    def note_token(self, now: float) -> None:
+    def note_token(self, now: Seconds) -> None:
         """Stamp a token emission at `now`; maintains the max inter-token
         gap (TBT) — the tail metric preemption trades against."""
         if self.last_token_time >= 0.0:
@@ -100,15 +102,15 @@ class Request:
 
     # --- derived metrics -----------------------------------------------------
     @property
-    def ttft(self) -> float:
+    def ttft(self) -> Seconds:
         return self.first_token_time - self.arrival
 
     @property
-    def queuing_delay(self) -> float:
+    def queuing_delay(self) -> Seconds:
         return self.prefill_start - self.arrival
 
     @property
-    def prefill_latency(self) -> float:
+    def prefill_latency(self) -> Seconds:
         return self.first_token_time - self.prefill_start
 
     @property
@@ -127,14 +129,14 @@ class Request:
         return (now - self.first_token_time) / (self.tokens_out - 1)
 
     # --- scheduler state (paper Eq. 1) ---------------------------------------
-    def t_past(self, now: float) -> float:
+    def t_past(self, now: Seconds) -> Seconds:
         """Decoding time already spent, incl. waiting between tokens."""
         if self.first_token_time < 0:
             return 0.0
         return now - self.first_token_time
 
     @property
-    def n_past(self) -> int:
+    def n_past(self) -> Tokens:
         return self.tokens_out
 
     def slo_violated(self) -> bool:

@@ -73,7 +73,10 @@ class RoundRobinRouting(RoutingPolicy):
         return i
 
 
-def _least(loads: List) -> int:
+def _least(loads: List, by_tokens: bool = False) -> int:
+    if by_tokens:
+        return min(range(len(loads)),
+                   key=lambda i: (loads[i].token_demand, i))
     return min(range(len(loads)), key=lambda i: (loads[i].kv_demand, i))
 
 
@@ -82,12 +85,21 @@ class LeastLoadedRouting(RoutingPolicy):
     in *blocks* (not requests) is the right unit here: the paper's core
     finding is that TTFT is dominated by queueing for KV blocks, so a
     replica with few-but-huge prompts queued is more loaded than one
-    with many tiny ones."""
+    with many tiny ones.
+
+    With `ServeConfig.route_by_tokens` the key switches to outstanding
+    TOKEN demand (`LoadStats.token_demand`): queued uncached prefill
+    suffixes plus live context. Blocks weigh a replica by pool
+    pressure, tokens by the compute it still owes — under heavy prefix
+    sharing the two rankings differ (a replica whose queue is all cache
+    hits owes little compute but still needs the blocks). Default off:
+    block-demand routing is the paper's join-shortest-queue."""
 
     name = "least_loaded"
 
     def choose(self, request, cores, now):
-        return _least([c.load_stats() for c in cores])
+        by_tokens = bool(cores) and cores[0].sc.route_by_tokens
+        return _least([c.load_stats() for c in cores], by_tokens)
 
 
 class PrefixAffinityRouting(RoutingPolicy):

@@ -40,6 +40,7 @@ from repro.core import (
     DEVICE, HOST, LayerwiseBlockManager, OffloadEngine, PoolExhausted,
     SLOScheduler, interleave_offload_layers,
 )
+from repro.core.units import Blocks, Seconds, Tokens
 from repro.serving.costmodel import CostModel
 from repro.serving.request import Phase, Request
 
@@ -101,6 +102,13 @@ class ServeConfig:
     admission: str = "fcfs"         # waiting-queue order: 'fcfs' |
     #                                 'prefix_aware' | 'deadline'
     #                                 (see AdmissionPolicy)
+    route_by_tokens: bool = False   # least_loaded routing keys on
+    #                                 outstanding TOKEN demand
+    #                                 (LoadStats.token_demand) instead
+    #                                 of KV-block demand. Off (the
+    #                                 default) keeps the paper's
+    #                                 block-demand join-shortest-queue
+    #                                 bit-identically.
     sanitize: bool = False          # opt-in runtime KV-accounting
     #                                 sanitizer: shadow-track every pool/
     #                                 cache/ledger mutation and assert the
@@ -135,24 +143,24 @@ class ServeConfig:
     #                                 earlier (same bounded-overtaking
     #                                 argument, per class)
     # ---- pool geometry / batching (shared) -------------------------------
-    num_device_blocks: int = 0      # 0 = backend default (engine: 128,
+    num_device_blocks: Blocks = 0   # 0 = backend default (engine: 128,
     #                                 sim: derive from HW memory)
-    num_host_blocks: int = 1024     # host (offload) KV pool size, blocks
+    num_host_blocks: Blocks = 1024  # host (offload) KV pool size
     block_size: int = 16            # tokens per paged-KV block
     max_batch_size: int = 64        # in-flight (prefill+decode) requests
-    max_prefill_tokens: int = 8192  # per-iteration prefill token budget
+    max_prefill_tokens: Tokens = 8192  # per-iteration prefill budget
     #                                 (chunked mode chunk cap; exclusive
     #                                 sim batched-prefill cap)
-    chunk_floor: int = 8            # min chunk tokens/iter (progress)
+    chunk_floor: Tokens = 8         # min chunk tokens/iter (progress)
     # ---- engine-only -----------------------------------------------------
-    max_tokens_per_request: int = 4096  # generation cap per request, tokens
+    max_tokens_per_request: Tokens = 4096  # generation cap per request
     # ---- sim-only --------------------------------------------------------
     proactive: bool = True          # Eq.5 forecast eviction
     collective_reserve_frac: float = 0.0  # §3.1.3 all-reduce reservation
     forecast_horizon: int = 32
     forecast_threshold_frac: float = 0.05
     gpu_mem_util: float = 0.9       # vLLM gpu_memory_utilization
-    max_model_len: int = 16384      # drives activation reservation
+    max_model_len: Tokens = 16384   # drives activation reservation
 
     def validate(self) -> "ServeConfig":
         if self.fused and not self.chunked:
@@ -189,19 +197,35 @@ class LoadStats:
     blocks every waiting request still needs, i.e. the outstanding
     KV-block demand this replica's device pool has committed to."""
 
-    n_waiting: int        # requests queued, not yet prefilling
-    n_inflight: int       # prefilling + decoding
-    queued_blocks: int    # min device blocks the waiting queue still
-    #                       needs, plus the device blocks paused
-    #                       (preempted) requests need to resume
-    active_blocks: int    # device blocks held by live allocations
-    free_blocks: int      # allocatable now (incl. reclaimable cache)
-    total_blocks: int     # device pool size
-    n_paused: int = 0     # preempted requests parked on HOST
+    n_waiting: int           # requests queued, not yet prefilling
+    n_inflight: int          # prefilling + decoding
+    queued_blocks: Blocks    # min device blocks the waiting queue
+    #                          still needs, plus the device blocks
+    #                          paused (preempted) requests need to
+    #                          resume
+    active_blocks: Blocks    # device blocks held by live allocations
+    free_blocks: Blocks      # allocatable now (incl. reclaimable
+    #                          cache)
+    total_blocks: Blocks     # device pool size
+    n_paused: int = 0        # preempted requests parked on HOST
+    queued_tokens: Tokens = 0   # prefill tokens still owed by the
+    #                             waiting queue (uncached suffixes)
+    #                             and paused requests
+    active_tokens: Tokens = 0   # context tokens (prompt + generated)
+    #                             held by in-flight requests
 
     @property
-    def kv_demand(self) -> int:
+    def kv_demand(self) -> Blocks:
         return self.queued_blocks + self.active_blocks
+
+    @property
+    def token_demand(self) -> Tokens:
+        """Outstanding token demand: the `route_by_tokens` routing
+        key. Token demand weighs a replica by the COMPUTE it still
+        owes (queued prefill suffixes + live context), where
+        `kv_demand` weighs it by pool pressure — under heavy prefix
+        sharing the two rankings genuinely differ."""
+        return self.queued_tokens + self.active_tokens
 
     @property
     def occupancy(self) -> float:
@@ -390,7 +414,7 @@ class SchedulerCore:
                  bm: LayerwiseBlockManager, off: OffloadEngine,
                  slo: SLOScheduler, n_layers: int,
                  physical_copy: Optional[PhysicalCopy] = None,
-                 reserve_blocks: int = 0) -> None:
+                 reserve_blocks: Blocks = 0) -> None:
         self.sc = sc
         self.cost = cost
         self.bm = bm
@@ -400,8 +424,8 @@ class SchedulerCore:
         self.policy = make_admission_policy(sc)
         self.physical_copy = physical_copy
         # layerkv allocation headroom (sim: Eq.5 forecast reserve)
-        self.reserve_blocks = reserve_blocks
-        self.now = 0.0
+        self.reserve_blocks: Blocks = reserve_blocks
+        self.now: Seconds = 0.0
         # ---- request lifecycle --------------------------------------------
         self.waiting: deque[Request] = deque()
         self.prefilling: List[Request] = []   # chunked: in-flight chunks
@@ -441,10 +465,10 @@ class SchedulerCore:
     def idle(self) -> bool:
         return not (self.prefilling or self.decoding or self.paused)
 
-    def _blocks(self, tokens: int) -> int:
+    def _blocks(self, tokens: Tokens) -> Blocks:
         return self.bm.blocks_for_tokens(tokens)
 
-    def host_free(self) -> int:
+    def host_free(self) -> Blocks:
         """Usable HOST-pool blocks: the manager's free count minus any
         fault-injected reserve. Every HOST-side gate (admission offload
         layers, preemption demotion, sim eviction) reads this instead of
@@ -452,14 +476,14 @@ class SchedulerCore:
         without ever touching real pool accounting."""
         return self.bm.num_free(HOST) - self.fault_host_reserve
 
-    def cached_hint(self, r: Request) -> int:
+    def cached_hint(self, r: Request) -> Tokens:
         """Cached-prefix length for Eq.3 admission estimates (price the
         uncached suffix only, or admission over-throttles)."""
         if self.sc.prefix_cache and r.prompt:
             return self.bm.match_prefix(r.prompt)
         return 0
 
-    def device_need(self, r: Request, memoize: bool = True) -> int:
+    def device_need(self, r: Request, memoize: bool = True) -> Blocks:
         """MINIMUM device blocks to start r's prefill. With the prefix
         cache on, a hit needs only the uncached suffix (+ COW tail) but
         all layers device-resident — which for short prefixes can EXCEED
@@ -503,14 +527,25 @@ class SchedulerCore:
         free = self.bm.num_free(DEVICE)
         queued = sum(self.device_need(r) for r in self.waiting) \
             + sum(self.resume_need(r) for r in self.paused)
+        # token-level demand (the route_by_tokens routing key):
+        # prefill tokens still owed — a hit's cached prefix costs
+        # nothing, exactly as admission prices it — plus the live
+        # context every in-flight request already holds
+        queued_toks = sum(r.prompt_len - self.cached_hint(r)
+                          for r in self.waiting) \
+            + sum(r.prefill_remaining for r in self.paused)
+        active_toks = sum(r.prompt_len + r.tokens_out
+                          for r in self.prefilling + self.decoding)
         return LoadStats(n_waiting=len(self.waiting),
                          n_inflight=self.in_flight(),
                          queued_blocks=queued,
                          active_blocks=total - free,
                          free_blocks=free, total_blocks=total,
-                         n_paused=len(self.paused))
+                         n_paused=len(self.paused),
+                         queued_tokens=queued_toks,
+                         active_tokens=active_toks)
 
-    def admit_eta(self, r: Request, now: float) -> float:
+    def admit_eta(self, r: Request, now: Seconds) -> Seconds:
         """Estimated delay before this replica's Alg.1 slack admits `r`
         behind its current waiting queue: the Eq.3 prefill work already
         queued ahead of it, plus however much of r's own prefill does not
@@ -528,7 +563,7 @@ class SchedulerCore:
         a near-zero ETA to an interactive request."""
         t = max(now, self.now)
 
-        def _cost(q: Request) -> float:
+        def _cost(q: Request) -> Seconds:
             c = self.cached_hint(q)
             return self.cost.chunk_prefill_time(q.prompt_len - c, c)
 
@@ -637,7 +672,7 @@ class SchedulerCore:
         if kind == "reload":
             self.reload_bytes_migrated += nbytes
 
-    def reclaimable_blocks(self, r: Request) -> int:
+    def reclaimable_blocks(self, r: Request) -> Blocks:
         """Device blocks that preempting `r` would actually free: blocks
         shared through the prefix cache are detached (copied out, the
         device original stays with its other sharers) and free nothing."""
@@ -650,12 +685,12 @@ class SchedulerCore:
                     n += 1
         return n
 
-    def total_host_blocks(self, r: Request) -> int:
+    def total_host_blocks(self, r: Request) -> Blocks:
         """Blocks a request currently holds on the HOST tier."""
         return sum(len(self.bm.allocation(r.rid, l).blocks)
                    for l in self.bm.layers_on(r.rid, HOST))
 
-    def resume_need(self, r: Request) -> int:
+    def resume_need(self, r: Request) -> Blocks:
         """MINIMUM device blocks to resume a paused request. Under the
         request-wise `vllm` policy that is its whole KV (decode needs
         every layer device-resident); under `layerkv` it is one layer's
@@ -665,7 +700,7 @@ class SchedulerCore:
             return self.total_host_blocks(r)
         return self._blocks(r.prompt_len + r.tokens_out)
 
-    def preempt_request(self, r: Request, now: float) -> bool:
+    def preempt_request(self, r: Request, now: Seconds) -> bool:
         """Pause one running request losslessly: demote its
         device-resident KV layer-wise to HOST through the PR 2 demotion
         path and park it in `paused`. Nothing is recomputed on resume —
@@ -698,7 +733,7 @@ class SchedulerCore:
         self.n_preempted += 1
         return True
 
-    def _try_resume(self, r: Request, now: float) -> bool:
+    def _try_resume(self, r: Request, now: Seconds) -> bool:
         """Re-enter a paused request where it left off (decoding once its
         prefill completed, else the chunk queue) — no recompute ever.
         Promotion is greedy: as many host layers move back to DEVICE as
@@ -731,7 +766,7 @@ class SchedulerCore:
         self.n_resumed += 1
         return True
 
-    def _preempt_to_fit(self, r: Request, now: float) -> bool:
+    def _preempt_to_fit(self, r: Request, now: Seconds) -> bool:
         """Victim selection (arXiv 2503.13773-shaped): when `r` fails the
         device-block gate, free its shortfall by pausing strictly
         lower-priority running requests. Victims are taken lowest
@@ -777,7 +812,8 @@ class SchedulerCore:
         return self.bm.num_free(DEVICE) >= self.device_need(r)
 
     # ------------------------------------------------------------ admission
-    def admission_budget(self, order: List[Request], now: float) -> int:
+    def admission_budget(self, order: List[Request],
+                         now: Seconds) -> int:
         """Alg.1: how many of the ordered waiting prefills fit in the
         decode batch's minimum TPOT slack."""
         if self.sc.policy == "layerkv" and self.sc.slo_aware:
@@ -785,9 +821,10 @@ class SchedulerCore:
                                          cached_len=self.cached_hint)
         return len(order)
 
-    def admit_waiting(self, now: float,
+    def admit_waiting(self, now: Seconds,
                       immediate: Optional[Callable[[Request], bool]] = None,
-                      token_budget: Optional[int] = None) -> List[Request]:
+                      token_budget: Optional[Tokens] = None
+                      ) -> List[Request]:
         """One admission pass over the policy-ordered waiting queue.
         Head-of-line within the order: the first request that fails a
         gate stops the pass. Three caller modes:
@@ -874,7 +911,7 @@ class SchedulerCore:
         return admitted
 
     # ------------------------------------------------------- chunk assembly
-    def chunk_token_cap(self, now: float) -> int:
+    def chunk_token_cap(self, now: Seconds) -> Tokens:
         """Per-iteration prefill token budget: Eq.1 slack converted to
         tokens when slo_aware, else the static cap."""
         if self.sc.policy == "layerkv" and self.sc.slo_aware:
@@ -883,7 +920,7 @@ class SchedulerCore:
                 floor=self.sc.chunk_floor)
         return self.sc.max_prefill_tokens
 
-    def assemble_chunks(self, now: float, decode_tokens: int
+    def assemble_chunks(self, now: Seconds, decode_tokens: Tokens
                         ) -> List[Tuple[Request, int]]:
         """FCFS chunk assembly under the token budget; this iteration's
         decode tokens count against it. A floor guarantees prefill
@@ -906,7 +943,7 @@ class SchedulerCore:
         self.host_layers.pop(r.rid, None)
         self.plans.pop(r.rid, None)
 
-    def cancel(self, r: Request, now: float) -> bool:
+    def cancel(self, r: Request, now: Seconds) -> bool:
         """Unwind everything `r` has in flight, whatever its phase:
 
           * waiting      — just leaves the queue;
@@ -961,7 +998,8 @@ class SchedulerCore:
             return HostPoolExhausted
         return DeadlineUnmeetable
 
-    def shed_request(self, r: Request, reason: str, now: float) -> None:
+    def shed_request(self, r: Request, reason: str,
+                     now: Seconds) -> None:
         """Reject a WAITING request with a typed reason: it leaves the
         queue terminally (Phase.SHED), keeps nothing allocated, and is
         reported per deadline class by `SimMetrics.class_report()`."""
@@ -974,7 +1012,7 @@ class SchedulerCore:
         r.finish_time = now
         self.shed.append(r)
 
-    def _maybe_shed(self, r: Request, now: float) -> bool:
+    def _maybe_shed(self, r: Request, now: Seconds) -> bool:
         """Shed-by-deadline-class at the admission gate: with
         `shed_overload` on, a fresh request that failed a gate AND has
         aged `shed_grace_frac` of its own TTFT SLO past its effective
@@ -989,7 +1027,7 @@ class SchedulerCore:
         self.shed_request(r, self._shed_class(r).__name__, now)
         return True
 
-    def shed_blocked(self, now: float) -> bool:
+    def shed_blocked(self, now: Seconds) -> bool:
         """Last-resort degradation for a WEDGED scheduler: nothing is in
         flight, nothing can be admitted, and the queue would otherwise
         raise `wedged_error`. With `shed_overload` on, shed the blocking

@@ -54,6 +54,7 @@ from repro.core import (
     PoolExhausted, SLOScheduler,
 )
 from repro.core.predictor import LengthPredictor, OraclePredictor
+from repro.core.units import Blocks, Bytes, Seconds
 from repro.serving.costmodel import CostModel, HWProfile
 from repro.serving.request import Phase, Request
 from repro.serving.scheduler import CoreDelegateMixin, SchedulerCore, \
@@ -281,8 +282,8 @@ class DeviceMemoryError(ValueError):
     """Params + activation reservation exceed the device memory budget."""
 
 
-def derive_device_blocks(cfg: ModelConfig, hw: HWProfile, sim: ServeConfig
-                         ) -> int:
+def derive_device_blocks(cfg: ModelConfig, hw: HWProfile,
+                         sim: ServeConfig) -> Blocks:
     """vLLM-style profiling: KV pool = gpu_mem_util * (mem - params -
     activations(max_model_len)); longer max context -> more activation
     reservation -> fewer KV blocks (paper §2.2). Raises DeviceMemoryError
@@ -348,11 +349,11 @@ class ServingSimulator(CoreDelegateMixin):
     # --------------------------------------------- shared-core delegation
     # queues/host_layers/clock()/advance_to() come from CoreDelegateMixin
     @property
-    def t(self) -> float:
+    def t(self) -> Seconds:
         return self.core.now
 
     @t.setter
-    def t(self, v: float) -> None:
+    def t(self, v: Seconds) -> None:
         self.core.now = v
 
     @property
@@ -360,7 +361,7 @@ class ServingSimulator(CoreDelegateMixin):
         return self.core.plans
 
     @property
-    def reload_bytes_migrated(self) -> int:
+    def reload_bytes_migrated(self) -> Bytes:
         return self.core.reload_bytes_migrated
 
     def finish(self) -> None:
@@ -370,7 +371,7 @@ class ServingSimulator(CoreDelegateMixin):
         return self.core.cancel(r, self.t)
 
     # ------------------------------------------------------------ helpers
-    def _prefill_cost(self, r: Request) -> float:
+    def _prefill_cost(self, r: Request) -> Seconds:
         """Eq.3 prefill compute for the UNCACHED part of r's prompt (the
         cached prefix, r.prefill_done at admission, skips compute)."""
         c = r.prefill_done
@@ -382,8 +383,8 @@ class ServingSimulator(CoreDelegateMixin):
         if self.sim.prefix_cache and r.prompt:
             self.bm.register_prefix(r.rid, r.prompt)
 
-    def _promote(self, now: float, dt: float, decoding: List[Request]
-                 ) -> None:
+    def _promote(self, now: Seconds, dt: Seconds,
+                 decoding: List[Request]) -> None:
         """Swap host-resident layers back to device while blocks and link
         bandwidth allow (paper: 'maximizing the number of layers retained
         on the GPU'). Budget: what the link can move within one step.
@@ -443,8 +444,8 @@ class ServingSimulator(CoreDelegateMixin):
         self.waiting.appendleft(r)
         self.preemptions += 1
 
-    def _select_decode_batch(self, now: float, decoding: List[Request]
-                             ) -> tuple:
+    def _select_decode_batch(self, now: Seconds,
+                             decoding: List[Request]) -> tuple:
         """Pick this iteration's running batch. Device-resident requests
         always run; host-resident ones join only while their layer-wise
         h2d streaming stays hideable under the step's HBM-bound compute
@@ -478,8 +479,8 @@ class ServingSimulator(CoreDelegateMixin):
             sel = [r]
         return sel, used
 
-    def _evict_for_space(self, now: float, decoding: List[Request],
-                         min_free_blocks: int = 64):
+    def _evict_for_space(self, now: Seconds, decoding: List[Request],
+                         min_free_blocks: Blocks = 64):
         """Emergency eviction: move device layers of the most recently
         admitted requests to host until some headroom exists."""
         for r in sorted(decoding, key=lambda q: -q.prefill_start):
@@ -502,7 +503,8 @@ class ServingSimulator(CoreDelegateMixin):
                 self.off.proactive_offload(now, ctx, moved)
                 self.host_layers[r.rid] = len(self.bm.layers_on(r.rid, HOST))
 
-    def _proactive_evict(self, now: float, decoding: List[Request]):
+    def _proactive_evict(self, now: Seconds,
+                         decoding: List[Request]):
         """Eq.5: if the forecast dips below threshold, offload retained
         layers of the most recent requests (x/2 first, then all)."""
         thresh = int(self.sim.forecast_threshold_frac
@@ -532,7 +534,7 @@ class ServingSimulator(CoreDelegateMixin):
                 break
 
     # ------------------------------------------------------ shared pieces
-    def _decode_bookkeep(self, t: float, sel: List[Request]) -> None:
+    def _decode_bookkeep(self, t: Seconds, sel: List[Request]) -> None:
         """Post-step accounting for one decode batch: grow allocations,
         evict-or-preempt on exhaustion, retire finished requests."""
         finished: List[Request] = []

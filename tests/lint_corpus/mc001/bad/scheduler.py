@@ -1,0 +1,81 @@
+"""MC001 corpus (known-bad): a scheduler whose shed path pools the
+paused queue into an overload-shed sweep (so a PAUSED request takes the
+QUEUED-only SHED edge), and a force-finish shortcut that jumps QUEUED
+straight to FINISHED. Never executed — parsed only; the model checker
+must reach both bugs and pin their phase-write lines with traces."""
+
+
+PHASE_QUEUES = {
+    Phase.QUEUED: "waiting",
+    Phase.PREFILL: "prefilling",
+    Phase.DECODE: "decoding",
+    Phase.PAUSED: "paused",
+    Phase.FINISHED: "done",
+    Phase.CANCELLED: "cancelled",
+    Phase.SHED: "shed",
+}
+LIVE_QUEUES = ("waiting", "prefilling", "decoding", "paused")
+
+
+class SchedulerCore:
+    def admit_waiting(self, now):
+        r = next((q for q in self.waiting if q is not None), None)
+        if r is None:
+            return
+        self.waiting.remove(r)
+        r.phase = Phase.PREFILL
+        self.prefilling.append(r)
+
+    def preempt_request(self, r, now):
+        if r in self.waiting or r in self.paused:
+            return False
+        if r in self.prefilling:
+            self.prefilling.remove(r)
+        elif r in self.decoding:
+            self.decoding.remove(r)
+        else:
+            return False
+        r.phase = Phase.PAUSED
+        self.paused.append(r)
+        return True
+
+    def cancel(self, r, now):
+        if r in self.waiting:
+            self.waiting.remove(r)
+        elif r in self.prefilling:
+            self.prefilling.remove(r)
+        elif r in self.decoding:
+            self.decoding.remove(r)
+        elif r in self.paused:
+            self.paused.remove(r)
+        else:
+            return False
+        r.phase = Phase.CANCELLED
+        self.cancelled.append(r)
+        return True
+
+    def shed_request(self, r, reason, now):
+        if r in self.waiting:
+            self.waiting.remove(r)
+        r.phase = Phase.SHED
+        self.shed.append(r)
+
+    def shed_blocked(self, now):
+        # BAD: the shed sweep pools paused work in with the waiting
+        # queue, so a PAUSED request reaches shed_request (whose
+        # contract is waiting-only) and takes an illegal SHED edge
+        # while still sitting in the paused queue.
+        pool = list(self.waiting) + list(self.paused)
+        r = next((q for q in pool if q is not None), None)
+        if r is None:
+            return False
+        self.shed_request(r, "overload", now)
+        return True
+
+    def force_finish(self, r, now):
+        if r not in self.waiting:
+            return False
+        self.waiting.remove(r)
+        r.phase = Phase.FINISHED  # BAD: QUEUED -> FINISHED skips work
+        self.done.append(r)
+        return True

@@ -1,0 +1,76 @@
+"""MC001 corpus (known-good twin): the shed sweep only ever binds
+waiting requests and finishing goes through the decode queue, so every
+reachable transition stays inside the declared edge set."""
+
+
+PHASE_QUEUES = {
+    Phase.QUEUED: "waiting",
+    Phase.PREFILL: "prefilling",
+    Phase.DECODE: "decoding",
+    Phase.PAUSED: "paused",
+    Phase.FINISHED: "done",
+    Phase.CANCELLED: "cancelled",
+    Phase.SHED: "shed",
+}
+LIVE_QUEUES = ("waiting", "prefilling", "decoding", "paused")
+
+
+class SchedulerCore:
+    def admit_waiting(self, now):
+        r = next((q for q in self.waiting if q is not None), None)
+        if r is None:
+            return
+        self.waiting.remove(r)
+        r.phase = Phase.PREFILL
+        self.prefilling.append(r)
+
+    def preempt_request(self, r, now):
+        if r in self.waiting or r in self.paused:
+            return False
+        if r in self.prefilling:
+            self.prefilling.remove(r)
+        elif r in self.decoding:
+            self.decoding.remove(r)
+        else:
+            return False
+        r.phase = Phase.PAUSED
+        self.paused.append(r)
+        return True
+
+    def cancel(self, r, now):
+        if r in self.waiting:
+            self.waiting.remove(r)
+        elif r in self.prefilling:
+            self.prefilling.remove(r)
+        elif r in self.decoding:
+            self.decoding.remove(r)
+        elif r in self.paused:
+            self.paused.remove(r)
+        else:
+            return False
+        r.phase = Phase.CANCELLED
+        self.cancelled.append(r)
+        return True
+
+    def shed_request(self, r, reason, now):
+        if r in self.waiting:
+            self.waiting.remove(r)
+        r.phase = Phase.SHED
+        self.shed.append(r)
+
+    def shed_blocked(self, now):
+        # the sweep draws from the waiting queue only: every request it
+        # binds is QUEUED, so the SHED edge it takes is legal
+        r = next((q for q in self.waiting if q is not None), None)
+        if r is None:
+            return False
+        self.shed_request(r, "overload", now)
+        return True
+
+    def force_finish(self, r, now):
+        if r in self.decoding:
+            self.decoding.remove(r)
+            r.phase = Phase.FINISHED
+            self.done.append(r)
+            return True
+        return False

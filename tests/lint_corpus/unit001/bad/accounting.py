@@ -1,0 +1,22 @@
+"""UNIT001 corpus (known-bad): KV accounting that mixes block counts
+and token counts without converting. Never executed — parsed only."""
+from typing import TypeAlias
+
+Tokens: TypeAlias = int
+Blocks: TypeAlias = int
+
+
+def tokens_to_blocks(n_tokens: Tokens, block_size: int) -> Blocks:
+    return -(-n_tokens // block_size) if n_tokens > 0 else 0
+
+
+def can_admit(free_blocks: Blocks, prompt_len: Tokens) -> bool:
+    return free_blocks >= prompt_len  # BAD: blocks compared to tokens
+
+
+def remaining_budget(budget: Tokens, held: Blocks) -> Tokens:
+    return budget - held  # BAD: tokens minus blocks
+
+
+def reserve(held: Blocks, block_size: int) -> Blocks:
+    return tokens_to_blocks(held, block_size)  # BAD: blocks as tokens

@@ -1,0 +1,23 @@
+"""UNIT001 corpus (known-good twin): the same accounting routed
+through the sanctioned converter, so every dimension lines up."""
+from typing import TypeAlias
+
+Tokens: TypeAlias = int
+Blocks: TypeAlias = int
+
+
+def tokens_to_blocks(n_tokens: Tokens, block_size: int) -> Blocks:
+    return -(-n_tokens // block_size) if n_tokens > 0 else 0
+
+
+def can_admit(free_blocks: Blocks, prompt_len: Tokens,
+              block_size: int) -> bool:
+    return free_blocks >= tokens_to_blocks(prompt_len, block_size)
+
+
+def remaining_budget(budget: Tokens, used: Tokens) -> Tokens:
+    return budget - used
+
+
+def reserve(prompt_len: Tokens, block_size: int) -> Blocks:
+    return tokens_to_blocks(prompt_len, block_size)

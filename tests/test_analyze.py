@@ -40,6 +40,11 @@ CASES = [
      CORPUS / "phase001" / "good", 2, (14, 24)),
     ("FAULT001", CORPUS / "fault001" / "bad.py",
      CORPUS / "fault001" / "good.py", 3, (13, 17, 21)),
+    ("UNIT001", CORPUS / "unit001" / "bad" / "accounting.py",
+     CORPUS / "unit001" / "good" / "accounting.py", 3, (14, 18, 22)),
+    ("MC001", CORPUS / "mc001" / "bad" / "scheduler.py",
+     CORPUS / "mc001" / "good" / "scheduler.py", 6,
+     (60, 61, 61, 61, 61, 79)),
 ]
 
 
@@ -64,18 +69,61 @@ def test_rule_trips_on_bad_quiet_on_good(rule_id, bad, good, count,
 
 
 def test_head_is_clean():
-    """The acceptance gate: repro-lint over the real tree exits 0."""
-    rc, out = lint(REPO / "src")
+    """The acceptance gate: repro-lint over the real tree — source,
+    benchmarks, tooling and tests — exits 0 (corpus twins excluded by
+    the directory walk)."""
+    rc, out = lint(REPO / "src", REPO / "benchmarks",
+                   REPO / "tools", REPO / "tests")
     assert rc == 0, out
 
 
-def test_list_rules_names_all_six():
+def test_list_rules_names_all_eight():
     proc = subprocess.run(
         [sys.executable, str(RUN), "--list-rules"],
         capture_output=True, text=True, cwd=REPO)
     listed = {ln.split()[0] for ln in proc.stdout.splitlines()}
-    assert {"PL001", "JIT001", "SEAM001", "CFG001",
-            "PHASE001", "FAULT001"} <= listed
+    assert {"PL001", "JIT001", "SEAM001", "CFG001", "PHASE001",
+            "FAULT001", "UNIT001", "MC001"} <= listed
+
+
+def test_model_checker_is_deterministic():
+    """Two uncached runs over the known-bad twin produce byte-identical
+    reports: BFS order, dedup and traces are all deterministic."""
+    bad = CORPUS / "mc001" / "bad" / "scheduler.py"
+    runs = [lint("--no-cache", bad) for _ in range(2)]
+    assert runs[0] == runs[1]
+    assert runs[0][0] == 1
+
+
+def test_github_format_and_json():
+    bad = CORPUS / "unit001" / "bad" / "accounting.py"
+    rc, out = lint("--format=github", bad)
+    assert rc == 1
+    first = out.splitlines()[0]
+    assert first.startswith("::error file=") and ",line=14," in first \
+        and "title=UNIT001" in first
+    rc, out = lint("--json", bad)
+    assert rc == 1
+    import json
+    hits = json.loads(out)
+    assert [h["line"] for h in hits] == [14, 18, 22]
+    assert all(h["rule"] == "UNIT001" for h in hits)
+
+
+def test_result_cache_warm_run_identical(tmp_path):
+    """A warm (fully cached) run reports exactly what the cold run did;
+    touching the file invalidates its entry."""
+    import shutil
+    f = tmp_path / "kernels" / "k.py"
+    f.parent.mkdir()
+    shutil.copy(CORPUS / "pl001" / "kernels" / "bad_kernel.py", f)
+    cold = lint(f)
+    warm = lint(f)
+    assert cold == warm and cold[0] == 1
+    # edit the file: the stale entry must not be served
+    f.write_text("x = 1\n")
+    rc, out = lint(f)
+    assert rc == 0 and out == ""
 
 
 # ------------------------------------------------- suppression machinery --

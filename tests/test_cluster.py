@@ -91,6 +91,51 @@ def test_load_stats_counts_demand():
     assert sim.core.load_stats().kv_demand == 0
 
 
+def test_load_stats_token_demand():
+    """`token_demand` tracks outstanding compute: the queued prefill
+    suffix before admission, prompt+generated context once in flight,
+    zero after drain."""
+    sim = _sim(num_device_blocks=LLAMA2_7B.n_layers * 64)
+    sess = ServingSession(sim)
+    assert sim.core.load_stats().token_demand == 0
+    sess.submit(Request(rid="a", prompt_len=64, output_len=4))
+    ls1 = sim.core.load_stats()
+    assert ls1.queued_tokens == 64 and ls1.active_tokens == 0
+    sess.step()
+    ls2 = sim.core.load_stats()
+    assert ls2.queued_tokens == 0 and ls2.active_tokens >= 64
+    sess.drain()
+    assert sim.core.load_stats().token_demand == 0
+
+
+def test_route_by_tokens_rekeys_least_loaded():
+    """The `route_by_tokens` knob re-keys least_loaded dispatch on
+    token demand. Replica 0 carries the bigger BLOCK demand, replica 1
+    the bigger TOKEN demand — the two keys disagree, and the knob picks
+    which one wins. Default (off) is the paper's block-demand JSQ."""
+    from repro.serving.router import LeastLoadedRouting, _least
+    from repro.serving.scheduler import LoadStats
+
+    blocky = LoadStats(n_waiting=1, n_inflight=0, queued_blocks=100,
+                       active_blocks=0, free_blocks=10, total_blocks=10,
+                       queued_tokens=10, active_tokens=0)
+    tokeny = LoadStats(n_waiting=1, n_inflight=0, queued_blocks=10,
+                       active_blocks=0, free_blocks=10, total_blocks=10,
+                       queued_tokens=800, active_tokens=0)
+    assert _least([blocky, tokeny]) == 1           # blocks: replica 0 worse
+    assert _least([blocky, tokeny], by_tokens=True) == 0
+
+    # end-to-end: the policy reads the knob off the cores it routes over
+    off, on = _sim(), _sim(route_by_tokens=True)
+    assert off.core.sc.route_by_tokens is False    # default stays off
+    pol = make_routing_policy("least_loaded")
+    assert isinstance(pol, LeastLoadedRouting)
+    r = Request(rid="probe", prompt_len=32, output_len=4)
+    # two idle replicas: both keys tie, lowest index wins either way
+    assert pol.choose(r, [off.core, off.core], 0.0) == 0
+    assert pol.choose(r, [on.core, on.core], 0.0) == 0
+
+
 def test_admit_eta_orders_by_backlog():
     """A replica with queued prefill work reports a later admission ETA
     than an empty one — the slo_aware router's ranking key."""

@@ -57,7 +57,7 @@ def test_config_drift_guard():
         max_tokens_per_request=2048, proactive=True,
         collective_reserve_frac=0.1, forecast_horizon=16,
         forecast_threshold_frac=0.02, gpu_mem_util=0.8,
-        max_model_len=8192)
+        max_model_len=8192, route_by_tokens=True)
     # every declared field is exercised above — extend this dict when
     # ServeConfig grows
     assert set(every_field) == \

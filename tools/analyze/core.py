@@ -22,7 +22,10 @@ from __future__ import annotations
 
 import ast
 import dataclasses
+import io
+import json
 import re
+import tokenize
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -66,6 +69,22 @@ class FileContext:
         self.source = source
         self.lines = source.splitlines()
         self.tree = ast.parse(source, filename=str(path))
+        # real comments only, from the token stream: suppression-shaped
+        # text inside STRING LITERALS (docstrings quoting the grammar,
+        # lint tests building fixtures) must not parse as suppressions
+        self.comments: Dict[int, str] = {}
+        self.comment_only_lines: set = set()
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(source).readline)
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                row, col = tok.start
+                self.comments[row] = tok.string
+                if not tok.line[:col].strip():
+                    self.comment_only_lines.add(row)
+        except tokenize.TokenError:
+            pass
 
 
 class Rule:
@@ -92,19 +111,19 @@ class Rule:
         return Violation(self.rule_id, ctx.path, line, message)
 
 
-def _covered_line(lines: List[str], idx: int) -> int:
-    """Line (1-based) covered by a suppression comment at ``idx``.
+def _covered_line(ctx: FileContext, row: int) -> int:
+    """Line (1-based) covered by a suppression comment on ``row``.
 
     For an own-line comment inside a contiguous comment block, that is
     the first non-comment line below the block; for a trailing comment,
     the line itself.
     """
-    if not COMMENT_RE.match(lines[idx]):
-        return idx + 1  # trailing comment on a code line
-    j = idx
-    while j < len(lines) and COMMENT_RE.match(lines[j]):
+    if row not in ctx.comment_only_lines:
+        return row  # trailing comment on a code line
+    j = row
+    while j in ctx.comment_only_lines:
         j += 1
-    return j + 1
+    return j
 
 
 def parse_suppressions(ctx: FileContext) -> Tuple[
@@ -113,27 +132,28 @@ def parse_suppressions(ctx: FileContext) -> Tuple[
     """Extract suppressions; malformed ones come back as violations."""
     sups: List[Suppression] = []
     errors: List[Violation] = []
-    for i, line in enumerate(ctx.lines):
-        m = SUPPRESS_RE.search(line)
+    for row in sorted(ctx.comments):
+        comment = ctx.comments[row]
+        m = SUPPRESS_RE.search(comment)
         if m is None:
-            if "repro-lint:" in line and COMMENT_RE.search(line):
+            if "repro-lint:" in comment:
                 errors.append(Violation(
-                    "LINT000", ctx.path, i + 1,
+                    "LINT000", ctx.path, row,
                     "malformed repro-lint comment (expected "
                     "'# repro-lint: disable=RULE -- reason')"))
             continue
         reason = m.group("reason")
         if not reason:
             errors.append(Violation(
-                "LINT000", ctx.path, i + 1,
+                "LINT000", ctx.path, row,
                 "suppression without a reason: append "
                 "' -- <why this is safe>'"))
             continue
         file_level = m.group("kind") == "file-disable"
-        covers = 0 if file_level else _covered_line(ctx.lines, i)
+        covers = 0 if file_level else _covered_line(ctx, row)
         for rid in re.split(r"\s*,\s*", m.group("ids")):
             sups.append(Suppression(
-                rid, ctx.path, i + 1, file_level, reason, covers))
+                rid, ctx.path, row, file_level, reason, covers))
     return sups, errors
 
 
@@ -166,18 +186,83 @@ def apply_suppressions(
 
 
 def collect_files(roots: Iterable[str]) -> List[Path]:
+    """Expand roots to .py files. Directory walks skip any
+    ``lint_corpus`` directory found BELOW the root (the known-bad twins
+    MUST trip rules — linting them with the tree would fail every
+    full-repo run); naming a corpus file or directory directly still
+    lints it, which is how the corpus tests drive the rules."""
     files: List[Path] = []
     for root in roots:
         p = Path(root)
         if p.is_file():
             files.append(p)
         else:
-            files.extend(sorted(p.rglob("*.py")))
+            files.extend(sorted(
+                f for f in p.rglob("*.py")
+                if "lint_corpus" not in f.relative_to(p).parts))
     return files
 
 
+class ResultCache:
+    """Per-file result cache for PER-FILE rules, keyed on the file's
+    (mtime_ns, size) and fingerprinted on the analyzer sources
+    themselves — editing any rule invalidates everything. Project-wide
+    rules (whose result depends on the whole file set) always rerun;
+    they are cheap next to the model checker."""
+
+    def __init__(self, path: Path) -> None:
+        self.path = path
+        self.fp = self._analyzer_fingerprint()
+        self.files: Dict[str, dict] = {}
+        self.dirty = False
+        try:
+            data = json.loads(path.read_text())
+            if data.get("analyzer") == self.fp:
+                self.files = data.get("files", {})
+        except (OSError, ValueError):
+            pass
+
+    @staticmethod
+    def _analyzer_fingerprint() -> str:
+        here = Path(__file__).resolve().parent
+        parts = []
+        for f in sorted(here.glob("*.py")):
+            st = f.stat()
+            parts.append(f"{f.name}:{st.st_mtime_ns}:{st.st_size}")
+        return "|".join(parts)
+
+    @staticmethod
+    def _key(path: Path) -> List[int]:
+        st = path.stat()
+        return [st.st_mtime_ns, st.st_size]
+
+    def get(self, path: Path) -> Optional[List[Violation]]:
+        entry = self.files.get(str(path))
+        if entry is None or entry["key"] != self._key(path):
+            return None
+        return [Violation(r, path, ln, msg)
+                for r, ln, msg in entry["violations"]]
+
+    def put(self, path: Path, violations: List[Violation]) -> None:
+        self.files[str(path)] = {
+            "key": self._key(path),
+            "violations": [
+                [v.rule_id, v.line, v.message] for v in violations]}
+        self.dirty = True
+
+    def save(self) -> None:
+        if not self.dirty:
+            return
+        try:
+            self.path.write_text(json.dumps(
+                {"analyzer": self.fp, "files": self.files}))
+        except OSError:
+            pass  # read-only checkout: run uncached
+
+
 def run_rules(
-    rules: Sequence[Rule], roots: Iterable[str]
+    rules: Sequence[Rule], roots: Iterable[str],
+    cache: Optional[ResultCache] = None,
 ) -> List[Violation]:
     """Parse every file once, run all rules, resolve suppressions."""
     ctxs: List[FileContext] = []
@@ -196,14 +281,27 @@ def run_rules(
         out.extend(errors)
 
     raw: List[Violation] = []
+    file_rules = [r for r in rules if not r.project_wide]
     for rule in rules:
         if rule.project_wide:
             raw.extend(rule.check_project(
                 [c for c in ctxs if rule.interested(c.path)]))
-        else:
-            for ctx in ctxs:
-                if rule.interested(ctx.path):
-                    raw.extend(rule.check_file(ctx))
+    for ctx in ctxs:
+        if not any(r.interested(ctx.path) for r in file_rules):
+            continue
+        cached = cache.get(ctx.path) if cache is not None else None
+        if cached is not None:
+            raw.extend(cached)
+            continue
+        mine: List[Violation] = []
+        for rule in file_rules:
+            if rule.interested(ctx.path):
+                mine.extend(rule.check_file(ctx))
+        if cache is not None:
+            cache.put(ctx.path, mine)
+        raw.extend(mine)
+    if cache is not None:
+        cache.save()
 
     kept, unused = apply_suppressions(raw, sups_by_file)
     out.extend(kept)

@@ -5,22 +5,35 @@
 
 Exit 0 when clean, 1 when any violation (including malformed or unused
 suppressions) survives.  `--list-rules` prints the registered rule ids.
+
+Output formats:  --format=text (default) renders `path:line: RULE msg`;
+--format=github emits workflow commands GitHub renders as inline PR
+annotations; --json prints a machine-readable array.
+
+Per-file rule results are cached in tools/analyze/.cache.json keyed on
+each file's mtime+size (and invalidated whenever any analyzer source
+changes), so warm full-repo runs skip the expensive model-checker pass.
+`--no-cache` forces everything to rerun.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+from pathlib import Path
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 try:
-    from tools.analyze.core import run_rules
+    from tools.analyze.core import ResultCache, run_rules
     from tools.analyze.rules import ALL_RULES
 except ImportError:
-    from core import run_rules
+    from core import ResultCache, run_rules
     from rules import ALL_RULES
+
+CACHE_PATH = Path(__file__).resolve().parent / ".cache.json"
 
 
 def main(argv=None) -> int:
@@ -29,20 +42,39 @@ def main(argv=None) -> int:
                     help="files or directories to lint (default: src)")
     ap.add_argument("--list-rules", action="store_true",
                     help="print registered rule ids and exit")
+    ap.add_argument("--format", choices=("text", "github"),
+                    default="text", dest="fmt",
+                    help="text (default) or GitHub workflow commands")
+    ap.add_argument("--json", action="store_true",
+                    help="print violations as a JSON array (overrides "
+                         "--format)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the per-file result cache")
     args = ap.parse_args(argv)
     if args.list_rules:
         for rule in ALL_RULES:
             print(f"{rule.rule_id}  {rule.description}")
         return 0
-    violations = run_rules(ALL_RULES, args.paths or ["src"])
-    for v in violations:
-        print(v.render())
+    cache = None if args.no_cache else ResultCache(CACHE_PATH)
+    violations = run_rules(ALL_RULES, args.paths or ["src"], cache)
+    if args.json:
+        print(json.dumps([
+            {"rule": v.rule_id, "path": str(v.path), "line": v.line,
+             "message": v.message} for v in violations], indent=2))
+    else:
+        for v in violations:
+            if args.fmt == "github":
+                print(f"::error file={v.path},line={v.line},"
+                      f"title={v.rule_id}::{v.message}")
+            else:
+                print(v.render())
     if violations:
         print(f"repro-lint: {len(violations)} violation(s)",
               file=sys.stderr)
         return 1
-    print(f"repro-lint: clean ({len(ALL_RULES)} rules)",
-          file=sys.stderr)
+    if not args.json:
+        print(f"repro-lint: clean ({len(ALL_RULES)} rules)",
+              file=sys.stderr)
     return 0
 
 

@@ -1,0 +1,458 @@
+"""UNIT001 engine: unit-dimension taint analysis.
+
+Propagates the `src/repro/core/units.py` dimension vocabulary
+(`Blocks`, `Tokens`, `Bytes`, `LayerIdx`, `Seconds`) through the
+project by AST dataflow and flags cross-dimension mixing that does not
+go through a sanctioned converter. Every accounting bug fixed in PRs
+2, 6 and 8 was exactly this shape: a token count compared against a
+block count, bytes priced as tokens.
+
+How it works, in two interprocedural passes over ALL linted files:
+
+  pass 1  harvest dimension facts from annotations —
+          * a signature table keyed by bare function/method name: the
+            dimension (or None) of each positional parameter and the
+            return. Conflicting duplicate names are merged field-wise:
+            disagreeing facts degrade to "unknown" rather than guess;
+          * an attribute table keyed by attribute name, from dataclass
+            field / `self.x:` AnnAssigns and @property returns
+            (e.g. `prompt_len` -> Tokens, `num_blocks` -> Blocks).
+
+  pass 2  a flow-insensitive-per-branch, statement-ordered abstract
+          interpretation of every function body. Names pick up
+          dimensions from parameter annotations and assignments;
+          expressions evaluate to a dimension or None (unknown).
+          Violations fire ONLY when two KNOWN dimensions disagree —
+          unknown never flags, so the analysis is quiet on undimmed
+          code and grows teeth exactly as annotations spread.
+
+Dimension algebra (deliberately conservative):
+
+  a + b, a - b     both known and different -> violation; result is
+                   the known side (addition preserves dimension)
+  a * b, a / b     dimension-ERASING (a product of tokens and
+                   bytes/token is bytes — only the annotated
+                   converters know that), result unknown
+  a // b, %        erasing as well (block arithmetic divides counts)
+  a < b, a == b    known and different -> violation (ordering across
+                   dimensions is the classic accounting bug)
+  min/max(a, b)    two different known dims -> violation; else the
+                   common known dimension survives
+  sum(gen)         the element's dimension
+  int()/float()/abs()/round()  pass the operand's dimension through
+  f(a, b)          each KNOWN arg is checked against the parameter's
+                   annotated dimension; the call evaluates to the
+                   annotated return dimension
+
+The sanctioned converters (`tokens_to_blocks`, `blocks_to_tokens`,
+`tokens_to_bytes`, `blocks_to_bytes`, `bytes_to_seconds`, and any
+annotated converting method such as `blocks_for_tokens`) need no
+special-casing: their annotations — Tokens in, Blocks out — make them
+the only paths that legally change a value's dimension.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set
+
+try:
+    from tools.analyze.core import FileContext, Violation
+except ImportError:  # run as a plain script: tools/analyze on sys.path
+    from core import FileContext, Violation
+
+RULE_ID = "UNIT001"
+
+DIMS = frozenset({"Blocks", "Tokens", "Bytes", "LayerIdx", "Seconds"})
+
+# dims that may legally meet in + / - / comparisons with themselves
+# only; everything else must route through a converter
+_PASSTHROUGH_CALLS = frozenset({"int", "float", "abs", "round"})
+
+
+def dim_of_annotation(node: Optional[ast.AST]) -> Optional[str]:
+    """Dimension named by an annotation expression, or None.
+
+    Recognizes a bare `Tokens`, a string literal `"Tokens"`,
+    `Optional[Tokens]`, and `Tokens | None`.
+    """
+    if node is None:
+        return None
+    if isinstance(node, ast.Name):
+        return node.id if node.id in DIMS else None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            return dim_of_annotation(
+                ast.parse(node.value, mode="eval").body)
+        except SyntaxError:
+            return None
+    if isinstance(node, ast.Subscript):
+        base = node.value
+        if isinstance(base, ast.Name) and base.id == "Optional":
+            return dim_of_annotation(node.slice)
+        return None
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+        left = dim_of_annotation(node.left)
+        right = dim_of_annotation(node.right)
+        return left or right
+    return None
+
+
+@dataclasses.dataclass
+class FuncSig:
+    """Dimension view of one function: positional parameter dims (self
+    already dropped for methods), keyword dims, return dim."""
+
+    name: str
+    params: List[Optional[str]]
+    kwdims: Dict[str, Optional[str]]
+    ret: Optional[str]
+    check_params: bool = True  # False once duplicates disagree
+
+    def merge(self, other: "FuncSig") -> None:
+        if self.params != other.params or self.kwdims != other.kwdims:
+            self.check_params = False
+        if self.ret != other.ret:
+            self.ret = None
+
+
+def _sig_of(fn: ast.FunctionDef, is_method: bool) -> Optional[FuncSig]:
+    args = fn.args
+    pos = list(args.posonlyargs) + list(args.args)
+    if is_method and pos and pos[0].arg in ("self", "cls"):
+        pos = pos[1:]
+    params = [dim_of_annotation(a.annotation) for a in pos]
+    kwdims = {a.arg: dim_of_annotation(a.annotation)
+              for a in pos + list(args.kwonlyargs)}
+    ret = dim_of_annotation(fn.returns)
+    if ret is None and not any(params) and not any(kwdims.values()):
+        return None  # dimension-free function: nothing to say
+    return FuncSig(fn.name, params, kwdims, ret)
+
+
+class DimTables:
+    """Pass-1 output: project-wide signature and attribute tables."""
+
+    def __init__(self) -> None:
+        self.sigs: Dict[str, FuncSig] = {}
+        self.attrs: Dict[str, Optional[str]] = {}
+
+    def add_sig(self, sig: FuncSig) -> None:
+        have = self.sigs.get(sig.name)
+        if have is None:
+            self.sigs[sig.name] = sig
+        else:
+            have.merge(sig)
+
+    def add_attr(self, name: str, dim: Optional[str]) -> None:
+        if dim is None:
+            return
+        if name in self.attrs and self.attrs[name] != dim:
+            self.attrs[name] = None  # ambiguous across classes: unknown
+        else:
+            self.attrs[name] = dim
+
+
+def build_tables(ctxs: Sequence[FileContext]) -> DimTables:
+    tables = DimTables()
+    for ctx in ctxs:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, ast.AnnAssign) and isinstance(
+                            item.target, ast.Name):
+                        tables.add_attr(
+                            item.target.id,
+                            dim_of_annotation(item.annotation))
+                    if isinstance(item, ast.FunctionDef):
+                        sig = _sig_of(item, is_method=True)
+                        if sig is not None:
+                            tables.add_sig(sig)
+                        if any(isinstance(d, ast.Name)
+                               and d.id == "property"
+                               for d in item.decorator_list):
+                            tables.add_attr(
+                                item.name,
+                                dim_of_annotation(item.returns))
+            elif isinstance(node, ast.FunctionDef):
+                # module-level / nested defs (converters live here)
+                sig = _sig_of(node, is_method=False)
+                if sig is not None:
+                    tables.add_sig(sig)
+            elif isinstance(node, ast.AnnAssign) and isinstance(
+                    node.target, ast.Attribute):
+                # self.x: Dim = ...
+                tables.add_attr(node.target.attr,
+                                dim_of_annotation(node.annotation))
+    return tables
+
+
+_CMP_OPS = (ast.Lt, ast.LtE, ast.Gt, ast.GtE, ast.Eq, ast.NotEq)
+
+
+class FunctionChecker:
+    """Pass-2 walk of one function body with a name -> dim environment."""
+
+    def __init__(self, ctx: FileContext, tables: DimTables,
+                 fn: ast.FunctionDef) -> None:
+        self.ctx = ctx
+        self.tables = tables
+        self.fn = fn
+        self.env: Dict[str, Optional[str]] = {}
+        self.out: List[Violation] = []
+        self.ret_dim = dim_of_annotation(fn.returns)
+        args = fn.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)):
+            self.env[a.arg] = dim_of_annotation(a.annotation)
+
+    # ------------------------------------------------------------ report
+    def _flag(self, node: ast.AST, message: str) -> None:
+        self.out.append(Violation(
+            RULE_ID, self.ctx.path, node.lineno, message))
+
+    # ------------------------------------------------------- expressions
+    def dim_of(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id)
+        if isinstance(node, ast.Attribute):
+            return self.tables.attrs.get(node.attr)
+        if isinstance(node, ast.Constant):
+            return None
+        if isinstance(node, ast.UnaryOp):
+            return self.dim_of(node.operand)
+        if isinstance(node, ast.BinOp):
+            return self._binop(node)
+        if isinstance(node, ast.Compare):
+            self._compare(node)
+            return None
+        if isinstance(node, ast.Call):
+            return self._call(node)
+        if isinstance(node, ast.IfExp):
+            self.dim_of(node.test)
+            body = self.dim_of(node.body)
+            other = self.dim_of(node.orelse)
+            return body if body == other else (body or other) \
+                if (body is None or other is None) else None
+        if isinstance(node, ast.BoolOp):
+            for v in node.values:
+                self.dim_of(v)
+            return None
+        if isinstance(node, (ast.GeneratorExp, ast.ListComp,
+                             ast.SetComp)):
+            return self._comprehension(node)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set, ast.Dict,
+                             ast.Subscript, ast.Starred, ast.Lambda,
+                             ast.JoinedStr, ast.FormattedValue,
+                             ast.NamedExpr, ast.Await)):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.expr):
+                    self.dim_of(child)
+            return None
+        return None
+
+    def _binop(self, node: ast.BinOp) -> Optional[str]:
+        left = self.dim_of(node.left)
+        right = self.dim_of(node.right)
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            if left and right and left != right:
+                op = "+" if isinstance(node.op, ast.Add) else "-"
+                self._flag(node, self._mix_msg(left, op, right))
+                return None
+            return left or right
+        # *, /, //, %: dimension-erasing (converters own those facts)
+        return None
+
+    def _compare(self, node: ast.Compare) -> None:
+        prev = self.dim_of(node.left)
+        prev_node: ast.AST = node.left
+        for op, comp in zip(node.ops, node.comparators):
+            cur = self.dim_of(comp)
+            if isinstance(op, _CMP_OPS) and prev and cur \
+                    and prev != cur:
+                self._flag(prev_node, self._mix_msg(
+                    prev, _cmp_symbol(op), cur))
+            prev, prev_node = cur, comp
+
+    def _comprehension(self, node: ast.AST) -> Optional[str]:
+        saved = dict(self.env)
+        for gen in node.generators:  # type: ignore[attr-defined]
+            self.dim_of(gen.iter)
+            for name in _target_names(gen.target):
+                self.env[name] = None
+            for cond in gen.ifs:
+                self.dim_of(cond)
+        if isinstance(node, ast.DictComp):
+            self.dim_of(node.key)
+            dim = self.dim_of(node.value)
+        else:
+            dim = self.dim_of(node.elt)  # type: ignore[attr-defined]
+        self.env = saved
+        return dim
+
+    def _call(self, node: ast.Call) -> Optional[str]:
+        name = None
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            name = node.func.attr
+        arg_dims = [self.dim_of(a) for a in node.args]
+        kw_dims = {k.arg: self.dim_of(k.value)
+                   for k in node.keywords if k.arg is not None}
+        for k in node.keywords:
+            if k.arg is None:
+                self.dim_of(k.value)
+
+        if name in ("min", "max"):
+            known = [d for d in arg_dims if d]
+            if len(set(known)) > 1:
+                self._flag(node, self._mix_msg(
+                    known[0], f"{name}()", known[1]))
+                return None
+            return known[0] if known else None
+        if name == "sum" and node.args:
+            return arg_dims[0]
+        if name in _PASSTHROUGH_CALLS and node.args:
+            return arg_dims[0]
+
+        sig = self.tables.sigs.get(name) if name else None
+        if sig is None:
+            return None
+        if sig.check_params:
+            for i, (arg, dim) in enumerate(zip(node.args, arg_dims)):
+                if isinstance(arg, ast.Starred) or i >= len(sig.params):
+                    break
+                want = sig.params[i]
+                if dim and want and dim != want:
+                    self._flag(arg, (
+                        f"{dim} value passed to parameter "
+                        f"{i + 1} of {sig.name}() annotated {want} "
+                        f"(route through a units.py converter)"))
+            for kw, dim in kw_dims.items():
+                want = sig.kwdims.get(kw)
+                if dim and want and dim != want:
+                    self._flag(node, (
+                        f"{dim} value passed to {sig.name}"
+                        f"(...{kw}=) annotated {want} "
+                        f"(route through a units.py converter)"))
+        return sig.ret
+
+    @staticmethod
+    def _mix_msg(left: str, op: str, right: str) -> str:
+        return (f"cross-dimension {left} {op} {right}: convert "
+                f"explicitly (units.py sanctioned converters are the "
+                f"only blessed casts)")
+
+    # -------------------------------------------------------- statements
+    def run(self) -> List[Violation]:
+        self._block(self.fn.body)
+        return self.out
+
+    def _block(self, stmts: Sequence[ast.stmt]) -> None:
+        for st in stmts:
+            self._stmt(st)
+
+    def _stmt(self, st: ast.stmt) -> None:
+        if isinstance(st, ast.Assign):
+            dim = self.dim_of(st.value)
+            for tgt in st.targets:
+                self._assign_target(tgt, dim, st)
+        elif isinstance(st, ast.AnnAssign):
+            ann = dim_of_annotation(st.annotation)
+            dim = self.dim_of(st.value) if st.value is not None else None
+            if ann and dim and ann != dim:
+                self._flag(st, (
+                    f"{dim} value bound to a name annotated {ann} "
+                    f"(route through a units.py converter)"))
+            if isinstance(st.target, ast.Name):
+                self.env[st.target.id] = ann or dim
+        elif isinstance(st, ast.AugAssign):
+            dim = self.dim_of(st.value)
+            if isinstance(st.op, (ast.Add, ast.Sub)):
+                tdim = None
+                if isinstance(st.target, ast.Name):
+                    tdim = self.env.get(st.target.id)
+                elif isinstance(st.target, ast.Attribute):
+                    tdim = self.tables.attrs.get(st.target.attr)
+                if tdim and dim and tdim != dim:
+                    op = "+=" if isinstance(st.op, ast.Add) else "-="
+                    self._flag(st, self._mix_msg(tdim, op, dim))
+            elif isinstance(st.target, ast.Name):
+                self.env[st.target.id] = None  # *=, //=: erased
+        elif isinstance(st, ast.Return):
+            if st.value is not None:
+                dim = self.dim_of(st.value)
+                if dim and self.ret_dim and dim != self.ret_dim:
+                    self._flag(st, (
+                        f"returns {dim} from a function annotated "
+                        f"-> {self.ret_dim} (route through a units.py "
+                        f"converter)"))
+        elif isinstance(st, (ast.If, ast.While)):
+            self.dim_of(st.test)
+            self._block(st.body)
+            self._block(st.orelse)
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            self.dim_of(st.iter)
+            for name in _target_names(st.target):
+                self.env[name] = None
+            self._block(st.body)
+            self._block(st.orelse)
+        elif isinstance(st, (ast.With, ast.AsyncWith)):
+            for item in st.items:
+                self.dim_of(item.context_expr)
+            self._block(st.body)
+        elif isinstance(st, ast.Try):
+            self._block(st.body)
+            for h in st.handlers:
+                self._block(h.body)
+            self._block(st.orelse)
+            self._block(st.finalbody)
+        elif isinstance(st, ast.Expr):
+            self.dim_of(st.value)
+        elif isinstance(st, (ast.Assert,)):
+            self.dim_of(st.test)
+        # nested defs/classes are visited as functions of their own
+
+    def _assign_target(self, tgt: ast.AST, dim: Optional[str],
+                       st: ast.stmt) -> None:
+        if isinstance(tgt, ast.Name):
+            self.env[tgt.id] = dim
+        elif isinstance(tgt, ast.Attribute):
+            want = self.tables.attrs.get(tgt.attr)
+            if want and dim and want != dim:
+                self._flag(st, (
+                    f"{dim} value assigned to attribute "
+                    f"'{tgt.attr}' annotated {want} "
+                    f"(route through a units.py converter)"))
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                self._assign_target(el, None, st)
+
+
+def _target_names(node: ast.AST) -> List[str]:
+    names: List[str] = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            names.append(n.id)
+    return names
+
+
+def _cmp_symbol(op: ast.cmpop) -> str:
+    return {ast.Lt: "<", ast.LtE: "<=", ast.Gt: ">", ast.GtE: ">=",
+            ast.Eq: "==", ast.NotEq: "!="}[type(op)]
+
+
+def check_units(ctxs: Sequence[FileContext]) -> List[Violation]:
+    """Project-wide UNIT001 pass: build tables from ALL files, then
+    dataflow-check every function body in every file."""
+    tables = build_tables(ctxs)
+    out: List[Violation] = []
+    seen: Set[int] = set()
+    for ctx in ctxs:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.FunctionDef) \
+                    and id(node) not in seen:
+                seen.add(id(node))
+                out.extend(FunctionChecker(ctx, tables, node).run())
+    return out
