@@ -24,7 +24,7 @@ def main() -> None:
                     help="toy scale: CI guard that every script still runs")
     ap.add_argument("--only", default="",
                     help="comma list: fig1,fig4,fig5,fig6,fig8,prefix,"
-                         "fused,kernels,cluster,preemption,faults")
+                         "fused,kernels,cluster,preemption,faults,ttft")
     args = ap.parse_args()
     n = 40 if args.quick else 100
     if args.smoke:
@@ -35,7 +35,8 @@ def main() -> None:
     from benchmarks import (cluster, faults, fig1_motivation,
                             fig4_context_sweep, fig5_parallelism,
                             fig6_fig7_arrival, fig8_slo, fused_step,
-                            kernels_micro, preemption, prefix_cache)
+                            kernels_micro, preemption, prefix_cache,
+                            ttft_attribution)
 
     print("name,us_per_call,derived")
     if not only or "fig1" in only:
@@ -66,6 +67,8 @@ def main() -> None:
         # module, not a FaultPlan hook; the "only" test above is the guard
         faults.main(n_requests=40 if not (args.quick or smoke) else n,
                     smoke=smoke)
+    if not only or "ttft" in only:
+        ttft_attribution.main(n_requests=n, smoke=smoke)
     if not only or "kernels" in only:
         kernels_micro.main(smoke=smoke)
 

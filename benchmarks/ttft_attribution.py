@@ -1,0 +1,155 @@
+"""TTFT attribution sweep: WHERE time-to-first-token goes, by cause.
+
+Figure 1 shows queuing delay dominating TTFT beyond ~1k context under
+the vLLM baseline; this benchmark reproduces that claim from the
+tracer's EXACT per-request decomposition instead of the two coarse
+`queuing`/`prefill` stamps. Each (policy, context) cell runs the fig1
+methodology (Llama2-7B on one L20, 1 req/s, output 512) with
+`ServeConfig.trace` on, pools every finished request's
+`Tracer.ttft_breakdown` — a cause-labelled partition whose intervals
+sum to the measured TTFT bit-for-bit (asserted inline per cell) — and
+reports the share of TTFT each cause group explains:
+
+  queuing   arrival_sync + every gate:* cause + preempted +
+            recompute_requeue (time the request was runnable but not
+            running)
+  prefill   prefill compute, including the layer-offload overlap
+  stall     prefill_stall (chunk queue, no chunk this iteration) +
+            recompute_lost (decode discarded by a recompute preemption)
+
+and, the headline, the BLOCK-CONTENTION slice of queuing — the causes
+that exist only because KV blocks were scarce (`gate:device_blocks`,
+plus the recompute-preemption fallout `recompute_lost` /
+`recompute_requeue` that block scarcity triggers).
+
+What the committed artifact (`BENCH_ttft_attribution.json`) pins:
+under `vllm` the block-contention share of TTFT RISES with context
+(~0 at 512 tokens -> ~99% at 2048+: device blocks for all L layers
+must be free before a prefill starts, so long prompts serialize behind
+each other's KV) while under `layerkv` it stays ~0 at EVERY context —
+the layer-wise gate admits on the retained-layer need and the paper's
+Figure-1 blowup disappears. Past the saturation knee both arms spend
+most of TTFT "queuing" in aggregate (1 req/s exceeds single-L20
+capacity at long context), but the traces show they queue on different
+gates at order-of-magnitude different TTFTs: vllm on the block gate at
+664 s mean (ctx 2048), layerkv on the Alg.1 SLO pacing budget at 37 s.
+That gate shift, not a faster prefill, is the paper's TTFT win — and
+only cause-level attribution can show it.
+
+    PYTHONPATH=src python benchmarks/ttft_attribution.py [--smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, Optional
+
+if __package__ in (None, ""):  # `python benchmarks/ttft_attribution.py`
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+from repro.configs.llama2_7b import CONFIG as LLAMA2_7B
+from repro.serving.costmodel import L20
+from repro.serving.scheduler import ServeConfig
+from repro.serving.sim import ServingSimulator
+from repro.serving.workload import fixed_length
+
+CTX = [128, 512, 1024, 2048, 4096, 8192]
+POLICIES = ("vllm", "layerkv")
+
+_QUEUE = ("arrival_sync", "preempted", "recompute_requeue")
+_STALL = ("prefill_stall", "recompute_lost")
+# TTFT spent ONLY because KV blocks were scarce: the all-layer device
+# gate, plus the recompute-preemption fallout that gate pressure causes
+_BLOCK = ("gate:device_blocks", "recompute_lost", "recompute_requeue")
+
+
+def _group(cause: str) -> str:
+    if cause in _QUEUE or cause.startswith("gate:"):
+        return "queuing"
+    if cause in _STALL:
+        return "stall"
+    return "prefill"
+
+
+def _one(policy: str, ctx: int, n: int) -> Dict[str, object]:
+    sim = ServingSimulator(
+        LLAMA2_7B, L20, ServeConfig.for_sim(policy=policy, trace=True))
+    m = sim.run(fixed_length(n, ctx, 512, rate=1.0, seed=1))
+    bks = sim.core.tracer.breakdowns()
+    by_cause: Dict[str, float] = {}
+    err = 0.0
+    for r in sim.done:
+        b = bks[r.rid]
+        err = max(err, abs(sum(b.values()) - r.ttft))
+        for cause, dt in b.items():
+            by_cause[cause] = by_cause.get(cause, 0.0) + dt
+    # the benchmark's numbers are only meaningful if the partition is
+    # exact — the same contract tests/test_obs.py pins, asserted per cell
+    assert err < 1e-9, f"{policy}/ctx{ctx}: partition off by {err}"
+    total = sum(by_cause.values())
+    shares = {"queuing": 0.0, "prefill": 0.0, "stall": 0.0}
+    for cause, dt in by_cause.items():
+        shares[_group(cause)] += dt / max(total, 1e-12)
+    block = sum(by_cause.get(c, 0.0) for c in _BLOCK) \
+        / max(total, 1e-12)
+    return {
+        "mean_ttft_s": m.mean_ttft,
+        "p99_ttft_s": m.p99_ttft,
+        "queuing_share": shares["queuing"],
+        "block_contention_share": block,
+        "prefill_share": shares["prefill"],
+        "stall_share": shares["stall"],
+        "by_cause_s": {c: by_cause[c] for c in sorted(by_cause)},
+        "max_partition_err_s": err,
+    }
+
+
+def main(n_requests: int = 100, smoke: bool = False,
+         json_out: Optional[str] = None) -> None:
+    ctxs = CTX[:2] if smoke else CTX
+    results: Dict[str, Dict[str, dict]] = {}
+    for policy in POLICIES:
+        results[policy] = {}
+        for ctx in ctxs:
+            t0 = time.perf_counter()
+            row = _one(policy, ctx, n_requests)
+            us = (time.perf_counter() - t0) * 1e6
+            results[policy][str(ctx)] = row
+            emit(f"ttft_attr.{policy}.ctx{ctx}", us,
+                 f"ttft_s={row['mean_ttft_s']:.3f};"
+                 f"queue_share={row['queuing_share']:.3f};"
+                 f"block_share={row['block_contention_share']:.3f};"
+                 f"prefill_share={row['prefill_share']:.3f};"
+                 f"stall_share={row['stall_share']:.3f}")
+
+    if json_out:
+        doc = {
+            "benchmark": "ttft_attribution",
+            "model": LLAMA2_7B.arch_id,
+            "hw": L20.name,
+            "n_requests": n_requests,
+            "rate_req_s": 1.0,
+            "output_len": 512,
+            "context_lengths": ctxs,
+            "cause_groups": {
+                "queuing": list(_QUEUE) + ["gate:*"],
+                "block_contention": list(_BLOCK),
+                "prefill": ["prefill"],
+                "stall": list(_STALL),
+            },
+            "results": results,
+        }
+        with open(json_out, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv[1:]:
+        main(n_requests=8, smoke=True)
+    else:
+        main(json_out="BENCH_ttft_attribution.json")

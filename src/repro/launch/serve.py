@@ -88,6 +88,11 @@ def main():
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--quiet", action="store_true",
                     help="suppress the per-token stream printout")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the full event stream (lifecycle spans, "
+                         "scheduler decision records, TTFT attribution) "
+                         "and write Chrome-trace JSON here at drain — "
+                         "load it at ui.perfetto.dev")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -137,7 +142,8 @@ def main():
         num_device_blocks=args.device_blocks,
         num_host_blocks=args.host_blocks,
         block_size=args.block_size,
-        shed_overload=args.shed_overload)
+        shed_overload=args.shed_overload,
+        trace=bool(args.trace))
     plan = FaultPlan.parse(args.fault_plan, n_replicas=args.replicas) \
         if args.fault_plan else None
     if plan is not None:
@@ -203,6 +209,12 @@ def main():
           f"({sum(x.nbytes for x in off)/2**20:.2f} MiB), "
           f"{len(rel)} reloads "
           f"({sum(x.nbytes for x in rel)/2**20:.2f} MiB)")
+    if args.trace:
+        session.write_trace(args.trace)
+        n_ev = sum(len(e.core.tracer.events) for e in engines) \
+            + len(session.tracer.events)
+        print(f"trace: {n_ev} events -> {args.trace} "
+              "(load at ui.perfetto.dev)")
     if done:
         sample = done[0]
         print(f"sample output ({sample.rid}): {sample.generated[:8]}...")

@@ -75,6 +75,7 @@ from typing import Iterator, List, Optional, Sequence, Union
 
 from repro.core import DEVICE
 from repro.core.block_manager import block_hashes
+from repro.obs.registry import MetricsRegistry
 from repro.serving.faults import FaultEngine, FaultPlan
 from repro.serving.request import Phase, Request
 from repro.serving.router import RoutingPolicy, make_routing_policy
@@ -215,11 +216,31 @@ class ClusterSession:
         self.recovery_log: List[str] = []  # deterministic replay trace
         self._template_home: dict = {}     # prefix anchor -> recovery
         #                                    replica (kill re-homing)
-        self.n_kills = 0
-        self.n_recoveries = 0
-        self.n_retries = 0
+        # cluster-level counters (kills/recoveries/retries/redispatch/
+        # shed) live in the obs registry; back-compat properties below
+        self.registry = MetricsRegistry()
         self.retry_priorities: List[int] = []
         self.redispatch_priorities: List[int] = []
+        # fleet-level event stream (kill/revive/drain/retry/redispatch/
+        # fault instants), present iff the replicas themselves trace —
+        # one more track merged onto the shared virtual clock
+        self.tracer = None
+        if any(s.core.tracer is not None for s in self.sessions):
+            from repro.obs.trace import Tracer
+            self.tracer = Tracer()
+
+    # ---------------------------------------------- counter back-compat
+    @property
+    def n_kills(self) -> int:
+        return int(self.registry.get("replica_kills"))
+
+    @property
+    def n_recoveries(self) -> int:
+        return int(self.registry.get("replica_recoveries"))
+
+    @property
+    def n_retries(self) -> int:
+        return int(self.registry.get("dispatch_retries"))
 
     @property
     def n_replicas(self) -> int:
@@ -346,18 +367,25 @@ class ClusterSession:
         `max_dispatch_retries` is SHED with the typed `DispatchFailed`
         reason instead of spinning forever."""
         r.n_dispatch_retries += 1
-        self.n_retries += 1
+        self.registry.inc("dispatch_retries")
         self.retry_priorities.append(r.priority)
+        if self.tracer is not None:
+            self.tracer.instant("retry", t, rid=r.rid,
+                                attempt=r.n_dispatch_retries)
         if r.n_dispatch_retries > self.max_dispatch_retries:
             r.phase = Phase.SHED
             r.shed_reason = DispatchFailed.__name__
             r.finish_time = t
             self.shed.append(r)
+            self.registry.inc("shed_total",
+                              reason=DispatchFailed.__name__)
             h = self.handles[r.rid]
             h._inner = None
             h.replica = None
             self.recovery_log.append(
                 f"t={t:.6f} shed {r.rid} (dispatch retries exhausted)")
+            if self.tracer is not None:
+                self.tracer.shed(r, t, DispatchFailed.__name__)
             return None
         delay = self.retry_backoff * (2 ** (r.n_dispatch_retries - 1))
         heapq.heappush(self._pending, (t + delay, next(self._seq), r))
@@ -401,6 +429,11 @@ class ClusterSession:
         r.cached_prompt_len = 0
         r.n_redispatched += 1
         self.redispatch_priorities.append(r.priority)
+        self.registry.inc("redispatches")
+        if self.tracer is not None:
+            self.tracer.instant("redispatch", now, rid=r.rid,
+                                n=r.n_redispatched,
+                                salvaged=r.tokens_salvaged)
 
     def kill(self, i: int, reason: str = "manual",
              at: Optional[float] = None) -> None:
@@ -422,8 +455,10 @@ class ClusterSession:
         core = s.core
         self.alive[i] = False
         self.draining[i] = False
-        self.n_kills += 1
+        self.registry.inc("replica_kills")
         self.recovery_log.append(f"t={now:.6f} kill r{i} ({reason})")
+        if self.tracer is not None:
+            self.tracer.instant("kill", now, replica=i, reason=reason)
         self._template_home = {a: j for a, j in self._template_home.items()
                                if j != i}
         parked = [e[2] for e in s._pending]
@@ -472,8 +507,10 @@ class ClusterSession:
         s.core.bm.drop_cache()
         self.alive[i] = True
         self.draining[i] = False
-        self.n_recoveries += 1
+        self.registry.inc("replica_recoveries")
         self.recovery_log.append(f"t={t:.6f} revive r{i}")
+        if self.tracer is not None:
+            self.tracer.instant("revive", t, replica=i)
 
     def drain_replica(self, i: int) -> None:
         """Gracefully retire replica i: new work routes elsewhere,
@@ -486,6 +523,8 @@ class ClusterSession:
         now = self.clock()
         self.draining[i] = True
         self.recovery_log.append(f"t={now:.6f} drain r{i}")
+        if self.tracer is not None:
+            self.tracer.instant("drain", now, replica=i)
         s = self.sessions[i]
         core = s.core
         parked = [e[2] for e in s._pending]
@@ -722,7 +761,36 @@ class ClusterSession:
         m.redispatch_priorities += list(self.redispatch_priorities)
         m.n_replica_kills += self.n_kills
         m.n_replica_recoveries += self.n_recoveries
+        m.shed_rids += [r.rid for r in self.shed]
         return m
+
+    def snapshot(self) -> dict:
+        """One flat Prometheus-shaped counter/gauge snapshot for the
+        whole fleet: each replica core's registry stamped
+        ``replica="i"``, plus the cluster's own counters."""
+        return MetricsRegistry.merge_snapshots(
+            *[s.core.registry.snapshot(replica=str(i))
+              for i, s in enumerate(self.sessions)],
+            self.registry.snapshot())
+
+    def perfetto(self) -> dict:
+        """Chrome-trace JSON over every replica's event stream plus the
+        fleet track, merged on the shared virtual clock. Requires the
+        backends to have been built with `ServeConfig.trace`."""
+        if self.tracer is None:
+            raise ValueError(
+                "tracing is off: construct the backends with "
+                "ServeConfig(trace=True) to record events")
+        from repro.obs.export import perfetto_trace
+        tracers = [s.core.tracer for s in self.sessions] + [self.tracer]
+        labels = [f"replica {i}" for i in range(self.n_replicas)] \
+            + ["cluster"]
+        return perfetto_trace(tracers, labels)
+
+    def write_trace(self, path: str) -> None:
+        import json
+        with open(path, "w") as f:
+            json.dump(self.perfetto(), f)
 
     # --------------------------------------------------------------- run
     def run(self, requests: List[Request]) -> List[Request]:

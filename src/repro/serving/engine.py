@@ -33,6 +33,7 @@ tests/test_fused.py, tests/test_session.py).
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
@@ -92,6 +93,13 @@ class LayerKVEngine(CoreDelegateMixin):
         self.core = SchedulerCore(self.ec, self.cost, self.bm, self.off,
                                   self.sched, self.L,
                                   physical_copy=self._physical_copy)
+        # one registry per engine: the executor's jit-retrace counters
+        # share the core's namespace so a single snapshot() has both
+        self.ex.registry = self.core.registry
+        if self.core.tracer is not None:
+            # real-execution traces carry wall time next to the virtual
+            # clock (the virtual clock stays primary so streams merge)
+            self.core.tracer.wall_clock = time.perf_counter
         self._chunk_bufs: Dict[str, tuple] = {}  # rid -> cached (k, v)
 
     # --------------------------------------------- shared-core delegation
@@ -394,6 +402,8 @@ class LayerKVEngine(CoreDelegateMixin):
                 self.predictor.observe(r.output_len)
                 self.decoding.remove(r)
                 self.done.append(r)
+                if self.core.tracer is not None:
+                    self.core.tracer.finish(r, self.now)
 
     # ---------------------------------------------------------------- step
     def step(self) -> bool:
@@ -426,6 +436,7 @@ class LayerKVEngine(CoreDelegateMixin):
         self.core.admit_waiting(self.now)
         if not (self.prefilling or self.decoding):
             return False
+        t0 = self.now
 
         # decode batch first: its tokens count against the iteration's
         # token budget (same semantics as the simulator)
@@ -454,11 +465,18 @@ class LayerKVEngine(CoreDelegateMixin):
 
         for r in sel:
             r.note_token(self.now)
+        if self.core.tracer is not None:
+            # chunks already ran: prefill_done holds the post-chunk count
+            self.core.tracer.chunk_iteration(
+                self.core, t0, self.now, chunk_work,
+                done={r.rid: r.prefill_done for r, _ in chunk_work})
         # requests whose final chunk just ran get their first token now
         for r, _ in chunk_work:
             if r.prefill_complete and r.phase is Phase.PREFILL:
                 if r.first_token_time < 0:  # survives replica-kill restart
                     r.first_token_time = self.now
+                    if self.core.tracer is not None:
+                        self.core.tracer.first_token(r, self.now)
                 r.tokens_out = 1
                 r.note_token(self.now)
                 r.phase = Phase.DECODE

@@ -33,6 +33,7 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models import build_model, layers
 from repro.models.model import _mask_pad_logits
+from repro.obs.registry import MetricsRegistry
 
 log = logging.getLogger(__name__)
 
@@ -109,16 +110,25 @@ class PagedExecutor:
             static_argnames=())
         # retrace accounting: every novel (entry point, shape bucket)
         # signature is one XLA compile mid-serving — the bucketing above
-        # exists to keep these counters flat in steady state
-        self.jit_retraces = collections.Counter()
+        # exists to keep these counters flat in steady state. Counts
+        # live in the obs registry; the owning engine swaps in the
+        # core's registry so one snapshot() carries both.
+        self.registry = MetricsRegistry()
         self._jit_sigs: set = set()
+
+    @property
+    def jit_retraces(self) -> collections.Counter:
+        """Retrace counts per entry point (registry-backed Counter —
+        the historical attribute shape)."""
+        return self.registry.counter_view("jit_retraces", "fn")
 
     def _note_trace(self, fn: str, sig: tuple) -> None:
         if (fn, sig) not in self._jit_sigs:
             self._jit_sigs.add((fn, sig))
-            self.jit_retraces[fn] += 1
+            self.registry.inc("jit_retraces", fn=fn)
             log.info("jit retrace #%d for %s%s",
-                     self.jit_retraces[fn], fn, sig)
+                     int(self.registry.get("jit_retraces", fn=fn)),
+                     fn, sig)
 
     # -------------------------------------------------------------- prefill
     def prefill(self, prompt: List[int], pad_to: int):

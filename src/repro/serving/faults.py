@@ -214,6 +214,9 @@ class FaultEngine:
         if i >= cluster.n_replicas:
             return  # plan written for a bigger cluster; ignore
         self.trace.append(ev.describe())
+        if cluster.tracer is not None:
+            cluster.tracer.instant("fault", ev.t, kind=ev.kind,
+                                   replica=i)
         if ev.kind == "crash":
             if cluster.alive[i]:
                 cluster.kill(i, reason="fault", at=ev.t)

@@ -41,11 +41,13 @@ from repro.core import (
     SLOScheduler, interleave_offload_layers,
 )
 from repro.core.units import Blocks, Seconds, Tokens
+from repro.obs.registry import MetricsRegistry
 from repro.serving.costmodel import CostModel
 from repro.serving.request import Phase, Request
 
 if TYPE_CHECKING:  # pragma: no cover — import cycle (sanitizer -> here)
     from repro.core.sanitizer import KVSanitizer
+    from repro.obs.trace import Tracer
 
 
 # Which SchedulerCore queue a request in each Phase sits in. This registry
@@ -129,6 +131,16 @@ class ServeConfig:
     #                                 (unit: fraction of the request's own
     #                                 TTFT SLO) a blocked request may age
     #                                 before shed_overload rejects it
+    trace: bool = False             # end-to-end tracing: per-request
+    #                                 lifecycle spans, per-pass scheduler
+    #                                 decision records, and exact TTFT
+    #                                 attribution (repro.obs). Off (the
+    #                                 default) is bit-identical and never
+    #                                 even imports the tracer module —
+    #                                 same identity discipline as
+    #                                 `sanitize`/`preemption`. Export via
+    #                                 repro.obs.export / `launch/serve.py
+    #                                 --trace=PATH`.
     admission_age_frac: float = 0.5  # aging bound, unit: fraction of the
     #                                 request's own TTFT SLO.
     #                                 prefix_aware: a HIT is ordered by a
@@ -435,8 +447,11 @@ class SchedulerCore:
         self.cancelled: List[Request] = []
         self.shed: List[Request] = []         # rejected under overload
         #                                       (graceful degradation)
-        self.n_preempted = 0                  # lossless preemption events
-        self.n_resumed = 0
+        # unified counter/gauge registry (repro.obs): preemption/resume/
+        # shed/cancel counts live here (back-compat properties below);
+        # the owning backend and cluster fold in their own counters so
+        # one snapshot() returns everything
+        self.registry = MetricsRegistry()
         # host-pool blocks made unusable by an active host_exhaust fault
         # (serving/faults.py). 0 unless a FaultPlan is installed on the
         # owning cluster, and every read is inert at 0 — fault-free runs
@@ -457,6 +472,23 @@ class SchedulerCore:
         if sc.sanitize or os.environ.get("REPRO_SANITIZE"):
             from repro.core.sanitizer import KVSanitizer
             self.sanitizer = KVSanitizer(bm, off, cost)
+        # opt-in tracer, installed exactly like the sanitizer: the
+        # module is imported ONLY here, so trace=False runs never load
+        # it and every hot-path emission is one `is not None` test
+        self.tracer: Optional["Tracer"] = None
+        if sc.trace:
+            from repro.obs.trace import Tracer
+            self.tracer = Tracer()
+
+    # ---------------------------------------------- counter back-compat
+    @property
+    def n_preempted(self) -> int:
+        """Lossless preemption events (registry-backed)."""
+        return int(self.registry.get("preemptions", kind="pause"))
+
+    @property
+    def n_resumed(self) -> int:
+        return int(self.registry.get("resumes"))
 
     # ------------------------------------------------------------- queries
     def in_flight(self) -> int:
@@ -730,7 +762,9 @@ class SchedulerCore:
         r.phase = Phase.PAUSED
         r.n_preempted += 1
         self.paused.append(r)
-        self.n_preempted += 1
+        self.registry.inc("preemptions", kind="pause")
+        if self.tracer is not None:
+            self.tracer.preempt(r, now, mode="pause")
         return True
 
     def _try_resume(self, r: Request, now: Seconds) -> bool:
@@ -763,7 +797,9 @@ class SchedulerCore:
         else:
             r.phase = Phase.PREFILL
             self.prefilling.append(r)
-        self.n_resumed += 1
+        self.registry.inc("resumes")
+        if self.tracer is not None:
+            self.tracer.resume(r, now)
         return True
 
     def _preempt_to_fit(self, r: Request, now: Seconds) -> bool:
@@ -857,29 +893,37 @@ class SchedulerCore:
             [r for r in order if id(r) in waiting_set], now)
         admitted: List[Request] = []
         deferred = immediate is None and not self.sc.chunked
+        # TTFT attribution: which gate stopped this pass (head-of-line:
+        # every request still waiting afterwards waited on it)
+        stop_gate: Optional[str] = None
         for r in order:
             in_flight = self.in_flight() + (len(admitted) if deferred
                                             else 0)
             if in_flight >= self.sc.max_batch_size:
+                stop_gate = "gate:max_batch_size"
                 break
             if id(r) not in waiting_set:
                 self._try_resume(r, now)
                 continue
             if budget_n <= 0:
+                stop_gate = "gate:alg1_budget"
                 break
             if token_budget is not None and admitted \
                     and r.prompt_len > token_budget:
+                stop_gate = "gate:token_budget"
                 break
             if self.bm.num_free(DEVICE) < self.device_need(r):
                 if not (self.sc.preemption
                         and self._preempt_to_fit(r, now)):
                     if self._maybe_shed(r, now):
                         continue
+                    stop_gate = "gate:device_blocks"
                     break
             if self.sc.chunked:
                 if self.alloc_prefill(r) is None:
                     if self._maybe_shed(r, now):
                         continue
+                    stop_gate = "gate:host_reserve"
                     break
                 self.waiting.remove(r)
                 r.phase = Phase.PREFILL
@@ -897,17 +941,23 @@ class SchedulerCore:
                     self.waiting.appendleft(r)
                     if self._maybe_shed(r, now):
                         continue
+                    stop_gate = "gate:host_reserve"
                     break
             else:
                 if self.alloc_prefill(r) is None:
                     if self._maybe_shed(r, now):
                         continue
+                    stop_gate = "gate:host_reserve"
                     break
                 self.waiting.remove(r)
             admitted.append(r)
             budget_n -= 1
             if token_budget is not None:
                 token_budget -= r.prompt_len
+        tracer = self.tracer
+        if tracer is not None:
+            tracer.sched_pass(self, now, admitted, stop_gate,
+                              immediate_mode=immediate is not None)
         return admitted
 
     # ------------------------------------------------------- chunk assembly
@@ -984,6 +1034,9 @@ class SchedulerCore:
         r.phase = Phase.CANCELLED
         r.finish_time = now
         self.cancelled.append(r)
+        self.registry.inc("cancelled_total")
+        if self.tracer is not None:
+            self.tracer.cancel(r, now)
         return True
 
     # ---------------------------------------------- graceful degradation
@@ -1011,6 +1064,9 @@ class SchedulerCore:
         r.prefill_start = -1.0
         r.finish_time = now
         self.shed.append(r)
+        self.registry.inc("shed_total", reason=reason)
+        if self.tracer is not None:
+            self.tracer.shed(r, now, reason)
 
     def _maybe_shed(self, r: Request, now: Seconds) -> bool:
         """Shed-by-deadline-class at the admission gate: with

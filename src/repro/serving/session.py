@@ -269,3 +269,14 @@ class ServingSession:
                 raise self.core.wedged_error()
         self.backend.finish()
         return list(self.core.done)
+
+    # ------------------------------------------------------------- export
+    def write_trace(self, path: str) -> None:
+        """Export this session's event stream as Chrome-trace JSON
+        (load at ui.perfetto.dev). Requires `ServeConfig.trace`."""
+        if self.core.tracer is None:
+            raise ValueError(
+                "tracing is off: construct the backend with "
+                "ServeConfig(trace=True) to record events")
+        from repro.obs.export import write_trace
+        write_trace([self.core.tracer], path)

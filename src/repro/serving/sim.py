@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import re
 import statistics
 from typing import List, Optional
 
@@ -128,6 +129,11 @@ class SimMetrics:
         default_factory=list)
     n_replica_kills: int = 0
     n_replica_recoveries: int = 0
+    # request ids ALIGNED with ttft/priorities/... — carry the tenant
+    # encoding (rid "t{k}r{i}") so class_report(by="tenant") can re-key
+    # the same raw series without a second bookkeeping path
+    rids: List[str] = dataclasses.field(default_factory=list)
+    shed_rids: List[str] = dataclasses.field(default_factory=list)
 
     @classmethod
     def merge(cls, parts: List["SimMetrics"]) -> "SimMetrics":
@@ -172,6 +178,8 @@ class SimMetrics:
             n_replica_kills=sum(m.n_replica_kills for m in parts),
             n_replica_recoveries=sum(
                 m.n_replica_recoveries for m in parts),
+            rids=[r for m in parts for r in m.rids],
+            shed_rids=[r for m in parts for r in m.shed_rids],
         )
 
     @property
@@ -212,26 +220,50 @@ class SimMetrics:
                                      strict=True) if s >= 0)
         return good / self.makespan
 
-    def class_report(self) -> dict:
-        """Per-priority-class metrics, computed by slicing the ALIGNED
-        raw series and running the same pooled nearest-rank path as the
+    @staticmethod
+    def _tenant_of(rid: str) -> int:
+        """Tenant id encoded in a multi-tenant rid (``t{k}r{i}``);
+        -1 for rids outside that convention (single-tenant runs)."""
+        m = re.match(r"^t(\d+)r\d+$", rid)
+        return int(m.group(1)) if m else -1
+
+    def class_report(self, by: str = "priority") -> dict:
+        """Per-class metrics, computed by slicing the ALIGNED raw series
+        and running the same pooled nearest-rank path as the
         cluster-wide percentiles (never recomputed from pre-truncated
-        per-replica statistics). Keys are priority values; each entry
-        reports n / mean+p99 TTFT / p99 TBT / deadline-violation rate /
-        goodput share (tokens per second from deadline-met requests) /
-        fault-tolerance counters (requests shed under overload, dispatch
-        retries, kill-restart re-dispatches — which classes degradation
-        actually lands on)."""
+        per-replica statistics). `by="priority"` (default) keys on the
+        priority class; `by="tenant"` keys on the tenant id parsed from
+        rids shaped ``t{k}r{i}`` (everything else pools under -1) —
+        per-tenant tail latency and goodput from ONE run's series. Each
+        entry reports n / mean+p99 TTFT / p99 TBT / deadline-violation
+        rate / goodput share (tokens per second from deadline-met
+        requests) / requests shed under overload; priority entries add
+        the remaining fault-tolerance counters (dispatch retries,
+        kill-restart re-dispatches — which classes degradation actually
+        lands on), which are tracked per priority only."""
+        if by == "tenant":
+            keys = [self._tenant_of(r) for r in self.rids]
+            shed_keys = [self._tenant_of(r) for r in self.shed_rids]
+            retry_keys: List[int] = []
+            redispatch_keys: List[int] = []
+        elif by == "priority":
+            keys = self.priorities
+            shed_keys = self.shed_priorities
+            retry_keys = self.retry_priorities
+            redispatch_keys = self.redispatch_priorities
+        else:
+            raise ValueError(
+                f"class_report: unknown axis {by!r} "
+                "(expected 'priority' or 'tenant')")
         out: dict = {}
-        classes = set(self.priorities) | set(self.shed_priorities) \
-            | set(self.retry_priorities) | set(self.redispatch_priorities)
+        classes = set(keys) | set(shed_keys) | set(retry_keys) \
+            | set(redispatch_keys)
         for cls_id in sorted(classes):
-            idx = [i for i, p in enumerate(self.priorities)
-                   if p == cls_id]
+            idx = [i for i, p in enumerate(keys) if p == cls_id]
             ttft = [self.ttft[i] for i in idx]
             slack = [self.deadline_slack[i] for i in idx]
             toks = [self.req_tokens[i] for i in idx]
-            out[cls_id] = {
+            entry = {
                 "n": len(idx),
                 "mean_ttft": statistics.mean(ttft) if ttft else 0.0,
                 "p99_ttft": pooled_percentile(ttft, 0.99),
@@ -242,13 +274,14 @@ class SimMetrics:
                 "goodput": (sum(n for n, s in zip(toks, slack, strict=True)
                                 if s >= 0) / self.makespan)
                     if self.makespan > 0 else 0.0,
-                "n_shed": sum(1 for p in self.shed_priorities
-                              if p == cls_id),
-                "n_retries": sum(1 for p in self.retry_priorities
-                                 if p == cls_id),
-                "n_redispatched": sum(
-                    1 for p in self.redispatch_priorities if p == cls_id),
+                "n_shed": sum(1 for p in shed_keys if p == cls_id),
             }
+            if by == "priority":
+                entry["n_retries"] = sum(
+                    1 for p in retry_keys if p == cls_id)
+                entry["n_redispatched"] = sum(
+                    1 for p in redispatch_keys if p == cls_id)
+            out[cls_id] = entry
         return out
 
     @property
@@ -342,9 +375,13 @@ class ServingSimulator(CoreDelegateMixin):
         self.core = SchedulerCore(
             self.sim, self.cost, self.bm, self.off, self.sched, self.L,
             reserve_blocks=int(sim.forecast_threshold_frac * ndb))
-        self.preemptions = 0
         self._chunk_iters = 0
         self._max_iter_prefill_tokens = 0
+
+    @property
+    def preemptions(self) -> int:
+        """vLLM recompute-preemptions (core registry-backed)."""
+        return int(self.core.registry.get("preemptions", kind="recompute"))
 
     # --------------------------------------------- shared-core delegation
     # queues/host_layers/clock()/advance_to() come from CoreDelegateMixin
@@ -431,7 +468,7 @@ class ServingSimulator(CoreDelegateMixin):
         except PoolExhausted:
             return False
 
-    def _preempt(self, r: Request):
+    def _preempt(self, r: Request, t: Seconds):
         """vLLM recompute-preemption: drop all KV, requeue at the FRONT."""
         self.bm.free_request(r.rid)
         self.host_layers.pop(r.rid, None)
@@ -441,8 +478,11 @@ class ServingSimulator(CoreDelegateMixin):
         r.prefill_done = 0
         r.n_chunks = 0
         r.cached_prompt_len = 0
+        r.n_preempted += 1
         self.waiting.appendleft(r)
-        self.preemptions += 1
+        self.core.registry.inc("preemptions", kind="recompute")
+        if self.core.tracer is not None:
+            self.core.tracer.preempt(r, t, mode="recompute")
 
     def _select_decode_batch(self, now: Seconds,
                              decoding: List[Request]) -> tuple:
@@ -546,7 +586,7 @@ class ServingSimulator(CoreDelegateMixin):
                 self._evict_for_space(t, self.decoding)
                 ok = self._extend_for_token(r)
             if not ok:
-                self._preempt(r)
+                self._preempt(r, t)
                 self.decoding.remove(r)
                 continue
             r.tokens_out += 1
@@ -559,6 +599,8 @@ class ServingSimulator(CoreDelegateMixin):
                 self.predictor.observe(r.output_len)
                 self.done.append(r)
                 finished.append(r)
+                if self.core.tracer is not None:
+                    self.core.tracer.finish(r, t)
         for r in finished:
             self.decoding.remove(r)
 
@@ -593,6 +635,8 @@ class ServingSimulator(CoreDelegateMixin):
             n_shed=len(self.core.shed),
             shed_priorities=[r.priority for r in self.core.shed],
             shed_reasons=[r.shed_reason or "" for r in self.core.shed],
+            rids=[r.rid for r in done],
+            shed_rids=[r.rid for r in self.core.shed],
         )
 
     def metrics(self) -> SimMetrics:
@@ -641,6 +685,8 @@ class ServingSimulator(CoreDelegateMixin):
                 # their first token from the dead incarnation already
                 if r.first_token_time < 0:
                     r.first_token_time = t
+                    if self.core.tracer is not None:
+                        self.core.tracer.first_token(r, t)
                 r.tokens_out = 1
                 r.note_token(t)
                 r.prefill_done = r.prompt_len
@@ -727,8 +773,12 @@ class ServingSimulator(CoreDelegateMixin):
                 for r in sel)
         dt = self.cost.mixed_step_time(t_chunk, len(sel), avg_ctx,
                                        host_bytes, fused=self.sim.fused)
+        t0 = t
         t += dt
         self.t = t
+        if self.core.tracer is not None:
+            # before the bookkeeping below mutates prefill_done
+            self.core.tracer.chunk_iteration(self.core, t0, t, chunks)
 
         if chunks:
             self._chunk_iters += 1
@@ -746,6 +796,8 @@ class ServingSimulator(CoreDelegateMixin):
             if r.prefill_complete:
                 if r.first_token_time < 0:  # survives replica-kill restart
                     r.first_token_time = t
+                    if self.core.tracer is not None:
+                        self.core.tracer.first_token(r, t)
                 r.tokens_out = 1
                 r.note_token(t)
                 r.phase = Phase.DECODE

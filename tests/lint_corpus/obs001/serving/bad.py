@@ -1,0 +1,21 @@
+"""OBS001 corpus (known-bad): tracer emissions reachable with tracing
+off — a bare `self.tracer` call, a call through a chained
+`core.tracer`, and a local alias called without testing it. Never
+executed — parsed only."""
+
+
+class Core:
+    def __init__(self, sc):
+        self.tracer = None
+
+    def finish(self, r, now):
+        self.tracer.finish(r, now)  # BAD: crashes every trace=False run
+        return r
+
+    def admit(self, core, admitted, now):
+        core.tracer.sched_pass(core, now, admitted, None)  # BAD
+        return admitted
+
+    def pump(self, r, now):
+        tracer = self.tracer
+        tracer.cancel(r, now)  # BAD: alias never tested

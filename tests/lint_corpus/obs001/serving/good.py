@@ -1,0 +1,33 @@
+"""OBS001 corpus (known-good): the same emission shapes with the
+zero-overhead contract honoured — an `is not None` branch guard, a
+guarded chained access, an alias tested before the call, and an
+`and`-chain guard. Value reads without a call are exempt. Never
+executed — parsed only."""
+
+
+class Core:
+    def __init__(self, sc):
+        self.tracer = None
+
+    def finish(self, r, now):
+        if self.tracer is not None:
+            self.tracer.finish(r, now)
+        return r
+
+    def admit(self, core, admitted, now):
+        if core.tracer is not None:
+            core.tracer.sched_pass(core, now, admitted, None)
+        return admitted
+
+    def pump(self, r, now):
+        tracer = self.tracer
+        if tracer is not None:
+            tracer.cancel(r, now)
+
+    def emitted(self, r, now):
+        return self.tracer is not None and self.tracer.events
+
+    def export(self, tracers):
+        # a tracer handed to an exporter is a value read, not an
+        # emission — the exporter skips None entries itself
+        return [t for t in [self.tracer] + tracers if t is not None]

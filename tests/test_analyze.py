@@ -40,6 +40,8 @@ CASES = [
      CORPUS / "phase001" / "good", 2, (14, 24)),
     ("FAULT001", CORPUS / "fault001" / "bad.py",
      CORPUS / "fault001" / "good.py", 3, (13, 17, 21)),
+    ("OBS001", CORPUS / "obs001" / "serving" / "bad.py",
+     CORPUS / "obs001" / "serving" / "good.py", 3, (12, 16, 21)),
     ("UNIT001", CORPUS / "unit001" / "bad" / "accounting.py",
      CORPUS / "unit001" / "good" / "accounting.py", 3, (14, 18, 22)),
     ("MC001", CORPUS / "mc001" / "bad" / "scheduler.py",
@@ -77,13 +79,13 @@ def test_head_is_clean():
     assert rc == 0, out
 
 
-def test_list_rules_names_all_eight():
+def test_list_rules_names_all_nine():
     proc = subprocess.run(
         [sys.executable, str(RUN), "--list-rules"],
         capture_output=True, text=True, cwd=REPO)
     listed = {ln.split()[0] for ln in proc.stdout.splitlines()}
     assert {"PL001", "JIT001", "SEAM001", "CFG001", "PHASE001",
-            "FAULT001", "UNIT001", "MC001"} <= listed
+            "FAULT001", "OBS001", "UNIT001", "MC001"} <= listed
 
 
 def test_model_checker_is_deterministic():

@@ -51,7 +51,7 @@ def test_config_drift_guard():
         policy="layerkv", slo_aware=True, chunked=True, prefix_cache=True,
         fused=True, preemption=True, admission="prefix_aware",
         sanitize=True, shed_overload=True, shed_grace_frac=0.5,
-        admission_age_frac=0.7,
+        admission_age_frac=0.7, trace=True,
         num_device_blocks=2048, num_host_blocks=4096, block_size=16,
         max_batch_size=32, max_prefill_tokens=256, chunk_floor=8,
         max_tokens_per_request=2048, proactive=True,

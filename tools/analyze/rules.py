@@ -12,6 +12,8 @@ did).  One line per rule; the long story lives in docs/ARCHITECTURE.md
   PHASE001 queue dispatches over request phase handle every live queue
   FAULT001 fault injection is default-off: fault params default to
            None and every fault-engine call is guarded
+  OBS001   tracing is default-off: every tracer emission in the
+           serving hot path is guarded (trace=False never pays)
   UNIT001  no cross-dimension (Blocks/Tokens/Bytes/LayerIdx/Seconds)
            arithmetic, comparison or call without a sanctioned
            units.py converter (dataflow engine: units.py here)
@@ -721,6 +723,89 @@ class FAULT001FaultHooksNotDefaultOff(Rule):
         return out
 
 
+# ---------------------------------------------------------------- OBS001
+class OBS001UnguardedTracerEmission(Rule):
+    """Tracing must be ZERO-overhead when off: `SchedulerCore.tracer`
+    is None unless `ServeConfig.trace` installed one, and tests pin
+    trace=False runs bit-identical to untraced ones.  An emission call
+    that isn't guarded crashes every untraced run (AttributeError on
+    None) or — worse — forces an always-on tracer.  So inside the hot
+    stack (src/repro/core, src/repro/serving) every CALL through a
+    `tracer` attribute/name (`self.tracer.span(...)`,
+    `core.tracer.finish(...)`) must sit under a guard that tests the
+    tracer — an `if`/`while`/ternary whose condition mentions it, or an
+    `and` chain where a preceding operand does — exactly FAULT001's
+    contract for fault hooks.  Plain value reads (`core.tracer.events`
+    passed to an exporter under a config test) are exempt."""
+
+    rule_id = "OBS001"
+    description = "unguarded tracer emission in the serving hot path"
+
+    def interested(self, path: Path) -> bool:
+        parts = path.parts
+        return path.suffix == ".py" \
+            and ("serving" in parts or "core" in parts)
+
+    @staticmethod
+    def _mentions_tracer(node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute) and sub.attr == "tracer":
+                return True
+            if isinstance(sub, ast.Name) and sub.id == "tracer":
+                return True
+        return False
+
+    @staticmethod
+    def _is_tracer_call(call: ast.Call) -> bool:
+        node = call.func
+        while isinstance(node, ast.Attribute):
+            if node.attr == "tracer":
+                return True
+            node = node.value
+        return isinstance(node, ast.Name) and node.id == "tracer"
+
+    def check_file(self, ctx: FileContext) -> List[Violation]:
+        parents: Dict[int, ast.AST] = {}
+        for node in ast.walk(ctx.tree):
+            for child in ast.iter_child_nodes(node):
+                parents[id(child)] = node
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and self._is_tracer_call(node)):
+                continue
+            guarded = False
+            cur: ast.AST = node
+            while id(cur) in parents:
+                parent = parents[id(cur)]
+                if isinstance(parent, (ast.If, ast.While, ast.IfExp)) \
+                        and cur is not parent.test \
+                        and self._mentions_tracer(parent.test):
+                    guarded = True
+                    break
+                if isinstance(parent, ast.BoolOp) \
+                        and isinstance(parent.op, ast.And):
+                    before = parent.values[:parent.values.index(cur)] \
+                        if cur in parent.values else parent.values
+                    if any(self._mentions_tracer(v) for v in before
+                           if v is not cur):
+                        guarded = True
+                        break
+                if isinstance(parent, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef,
+                                       ast.ClassDef)):
+                    # guards don't cross def/class boundaries
+                    break
+                cur = parent
+            if not guarded:
+                out.append(self.violation(
+                    ctx, node.lineno,
+                    "unguarded call through '.tracer': test it first "
+                    "(`if self.tracer is not None:`) so trace=False "
+                    "runs never reach the emission"))
+        return out
+
+
 # ----------------------------------------------------------------- UNIT001
 class UNIT001CrossDimensionMixing(Rule):
     """Unit-dimension taint analysis over the `core/units.py`
@@ -771,6 +856,7 @@ ALL_RULES: List[Rule] = [
     CFG001DeadOrMisplacedConfig(),
     PHASE001PartialPhaseDispatch(),
     FAULT001FaultHooksNotDefaultOff(),
+    OBS001UnguardedTracerEmission(),
     UNIT001CrossDimensionMixing(),
     MC001SchedulerStateMachine(),
 ]

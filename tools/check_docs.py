@@ -14,7 +14,11 @@ even installed. Checks:
      src/repro/serving/router.py) is mentioned;
   3. every repro-lint rule id (class-level `rule_id = "..."` in
      tools/analyze/rules.py) is documented;
-  4. every relative markdown link in the checked docs points at a file
+  4. every trace event type and TTFT-attribution cause (the
+     `EVENT_TYPES` / `ATTRIBUTION_CAUSES` tuple literals in
+     src/repro/obs/trace.py) is documented — a tracer that emits
+     vocabulary the docs don't explain is unreadable;
+  5. every relative markdown link in the checked docs points at a file
      that exists (no rotting links).
 
 Exit code 0 = consistent; nonzero prints what is missing.
@@ -33,6 +37,7 @@ DOCS = [ROOT / "README.md", ROOT / "docs" / "ARCHITECTURE.md"]
 SCHEDULER = ROOT / "src" / "repro" / "serving" / "scheduler.py"
 ROUTER = ROOT / "src" / "repro" / "serving" / "router.py"
 LINT_RULES = ROOT / "tools" / "analyze" / "rules.py"
+TRACE = ROOT / "src" / "repro" / "obs" / "trace.py"
 
 
 def serveconfig_fields(path: Path) -> list:
@@ -87,6 +92,21 @@ def lint_rule_ids(path: Path) -> list:
     return ids
 
 
+def tuple_literal(path: Path, name: str) -> list:
+    """String members of a module-level `NAME = ("...", ...)` tuple."""
+    tree = ast.parse(path.read_text())
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == name
+                and isinstance(node.value, ast.Tuple)):
+            return [el.value for el in node.value.elts
+                    if isinstance(el, ast.Constant)
+                    and isinstance(el.value, str)]
+    raise SystemExit(f"tuple literal {name} not found in {path}")
+
+
 # matches [text](target) but not images/anchors/URLs
 _LINK = re.compile(r"(?<!!)\[[^\]]+\]\(([^)#][^)]*)\)")
 
@@ -116,6 +136,9 @@ def main() -> int:
         "admission policy": policy_names(SCHEDULER),
         "routing policy": policy_names(ROUTER),
         "repro-lint rule": lint_rule_ids(LINT_RULES),
+        "trace event type": tuple_literal(TRACE, "EVENT_TYPES"),
+        "TTFT attribution cause": tuple_literal(TRACE,
+                                                "ATTRIBUTION_CAUSES"),
     }
     errors = []
     for kind, names in required.items():
@@ -141,7 +164,9 @@ def main() -> int:
     print(f"docs check OK: {n_fields} ServeConfig fields, "
           f"{len(required['admission policy'])} admission + "
           f"{len(required['routing policy'])} routing policies, "
-          f"{len(required['repro-lint rule'])} lint rules documented, "
+          f"{len(required['repro-lint rule'])} lint rules, "
+          f"{len(required['trace event type'])} trace event types + "
+          f"{len(required['TTFT attribution cause'])} causes documented, "
           f"links resolve.")
     return 0
 
